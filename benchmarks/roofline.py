@@ -1,0 +1,87 @@
+"""Roofline table builder: reads the dry-run JSONs (results/) and emits the
+§Roofline markdown table — three terms per (arch × shape × mesh), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, and the headline
+roofline fraction (useful-FLOPs time / dominant-term time).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load(results_dir: str = "results") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def enrich(r: dict) -> dict:
+    chips = r["chips"]
+    t_useful = r["model_flops_global"] / (chips * PEAK_FLOPS)
+    t_dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    r = dict(r)
+    r["t_useful"] = t_useful
+    r["t_dominant"] = t_dom
+    r["roofline_fraction"] = t_useful / t_dom if t_dom else 0.0
+    return r
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [enrich(r) for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | t_compute | t_memory(ub) | t_mem_io(lb) | "
+        "t_collective | bottleneck | useful/HLO | roofline frac | HBM GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        hbm = (r["memory"]["temp_bytes"] + r["memory"]["argument_bytes"]
+               - r["memory"]["alias_bytes"]) / 2**30
+        io = fmt_s(r["t_memory_io"]) if "t_memory_io" in r else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute'])} | "
+            f"{fmt_s(r['t_memory'])} | {io} | {fmt_s(r['t_collective'])} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {hbm:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    recs = load()
+    print(f"# Roofline (from {len(recs)} dry-run records)")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(table(recs, mesh))
+    worst = sorted((enrich(r) for r in recs if r["mesh"] == "16x16"),
+                   key=lambda r: r["roofline_fraction"])
+    print("\n## worst roofline fractions (hillclimb candidates)")
+    for r in worst[:6]:
+        print(f"  {r['arch']} x {r['shape']}: frac={r['roofline_fraction']:.4f}"
+              f" bottleneck={r['bottleneck']}")
+    coll = sorted((enrich(r) for r in recs if r["mesh"] == "16x16"),
+                  key=lambda r: -(r["t_collective"] / max(r["t_dominant"],
+                                                          1e-30)))
+    print("\n## most collective-bound")
+    for r in coll[:6]:
+        print(f"  {r['arch']} x {r['shape']}: t_coll={fmt_s(r['t_collective'])}"
+              f" vs dom={fmt_s(r['t_dominant'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, SHAPES_FOR, build_cell  # noqa: F401

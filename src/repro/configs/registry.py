@@ -1,0 +1,521 @@
+"""Arch × shape registry: every assigned (architecture, input-shape) cell as
+an abstract, shardable compute step for the dry-run, and a concrete builder
+for smoke tests / examples.
+
+`build_cell(arch, shape, mesh, multi_pod)` returns a Cell holding:
+  fn            — the (un-jitted) step function,
+  inputs        — pytrees of ShapeDtypeStruct WITH NamedShardings attached,
+  donate        — argument indices safe to donate (params/opt or caches),
+  model_flops   — 'useful' FLOPs (6·N_active·D etc.) for §Roofline ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+ARCHS: dict[str, str] = {
+    # arch id -> config module
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "schnet": "repro.configs.schnet",
+    "graphcast": "repro.configs.graphcast",
+    "gat-cora": "repro.configs.gat_cora",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "deepfm": "repro.configs.deepfm",
+    "mapsq": "repro.configs.mapsq_lubm",
+}
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(kind="minibatch", n_nodes=232_965,
+                         n_edges=114_615_892, d_feat=602, n_classes=41,
+                         batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": dict(kind="full", n_nodes=2_449_029, n_edges=61_859_140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(kind="batched", n_nodes=30, n_edges=64, batch=128,
+                     d_feat=16, n_classes=1),
+}
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_448),
+    # n_candidates padded from 1,000,000 to the next multiple of 512 chips
+}
+SPARQL_SHAPES = {
+    "join_1m": dict(kind="join", rows=1 << 20),
+    "join_16m": dict(kind="join", rows=1 << 24),
+}
+
+
+def SHAPES_FOR(arch: str) -> dict[str, dict]:
+    fam = importlib.import_module(ARCHS[arch]).FAMILY
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES,
+            "sparql": SPARQL_SHAPES}[fam]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    inputs: tuple
+    donate: tuple[int, ...] = ()
+    model_flops: float = 0.0
+    note: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes_tree,
+        specs_tree,
+    )
+
+
+def _norm_spec(spec: P, ndim: int) -> list:
+    dims = list(spec)
+    return dims + [None] * (ndim - len(dims))
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], data_size: int) -> P:
+    """Add a ZeRO-1 "data" sharding on the first free, divisible dim."""
+    dims = _norm_spec(spec, len(shape))
+    if "data" in dims or ("data",) in dims:
+        return P(*dims)
+    for i, (d, s) in enumerate(zip(dims, shape)):
+        if d is None and s % data_size == 0 and s >= data_size:
+            dims[i] = "data"
+            break
+    return P(*dims)
+
+
+def _opt_specs(param_specs_tree, param_shapes_tree, data_size: int):
+    mv = jax.tree.map(
+        lambda sp, sh: zero1_spec(sp, sh.shape, data_size),
+        param_specs_tree, param_shapes_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def _dp(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _all_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def _round_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _mesh_sizes(mesh) -> tuple[int, int, int]:
+    """(n_devices, data_size(incl pod), model_size)."""
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return data * model, data, model
+
+
+DEFAULT_OPT = AdamWConfig()
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _build_lm(arch: str, cfg, shape_name: str, sh: dict, mesh, multi_pod):
+    from repro.models import transformer as T
+
+    n_dev, data, model = _mesh_sizes(mesh)
+    dp = _dp(multi_pod)
+    pshapes = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, ep=model)
+    )
+    pspecs = T.param_specs(cfg, multi_pod, model)
+    params = _tree_sds(pshapes, pspecs, mesh)
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    mflops = T.model_flops(cfg, kind, b, s, ep=model)
+
+    if kind == "train":
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        ospecs = _opt_specs(pspecs, pshapes, mesh.shape.get("data", 1))
+        opt = _tree_sds(oshapes, ospecs, mesh)
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, mesh, P(dp, None)),
+            "labels": _sds((b, s), jnp.int32, mesh, P(dp, None)),
+        }
+        fn = T.make_train_step(cfg, mesh, DEFAULT_OPT, multi_pod)
+        return Cell(arch, shape_name, kind, fn, (params, opt, batch),
+                    donate=(0, 1), model_flops=mflops)
+
+    if kind == "prefill":
+        tokens = _sds((b, s), jnp.int32, mesh, P(dp, None))
+        fn = T.make_prefill_step(cfg, mesh, multi_pod)
+        return Cell(arch, shape_name, kind, fn, (params, tokens),
+                    model_flops=mflops)
+
+    # decode: one new token against a seq-long KV cache
+    cshape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head)
+    if b == 1:
+        cspec = P(None, None, _all_axes(multi_pod), None, None)
+    else:
+        cspec = P(None, dp, "model", None, None)
+    kc = _sds(cshape, cfg.dtype, mesh, cspec)
+    vc = _sds(cshape, cfg.dtype, mesh, cspec)
+    pos = _sds((), jnp.int32, mesh, P())
+    tokens = _sds((b,), jnp.int32, mesh, P(dp) if b > 1 else P())
+    fn = T.make_serve_step(cfg, mesh, multi_pod)
+    return Cell(arch, shape_name, kind, fn, (params, kc, vc, pos, tokens),
+                donate=(1, 2), model_flops=mflops)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_dims(arch: str, sh: dict, n_dev: int) -> dict:
+    """Device-visible graph dims for a (gnn arch, shape) cell."""
+    kind = sh["kind"]
+    if kind == "minibatch":
+        from repro.models.gnn.sampler import block_capacity
+
+        n, e = block_capacity(sh["batch_nodes"], list(sh["fanout"]))
+    elif kind == "batched":
+        n, e = sh["n_nodes"] * sh["batch"], sh["n_edges"] * sh["batch"]
+    else:
+        n, e = sh["n_nodes"], sh["n_edges"]
+    e = _round_to(e, 512)  # edge dim shards over up to 512 chips
+    n_graphs = sh.get("batch", 1)
+    # §Perf iterations 1-3 (graphcast × ogb_products): replicated node
+    # tensors cost 216 GiB/chip at 2.45M nodes — infeasible. Large graphs
+    # shard the node dim over EVERY mesh axis (padded to 512) and run node/
+    # edge activations in bf16; XLA inserts the gather/scatter collectives.
+    # See EXPERIMENTS.md §Perf for the iteration log.
+    shard_nodes = n >= 1_000_000
+    if shard_nodes:
+        n = _round_to(n, 512)
+    d = dict(n=n, e=e, n_graphs=n_graphs, d_feat=sh["d_feat"],
+             n_classes=sh["n_classes"], shard_nodes=shard_nodes)
+    # graphcast mesh sizes derive from the shape (DESIGN.md §6)
+    d["n_mesh"] = _round_to(max(8, n // 4), 512 if shard_nodes else 1)
+    d["e_mesh"] = _round_to(max(64, d["n_mesh"] * 7), 512)
+    return d
+
+
+def _gnn_extras_specs(arch: str, dims: dict, mesh, espec, nspec):
+    f4 = jnp.float32
+    n, e = dims["n"], dims["e"]
+    mspec = nspec  # mesh-node arrays follow the node sharding policy
+    if arch == "gat-cora":
+        return {
+            "labels": _sds((n,), jnp.int32, mesh, nspec),
+            "train_mask": _sds((n,), jnp.bool_, mesh, nspec),
+        }
+    if arch == "schnet":
+        ng = dims["n_graphs"]
+        return {
+            "positions": _sds((n, 3), f4, mesh, nspec),
+            "species": _sds((n,), jnp.int32, mesh, nspec),
+            "energy": _sds((ng,), f4, mesh, P()),
+            "graph_mask": _sds((ng,), jnp.bool_, mesh, P()),
+        }
+    if arch == "meshgraphnet":
+        return {
+            "edge_feat": _sds((e, 4), f4, mesh, espec),
+            "targets": _sds((n, 3), f4, mesh, nspec),
+        }
+    if arch == "graphcast":
+        nm, em = dims["n_mesh"], dims["e_mesh"]
+        return {
+            "mesh_feat_init": _sds((nm, 1), f4, mesh, mspec),
+            "g2m_feat": _sds((e, 4), f4, mesh, espec),
+            "mesh_edge_feat": _sds((em, 4), f4, mesh, espec),
+            "mesh_src": _sds((em,), jnp.int32, mesh, espec),
+            "mesh_dst": _sds((em,), jnp.int32, mesh, espec),
+            "mesh_mask": _sds((em,), jnp.bool_, mesh, espec),
+            "m2g_feat": _sds((e, 4), f4, mesh, espec),
+            "m2g_src": _sds((e,), jnp.int32, mesh, espec),
+            "m2g_dst": _sds((e,), jnp.int32, mesh, espec),
+            "m2g_mask": _sds((e,), jnp.bool_, mesh, espec),
+            "targets": _sds((n, 227), f4, mesh, nspec),
+        }
+    raise KeyError(arch)
+
+
+def _gnn_module(arch: str):
+    from repro.models.gnn import gat, graphcast, meshgraphnet, schnet
+
+    return {"gat-cora": gat, "schnet": schnet, "meshgraphnet": meshgraphnet,
+            "graphcast": graphcast}[arch]
+
+
+def _gnn_node_feat_dim(arch: str, cfg, dims: dict) -> int:
+    if arch == "graphcast":
+        return cfg.n_vars
+    if arch == "schnet":
+        return 1  # schnet reads species/positions from extras
+    return dims["d_feat"]
+
+
+def _gnn_cfg_for_shape(arch: str, cfg, dims: dict, multi_pod: bool = False):
+    """Bind per-shape input dims into the arch config."""
+    if arch == "gat-cora":
+        cfg = dataclasses.replace(cfg, d_in=dims["d_feat"],
+                                  n_classes=dims["n_classes"])
+    if arch == "meshgraphnet":
+        cfg = dataclasses.replace(cfg, d_node_in=dims["d_feat"])
+    if dims.get("shard_nodes") and hasattr(cfg, "node_spec"):
+        # §Perf iterations 1-5: node dim sharded over every axis, blocks
+        # remat'd, activations bf16, gathers/scatters via the MapSQ shuffle,
+        # one-shot edge sets streamed (graphcast only)
+        extra = {}
+        if hasattr(cfg, "edge_stream_chunks"):
+            extra["edge_stream_chunks"] = 16
+        cfg = dataclasses.replace(cfg, node_spec=_all_axes(multi_pod),
+                                  remat=True, compute_dtype=jnp.bfloat16,
+                                  shuffle_gather=True, **extra)
+    return cfg
+
+
+def _build_gnn(arch: str, cfg, shape_name: str, sh: dict, mesh, multi_pod):
+    from repro.models.gnn.common import GraphBatch
+
+    n_dev, data, model = _mesh_sizes(mesh)
+    dims = _gnn_dims(arch, sh, n_dev)
+    cfg = _gnn_cfg_for_shape(arch, cfg, dims, multi_pod)
+    mod = _gnn_module(arch)
+    espec = P(_all_axes(multi_pod))  # edges shard over every axis
+    # small graphs: node tables replicated (psum aggregation);
+    # large graphs: node dim sharded over every axis (§Perf iterations 1-3)
+    nspec = P(_all_axes(multi_pod)) if dims["shard_nodes"] else P()
+    n, e = dims["n"], dims["e"]
+    g = GraphBatch(
+        node_feat=_sds((n, _gnn_node_feat_dim(arch, cfg, dims)), jnp.float32,
+                       mesh, nspec),
+        src=_sds((e,), jnp.int32, mesh, espec),
+        dst=_sds((e,), jnp.int32, mesh, espec),
+        node_mask=_sds((n,), jnp.bool_, mesh, nspec),
+        edge_mask=_sds((e,), jnp.bool_, mesh, espec),
+        graph_ids=_sds((n,), jnp.int32, mesh, nspec),
+        extras=_gnn_extras_specs(arch, dims, mesh, espec, nspec),
+    )
+    pshapes = jax.eval_shape(
+        lambda: mod.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = jax.tree.map(lambda _: P(), pshapes)
+    params = _tree_sds(pshapes, pspecs, mesh)
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    opt = _tree_sds(oshapes, ospecs, mesh)
+
+    opt_cfg = DEFAULT_OPT
+
+    def train_step(params, opt_state, graph):
+        from repro.optim.adamw import adamw_update
+
+        grads = jax.grad(mod.loss_fn)(params, graph, cfg)
+        new_p, new_s, m = adamw_update(opt_cfg, grads, opt_state, params)
+        return new_p, new_s, m
+
+    mflops = _gnn_model_flops(arch, cfg, dims)
+    return Cell(arch, shape_name, "train", train_step, (params, opt, g),
+                donate=(0, 1), model_flops=mflops)
+
+
+def _gnn_model_flops(arch: str, cfg, dims: dict) -> float:
+    n, e = dims["n"], dims["e"]
+    if arch == "gat-cora":
+        d_in, h, d = cfg.d_in, cfg.n_heads, cfg.d_hidden
+        fwd = 2 * n * d_in * h * d + 6 * e * h * d
+        fwd += 2 * n * (h * d) * cfg.n_classes + 6 * e * cfg.n_classes
+    elif arch == "schnet":
+        d, r = cfg.d_hidden, cfg.n_rbf
+        per = 2 * e * (r * d + d * d) + 2 * e * d + 6 * n * d * d
+        fwd = cfg.n_interactions * per + 2 * n * d * d
+    elif arch == "meshgraphnet":
+        d = cfg.d_hidden
+        per = 2 * e * (3 * d + d) * d + 2 * n * (2 * d + d) * d
+        fwd = cfg.n_layers * per + 2 * n * cfg.d_node_in * d + 2 * e * 4 * d
+    else:  # graphcast
+        d = cfg.d_hidden
+        nm, em = dims["n_mesh"], dims["e_mesh"]
+        blk = lambda ee, nn: 2 * ee * (3 * d + d) * d + 2 * nn * (2 * d + d) * d
+        fwd = (2 * n * cfg.n_vars * d + blk(e, nm)
+               + cfg.n_layers * blk(em, nm) + blk(e, n)
+               + 2 * n * d * cfg.n_vars)
+    return 3.0 * fwd  # train = fwd + bwd(2x)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _build_recsys(arch: str, cfg, shape_name: str, sh: dict, mesh, multi_pod):
+    from repro.models.recsys import deepfm as D
+
+    n_dev, data, model = _mesh_sizes(mesh)
+    dp = _dp(multi_pod)
+    pshapes = jax.eval_shape(
+        lambda: D.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = D.param_specs(cfg)
+    params = _tree_sds(pshapes, pspecs, mesh)
+    b = sh["batch"]
+    kind = sh["kind"]
+    ids_spec = P(dp, None)
+
+    def make_lookup(n_flat):
+        cap = max(64, _round_to(int(n_flat // n_dev // model *
+                                    cfg.shuffle_capacity_factor) + 8, 8))
+        return D.make_sharded_lookup(mesh, dp, cap)
+
+    mlp_flops = 2 * sum(
+        a * b2 for a, b2 in zip(
+            (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims,
+            cfg.mlp_dims + (1,))
+    )
+    fm_flops = 4 * cfg.n_sparse * cfg.embed_dim
+    fwd = b * (mlp_flops + fm_flops)
+
+    if kind == "train":
+        lookup = make_lookup(b * cfg.n_sparse)
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        ospecs = _opt_specs(pspecs, pshapes, mesh.shape.get("data", 1))
+        opt = _tree_sds(oshapes, ospecs, mesh)
+        batch = {
+            "ids": _sds((b, cfg.n_sparse), jnp.int32, mesh, ids_spec),
+            "labels": _sds((b,), jnp.float32, mesh, P(dp)),
+        }
+
+        def train_step(params, opt_state, batch):
+            from repro.optim.adamw import adamw_update
+
+            grads = jax.grad(D.bce_loss)(params, batch["ids"],
+                                         batch["labels"], cfg, lookup)
+            new_p, new_s, m = adamw_update(DEFAULT_OPT, grads, opt_state,
+                                           params)
+            return new_p, new_s, m
+
+        return Cell(arch, shape_name, kind, train_step,
+                    (params, opt, batch), donate=(0, 1),
+                    model_flops=3.0 * fwd)
+
+    if kind == "serve":
+        lookup = make_lookup(b * cfg.n_sparse)
+
+        def serve(params, ids):
+            return jax.nn.sigmoid(D.forward(params, ids, cfg, lookup))
+
+        ids = _sds((b, cfg.n_sparse), jnp.int32, mesh, ids_spec)
+        return Cell(arch, shape_name, kind, serve, (params, ids),
+                    model_flops=fwd)
+
+    # retrieval: 1 query x n_candidates batched dot
+    nc = sh["n_candidates"]
+    lookup = make_lookup(nc * cfg.n_item_fields)
+
+    def retrieve(params, user_ids, cand_ids):
+        return D.retrieval_scores(params, user_ids, cand_ids, cfg, lookup)
+
+    user = _sds((1, cfg.n_sparse), jnp.int32, mesh, P())
+    cand = _sds((nc, cfg.n_item_fields), jnp.int32, mesh,
+                P(_all_axes(multi_pod), None))
+    r_flops = nc * (cfg.n_item_fields + 1) * cfg.embed_dim * 2
+    return Cell(arch, shape_name, kind, retrieve, (params, user, cand),
+                model_flops=r_flops)
+
+
+# ---------------------------------------------------------------------------
+# SPARQL (the paper's own workload) cells
+# ---------------------------------------------------------------------------
+
+def _build_sparql(arch: str, cfg, shape_name: str, sh: dict, mesh, multi_pod):
+    from repro.core.distributed import make_distributed_join_fn
+    from repro.core.relation import Relation
+
+    n_dev, data, model = _mesh_sizes(mesh)
+    axes = _all_axes(multi_pod)
+    rows = sh["rows"]
+    rows_local = rows // n_dev
+    # §Perf iteration (mapsq): per-destination bucket capacity sized to the
+    # expected rows/destination x2 skew headroom (was rows_local*2 — a 16x
+    # overallocation that made every stage's working set axis_size x cap).
+    max_axis = max(mesh.shape.values())
+    bucket_cap = max(64, _round_to(int(rows_local / max_axis * 2) + 8, 8))
+    join_cap = _round_to(rows_local * 4, 8)
+    fn = make_distributed_join_fn(mesh, axes, bucket_cap, join_cap,
+                                  cfg.left_schema, cfg.right_schema)
+    spec_rows = P(axes, None)
+    spec_valid = P(axes)
+    mk = lambda schema: Relation(
+        schema,
+        _sds((rows, len(schema)), jnp.int32, mesh, spec_rows),
+        _sds((rows,), jnp.bool_, mesh, spec_valid),
+    )
+    left = mk(cfg.left_schema)
+    right = mk(cfg.right_schema)
+    # 'useful work': the sort (n log n compares) + output materialization
+    mflops = 2 * rows * math.log2(max(rows, 2)) + 3 * rows
+    return Cell(arch, shape_name, "join", fn, (left, right),
+                model_flops=mflops)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape: str, mesh, multi_pod: bool,
+               n_layers: int | None = None) -> Cell:
+    """`n_layers` overrides the LM layer count — used by the dry-run's
+    differential cost extraction (XLA cost_analysis counts a scanned layer
+    body ONCE; compiling L=2 and L=4 and extrapolating recovers the true
+    affine cost terms flops(L) = a + b·L)."""
+    mod = importlib.import_module(ARCHS[arch])
+    cfg, fam = mod.CONFIG, mod.FAMILY
+    if n_layers is not None and fam == "lm":
+        # probe configs unroll the scan so cost_analysis sees every layer
+        cfg = dataclasses.replace(cfg, n_layers=n_layers, scan_unroll=True)
+    sh = SHAPES_FOR(arch)[shape]
+    builder = {"lm": _build_lm, "gnn": _build_gnn, "recsys": _build_recsys,
+               "sparql": _build_sparql}[fam]
+    return builder(arch, cfg, shape, sh, mesh, multi_pod)
+
+
+def family_of(arch: str) -> str:
+    return importlib.import_module(ARCHS[arch]).FAMILY
+
+
+def lm_layer_count(arch: str) -> int:
+    return importlib.import_module(ARCHS[arch]).CONFIG.n_layers

@@ -1,0 +1,169 @@
+"""Distributed MapSQ: the MapReduce shuffle as mesh collectives.
+
+The paper's Map phase redistributes (key, value) pairs so equal keys meet;
+on a TPU mesh that is a hash-partition + `all_to_all`, then each shard runs
+the local sort-merge ReduceDuplicate. Multi-pod meshes use a hierarchical
+two-stage shuffle (route to the destination pod over the slow inter-pod
+links first, then to the destination chip over intra-pod ICI), which keeps
+inter-pod bytes at 1/pod_count of the naive flat shuffle.
+
+All functions here are written to run INSIDE `jax.shard_map`.
+"""
+from __future__ import annotations
+
+from functools import partial, reduce
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mr_join as mj
+from repro.core.relation import Relation
+from repro.core.segments import segment_offsets_from_sorted
+
+_FNV_OFFSET = jnp.uint32(2166136261)
+_FNV_PRIME = jnp.uint32(16777619)
+
+
+def hash_keys(key_cols: jax.Array) -> jax.Array:
+    """FNV-1a over the key tuple -> uint32 (tuple-equal => hash-equal)."""
+    h = jnp.full(key_cols.shape[0], _FNV_OFFSET, jnp.uint32)
+    for c in range(key_cols.shape[1]):
+        h = (h ^ key_cols[:, c].astype(jnp.uint32)) * _FNV_PRIME
+    return h
+
+
+def bucketize(cols: jax.Array, valid: jax.Array, part: jax.Array, num_parts: int,
+              bucket_capacity: int):
+    """Pack rows into per-destination buckets (static shapes).
+
+    Returns (buf (P, cap, C), bvalid (P, cap), overflowed ()).
+    Rows beyond a destination's capacity are dropped and flagged.
+    """
+    n, c = cols.shape
+    part = jnp.where(valid, part, num_parts).astype(jnp.int32)
+    order = jnp.argsort(part, stable=True)
+    part_s = part[order]
+    cols_s = cols[order]
+    valid_s = valid[order]
+    offsets = segment_offsets_from_sorted(part_s, num_parts)
+    pos = jnp.arange(n, dtype=jnp.int32) - offsets[jnp.clip(part_s, 0, num_parts - 1)]
+    ok = (part_s < num_parts) & (pos < bucket_capacity) & valid_s
+    slot = jnp.where(ok, part_s * bucket_capacity + pos, num_parts * bucket_capacity)
+    buf = jnp.zeros((num_parts * bucket_capacity, c), cols.dtype)
+    buf = buf.at[slot].set(jnp.where(ok[:, None], cols_s, 0), mode="drop")
+    bvalid = jnp.zeros((num_parts * bucket_capacity,), bool).at[slot].set(ok, mode="drop")
+    overflowed = jnp.any((part_s < num_parts) & valid_s & (pos >= bucket_capacity))
+    return (
+        buf.reshape(num_parts, bucket_capacity, c),
+        bvalid.reshape(num_parts, bucket_capacity),
+        overflowed,
+    )
+
+
+def _shuffle_one_axis(cols, valid, dest_along_axis, axis_name, bucket_capacity):
+    """Route rows to `dest_along_axis` coordinates over one mesh axis."""
+    size = jax.lax.axis_size(axis_name)
+    buf, bvalid, overflowed = bucketize(cols, valid, dest_along_axis, size,
+                                        bucket_capacity)
+    buf = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    bvalid = jax.lax.all_to_all(bvalid, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    n_cols = cols.shape[1]
+    return (
+        buf.reshape(size * bucket_capacity, n_cols),
+        bvalid.reshape(size * bucket_capacity),
+        overflowed,
+    )
+
+
+def shuffle_by_key(cols: jax.Array, valid: jax.Array, key_idx: list[int],
+                   axis_names: tuple[str, ...], bucket_capacity: int):
+    """Hierarchical MapReduce shuffle: equal keys land on the same shard.
+
+    axis_names are ordered outermost (inter-pod) first. The destination shard
+    id is hash(key) % total; stage k routes along axis k by the destination's
+    coordinate on that axis, so inter-pod traffic happens exactly once.
+
+    §Perf iteration (mapsq): `key_idx` names the key COLUMNS of `cols`
+    instead of shipping a separate key copy + precomputed destination —
+    the destination is recomputed from the payload at each stage, cutting
+    shuffle bytes by (k+1)/(c+k+1) (50% for the 2-col relations here).
+    """
+    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    total = reduce(lambda a, b: a * b, sizes, 1)
+    overflow = jnp.bool_(False)
+    # decompose dest into per-axis coordinates (row-major over axis_names)
+    for k, axis in enumerate(axis_names):
+        dest = (hash_keys(cols[:, key_idx]) % jnp.uint32(total)).astype(
+            jnp.int32)
+        inner = reduce(lambda a, b: a * b, sizes[k + 1:], 1)
+        coord = (dest // inner) % sizes[k]
+        cols, valid, ov = _shuffle_one_axis(cols, valid, coord, axis,
+                                            bucket_capacity)
+        overflow = overflow | ov
+    return cols, valid, overflow
+
+
+def distributed_mr_join(
+    left: Relation,
+    right: Relation,
+    axis_names: tuple[str, ...],
+    bucket_capacity: int,
+    join_capacity: int,
+):
+    """Shuffle both sides by join key, then local Algorithm 1 per shard.
+
+    Runs inside shard_map; each shard enters holding an arbitrary horizontal
+    slice of both relations and exits holding the join results for its hash
+    range. Returns (Relation, local_total, overflowed-any-stage).
+    """
+    key_vars = mj.shared_vars(left, right)
+    if not key_vars:
+        raise ValueError("distributed cross join not supported")
+    l_idx = [left.schema.index(v) for v in key_vars]
+    r_idx = [right.schema.index(v) for v in key_vars]
+    l_cols, l_valid, ov_l = shuffle_by_key(left.cols, left.valid, l_idx,
+                                           axis_names, bucket_capacity)
+    r_cols, r_valid, ov_r = shuffle_by_key(right.cols, right.valid, r_idx,
+                                           axis_names, bucket_capacity)
+    l_rel = Relation(left.schema, l_cols, l_valid)
+    r_rel = Relation(right.schema, r_cols, r_valid)
+    out, total, ov_j = mj.mr_join(l_rel, r_rel, join_capacity)
+    return out, total, ov_l | ov_r | ov_j
+
+
+def make_distributed_join_fn(mesh: jax.sharding.Mesh,
+                             axis_names: tuple[str, ...],
+                             bucket_capacity: int, join_capacity: int,
+                             left_schema: tuple[str, ...],
+                             right_schema: tuple[str, ...]):
+    """shard_mapped join over `mesh` (rows sharded on axes), not yet jitted."""
+    from jax.sharding import PartitionSpec as P
+
+    row_spec = P(axis_names)
+    specs_in = (
+        Relation(left_schema, row_spec, row_spec),
+        Relation(right_schema, row_spec, row_spec),
+    )
+    out_schema = tuple(left_schema) + tuple(
+        v for v in right_schema if v not in left_schema
+    )
+    specs_out = (Relation(out_schema, row_spec, row_spec), P(axis_names), P(axis_names))
+
+    def local_fn(left: Relation, right: Relation):
+        out, total, ov = distributed_mr_join(left, right, axis_names,
+                                             bucket_capacity, join_capacity)
+        return out, total[None], ov[None]
+
+    return jax.shard_map(local_fn, mesh=mesh, in_specs=specs_in,
+                         out_specs=specs_out, check_vma=False)
+
+
+def make_distributed_join(mesh: jax.sharding.Mesh, axis_names: tuple[str, ...],
+                          bucket_capacity: int, join_capacity: int,
+                          left_schema: tuple[str, ...], right_schema: tuple[str, ...]):
+    """Build a jit'd shard_mapped join over `mesh` (rows sharded on axes)."""
+    return jax.jit(
+        make_distributed_join_fn(mesh, axis_names, bucket_capacity,
+                                 join_capacity, left_schema, right_schema)
+    )

@@ -1,0 +1,191 @@
+"""Algorithm 1 of MapSQ: the MapReduce-based join, TPU-native.
+
+Three phases, exactly as the paper structures them:
+
+  Map             — split every tuple into (key, value); tag side. Invalid
+                    (padding) rows are mapped to per-side sentinel keys so
+                    they can never join (the LEFT/RIGHT flag's purpose —
+                    "reduce unnecessary computation" — achieved structurally).
+  Sort            — sort both sides by key (the shuffle). On TPU this is a
+                    bitonic network (see kernels/bitonic_sort); here we use
+                    XLA's sort, which lowers to the same thing.
+  ReduceDuplicate — per key group, emit the cartesian product of LEFT values
+                    with RIGHT values. Realised as: per-left-row match counts
+                    via binary search, prefix sum, then a dense inverse-
+                    prefix-sum gather (kernels/pair_expand) — one output
+                    element per lane, perfectly load balanced.
+
+Dynamic result size is handled Mars-style: a count pass returns the exact
+total; the expand pass fills a static-capacity buffer with a validity mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.relation import INVALID_LEFT, INVALID_RIGHT, Relation, shared_vars
+from repro.core.segments import dense_rank_two_sided
+
+
+class JoinPlanArrays(NamedTuple):
+    """Sorted intermediates shared by the count and expand passes."""
+
+    order_l: jax.Array  # (n_l,) permutation sorting left by key
+    order_r: jax.Array  # (n_r,) permutation sorting right by key
+    lo: jax.Array  # (n_l,) first matching right slot per sorted-left row
+    counts: jax.Array  # (n_l,) number of right matches per sorted-left row
+    prefix: jax.Array  # (n_l,) inclusive prefix sum of counts
+    total: jax.Array  # () int32 exact number of join results
+
+
+def _map_phase(left: Relation, right: Relation, key_vars: list[str]):
+    """Map: extract key columns, tag sides via sentinels on invalid rows."""
+    lk = jnp.stack([left.column(v) for v in key_vars], axis=1)
+    rk = jnp.stack([right.column(v) for v in key_vars], axis=1)
+    lk = jnp.where(left.valid[:, None], lk, INVALID_LEFT)
+    rk = jnp.where(right.valid[:, None], rk, INVALID_RIGHT)
+    if len(key_vars) == 1:
+        return lk[:, 0], rk[:, 0]
+    # Multi-variable join: dense-rank tuples jointly so binary search works
+    # on a single int32 key. Sentinel rows keep never-equal ranks.
+    return dense_rank_two_sided(lk, rk)
+
+
+def _sort_count_phase(l_key: jax.Array, r_key: jax.Array) -> JoinPlanArrays:
+    """Sort + the counting half of ReduceDuplicate (Mars pass 1)."""
+    order_l = jnp.argsort(l_key)
+    order_r = jnp.argsort(r_key)
+    lk_sorted = l_key[order_l]
+    rk_sorted = r_key[order_r]
+    lo = jnp.searchsorted(rk_sorted, lk_sorted, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rk_sorted, lk_sorted, side="right").astype(jnp.int32)
+    counts = hi - lo
+    prefix = jnp.cumsum(counts, dtype=jnp.int32)
+    total = prefix[-1] if counts.shape[0] else jnp.int32(0)
+    return JoinPlanArrays(order_l, order_r, lo, counts, prefix, total)
+
+
+def expand_pairs_jnp(plan: JoinPlanArrays, capacity: int):
+    """Inverse-prefix-sum expansion (pure-jnp reference path).
+
+    For output slot t: left sorted-row i = first index with prefix[i] > t,
+    offset within the group = t - (prefix[i] - counts[i]), right sorted-row
+    j = lo[i] + offset. This is the dense, branch-free form of the paper's
+    per-key cartesian product.
+    """
+    t = jnp.arange(capacity, dtype=jnp.int32)
+    i = jnp.searchsorted(plan.prefix, t, side="right").astype(jnp.int32)
+    i_c = jnp.minimum(i, plan.counts.shape[0] - 1)
+    start = plan.prefix[i_c] - plan.counts[i_c]
+    j = plan.lo[i_c] + (t - start)
+    valid = t < plan.total
+    li = plan.order_l[i_c]
+    rj = plan.order_r[jnp.clip(j, 0, plan.order_r.shape[0] - 1)]
+    return li, rj, valid
+
+
+def expand_pairs(plan: JoinPlanArrays, capacity: int, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels.pair_expand import ops as pe_ops
+
+        i, off, valid = pe_ops.pair_expand(plan.prefix, plan.counts, capacity)
+        j = plan.lo[i] + off
+        li = plan.order_l[i]
+        rj = plan.order_r[jnp.clip(j, 0, plan.order_r.shape[0] - 1)]
+        return li, rj, valid
+    return expand_pairs_jnp(plan, capacity)
+
+
+def mr_join_plan(left: Relation, right: Relation) -> tuple[JoinPlanArrays, list[str]]:
+    key_vars = shared_vars(left, right)
+    if not key_vars:
+        raise ValueError(
+            f"cross join between {left.schema} and {right.schema}; use cross_join()"
+        )
+    l_key, r_key = _map_phase(left, right, key_vars)
+    return _sort_count_phase(l_key, r_key), key_vars
+
+
+def mr_join_count(left: Relation, right: Relation) -> jax.Array:
+    """Mars pass 1: the exact result cardinality (jit-able, O(n log n))."""
+    plan, _ = mr_join_plan(left, right)
+    return plan.total
+
+
+def mr_join(
+    left: Relation,
+    right: Relation,
+    capacity: int,
+    use_kernel: bool = False,
+) -> tuple[Relation, jax.Array, jax.Array]:
+    """Full Algorithm 1. Returns (result, exact_total, overflowed).
+
+    Output schema: all left vars, then right vars not already bound.
+    `capacity` is static; rows past `exact_total` are masked invalid. If
+    exact_total > capacity the result is truncated and overflowed=True —
+    the eager engine re-runs with a larger capacity (Mars two-pass).
+    """
+    plan, key_vars = mr_join_plan(left, right)
+    li, rj, valid = expand_pairs(plan, capacity, use_kernel=use_kernel)
+    right_extra = [v for v in right.schema if v not in left.schema]
+    out_schema = tuple(left.schema) + tuple(right_extra)
+    l_cols = left.cols[li]
+    r_cols = (
+        right.project(right_extra).cols[rj]
+        if right_extra
+        else jnp.zeros((capacity, 0), jnp.int32)
+    )
+    cols = jnp.concatenate([l_cols, r_cols], axis=1)
+    cols = jnp.where(valid[:, None], cols, 0)
+    overflowed = plan.total > capacity
+    return Relation(out_schema, cols, valid), plan.total, overflowed
+
+
+def cross_join(
+    left: Relation, right: Relation, capacity: int
+) -> tuple[Relation, jax.Array, jax.Array]:
+    """Cartesian product for disconnected BGP components (no shared vars)."""
+    n_r = right.capacity
+    t = jnp.arange(capacity, dtype=jnp.int32)
+    li, rj = t // n_r, t % n_r
+    valid = left.valid[li] & right.valid[rj] & (t < left.capacity * n_r)
+    cols = jnp.concatenate([left.cols[li], right.cols[rj]], axis=1)
+    total = left.count() * right.count()
+    # totals are exact but positions are not compacted: mask handles padding
+    # interleaved with real rows; compact() can be applied afterwards.
+    out = Relation(tuple(left.schema) + tuple(right.schema), cols, valid)
+    return out, total, total > capacity
+
+
+def compact(rel: Relation) -> Relation:
+    """Stable-move valid rows to the front (static-shape compaction)."""
+    order = jnp.argsort(~rel.valid, stable=True)
+    return Relation(rel.schema, rel.cols[order], rel.valid[order])
+
+
+def distinct(rel: Relation) -> Relation:
+    """Mask duplicate rows (used for SELECT DISTINCT / projections)."""
+    # Sort rows lexicographically with validity as the final tiebreak so all
+    # valid copies of a row are adjacent and precede invalid (padding) copies.
+    keys = ((~rel.valid).astype(jnp.int32),) + tuple(
+        rel.cols[:, c] for c in reversed(range(rel.n_cols))
+    )
+    perm = jnp.lexsort(keys)
+    cols_s = rel.cols[perm]
+    valid_s = rel.valid[perm]
+    same_as_prev = jnp.all(cols_s == jnp.roll(cols_s, 1, axis=0), axis=1)
+    same_as_prev = same_as_prev.at[0].set(False)
+    prev_valid = jnp.roll(valid_s, 1).at[0].set(False)
+    keep = valid_s & ~(same_as_prev & prev_valid)
+    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
+    return Relation(rel.schema, rel.cols, keep[inv])
+
+
+def semijoin_mask(left: Relation, right: Relation) -> jax.Array:
+    """valid mask of left rows having >=1 match in right (for FILTER EXISTS)."""
+    plan, _ = mr_join_plan(left, right)
+    has = plan.counts > 0
+    mask_sorted_order = jnp.zeros(left.capacity, bool).at[plan.order_l].set(has)
+    return left.valid & mask_sorted_order

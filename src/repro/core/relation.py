@@ -1,0 +1,103 @@
+"""Dictionary-encoded relations: the tables MapSQ's Algorithm 1 joins.
+
+A Relation is the JAX-native form of the paper's partial-match tables
+(Table 1a/1b): a fixed-capacity buffer of int32 rows, one column per SPARQL
+variable, plus a validity mask (static shapes are required under jit; the
+mask is the Mars-style answer to dynamic result sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel keys: invalid rows are sent to distinct, never-equal key values so
+# they sort to the end and can never pair up across sides.
+INVALID_LEFT = np.int32(2**31 - 1)
+INVALID_RIGHT = np.int32(2**31 - 2)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Relation:
+    """A dictionary-encoded relation with static capacity.
+
+    Attributes:
+      schema: variable name per column (aux data, static under jit).
+      cols:   (capacity, n_cols) int32 term ids.
+      valid:  (capacity,) bool — rows beyond the real result are padding.
+    """
+
+    schema: tuple[str, ...]
+    cols: jax.Array
+    valid: jax.Array
+
+    def __post_init__(self):
+        if isinstance(self.cols, (np.ndarray, jnp.ndarray)):
+            assert self.cols.ndim == 2, self.cols.shape
+            assert len(self.schema) == self.cols.shape[1], (
+                self.schema,
+                self.cols.shape,
+            )
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.cols, self.valid), self.schema
+
+    @classmethod
+    def tree_unflatten(cls, schema, children):
+        cols, valid = children
+        return cls(schema=tuple(schema), cols=cols, valid=valid)
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.cols.shape[1]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def column(self, var: str) -> jax.Array:
+        return self.cols[:, self.schema.index(var)]
+
+    def project(self, vars: Sequence[str]) -> "Relation":
+        idx = [self.schema.index(v) for v in vars]
+        return Relation(tuple(vars), self.cols[:, idx], self.valid)
+
+    def to_numpy(self) -> np.ndarray:
+        """Compact valid rows to host (eager use only)."""
+        cols = np.asarray(self.cols)
+        valid = np.asarray(self.valid)
+        return cols[valid]
+
+    def to_set(self) -> set[tuple[int, ...]]:
+        return {tuple(int(x) for x in row) for row in self.to_numpy()}
+
+    @classmethod
+    def from_numpy(
+        cls,
+        schema: Sequence[str],
+        rows: np.ndarray,
+        capacity: int | None = None,
+    ) -> "Relation":
+        rows = np.asarray(rows, dtype=np.int32).reshape(len(rows), len(schema))
+        capacity = capacity or max(1, len(rows))
+        assert capacity >= len(rows)
+        cols = np.zeros((capacity, len(schema)), dtype=np.int32)
+        cols[: len(rows)] = rows
+        valid = np.zeros((capacity,), dtype=bool)
+        valid[: len(rows)] = True
+        return cls(tuple(schema), jnp.asarray(cols), jnp.asarray(valid))
+
+
+def shared_vars(a: Relation | Sequence[str], b: Relation | Sequence[str]) -> list[str]:
+    sa = a.schema if isinstance(a, Relation) else tuple(a)
+    sb = b.schema if isinstance(b, Relation) else tuple(b)
+    return [v for v in sa if v in sb]

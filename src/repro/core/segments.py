@@ -1,0 +1,74 @@
+"""Segment machinery shared by the MR join, MoE dispatch, GNN aggregation
+and embedding-bag: everything downstream of "sort by key" reasons in
+contiguous segments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_rank_two_sided(left_keys: jax.Array, right_keys: jax.Array):
+    """Dense-rank multi-column keys jointly across two relations.
+
+    Returns int32 ranks (l_rank, r_rank) such that rows from either side have
+    equal rank iff their key tuples are equal, and ranks are ordered
+    lexicographically. This reduces multi-variable SPARQL joins to a
+    single-int32-key join without 64-bit packing.
+
+    left_keys: (n_l, k) int32, right_keys: (n_r, k) int32.
+    """
+    n_l = left_keys.shape[0]
+    all_keys = jnp.concatenate([left_keys, right_keys], axis=0)
+    # lexsort: primary key is column 0 -> pass columns reversed.
+    order = jnp.lexsort(tuple(all_keys[:, c] for c in reversed(range(all_keys.shape[1]))))
+    sorted_keys = all_keys[order]
+    new_group = jnp.any(sorted_keys != jnp.roll(sorted_keys, 1, axis=0), axis=1)
+    new_group = new_group.at[0].set(True)
+    rank_sorted = jnp.cumsum(new_group.astype(jnp.int32)) - 1
+    ranks = jnp.zeros(all_keys.shape[0], jnp.int32).at[order].set(rank_sorted)
+    return ranks[:n_l], ranks[n_l:]
+
+
+def segment_offsets_from_sorted(sorted_ids: jax.Array, num_segments: int):
+    """Start offsets of each segment id in a sorted id array.
+
+    offsets has length num_segments + 1; segment s occupies
+    [offsets[s], offsets[s+1]).
+    """
+    return jnp.searchsorted(
+        sorted_ids, jnp.arange(num_segments + 1, dtype=sorted_ids.dtype)
+    ).astype(jnp.int32)
+
+
+def counts_to_segment_ids(counts: jax.Array, total: int):
+    """Inverse of bincount for sorted data: e.g. [2,0,3] -> [0,0,2,2,2].
+
+    `total` is the static output length; positions beyond sum(counts) get id
+    = len(counts) (one past the last segment) so callers can mask them.
+    """
+    starts = jnp.cumsum(counts) - counts
+    out = jnp.zeros((total,), jnp.int32)
+    # scatter-add 1 at each segment start (dropping empty segments whose
+    # start == start of the next non-empty one handled by add semantics).
+    out = out.at[starts].add(jnp.where(counts > 0, 1, 0).astype(jnp.int32), mode="drop")
+    ids = jnp.cumsum(out) - 1
+    valid_len = jnp.sum(counts)
+    return jnp.where(jnp.arange(total) < valid_len, ids, len(counts)).astype(jnp.int32)
+
+
+def sorted_segment_sum(data: jax.Array, sorted_ids: jax.Array, num_segments: int):
+    """segment_sum specialised to sorted ids (the post-shuffle MapSQ reduce)."""
+    return jax.ops.segment_sum(
+        data, sorted_ids, num_segments=num_segments, indices_are_sorted=True
+    )
+
+
+def segment_softmax(scores: jax.Array, segment_ids: jax.Array, num_segments: int):
+    """Numerically-stable softmax within segments (GAT edge softmax)."""
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = scores - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    seg_sum = jax.ops.segment_sum(expd, segment_ids, num_segments=num_segments)
+    return expd / jnp.maximum(seg_sum[segment_ids], 1e-30)

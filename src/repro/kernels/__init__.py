@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the MapSQ hot spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, fallbacks, interpret auto-detect)
+  ref.py    — pure-jnp oracle used by tests and by CPU-only paths
+
+Kernels are validated in interpret mode on CPU (this container) and written
+against TPU constraints: lane width 128, sublane 8, VMEM ~16 MB/core, MXU
+128x128 matmul tiles, branch-free data-independent schedules.
+"""
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas on non-TPU backends so kernels run everywhere."""
+    return jax.default_backend() != "tpu"

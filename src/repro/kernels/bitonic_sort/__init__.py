@@ -1,0 +1,1 @@
+from repro.kernels.bitonic_sort.ops import argsort_i32, sort_pairs  # noqa: F401

@@ -1,0 +1,78 @@
+"""Bitonic sort of (key, payload) int32 pairs — the MapSQ Sort/shuffle phase.
+
+TPU adaptation of the GPU sort in Mars/MapSQ: a bitonic network is branch-
+free and data-independent, so every compare-exchange pass is a dense VPU op
+on (8, 128) vector registers — no warp divergence analogue, no dynamic
+memory. The whole array lives in VMEM (one block); each of the
+log2(N)*(log2(N)+1)/2 passes is a reshape + select, unrolled at trace time.
+
+For N beyond VMEM capacity ops.py falls back to XLA's sort (itself a bitonic
+network on TPU); the kernel covers the per-shard working sets the join
+actually sees after hash partitioning (<= 2^19 rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, vals, block: int, dist: int):
+    """One bitonic pass: compare elements `dist` apart within `block` runs."""
+    n = keys.shape[0]
+    rows = n // (2 * dist)
+    k2 = keys.reshape(rows, 2, dist)
+    v2 = vals.reshape(rows, 2, dist)
+    a_k, b_k = k2[:, 0, :], k2[:, 1, :]
+    a_v, b_v = v2[:, 0, :], v2[:, 1, :]
+    row_start = jnp.arange(rows, dtype=jnp.int32) * (2 * dist)
+    asc = ((row_start // block) % 2 == 0)[:, None]
+    swap = jnp.where(asc, a_k > b_k, a_k < b_k)
+    lo_k = jnp.where(swap, b_k, a_k)
+    hi_k = jnp.where(swap, a_k, b_k)
+    lo_v = jnp.where(swap, b_v, a_v)
+    hi_v = jnp.where(swap, a_v, b_v)
+    keys = jnp.stack([lo_k, hi_k], axis=1).reshape(n)
+    vals = jnp.stack([lo_v, hi_v], axis=1).reshape(n)
+    return keys, vals
+
+
+def _sort_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref, *, n: int):
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    stages = n.bit_length() - 1  # log2(n)
+    for k in range(stages):
+        block = 2 ** (k + 1)
+        dist = block // 2
+        while dist >= 1:
+            keys, vals = _compare_exchange(keys, vals, block, dist)
+            dist //= 2
+    out_k_ref[...] = keys
+    out_v_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_pairs(keys: jax.Array, vals: jax.Array, *, interpret: bool = True):
+    """Sort int32 (keys, vals) by key ascending. len must be a power of two."""
+    n = keys.shape[0]
+    assert n & (n - 1) == 0, f"bitonic length must be a power of two, got {n}"
+    kernel = functools.partial(_sort_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, vals)

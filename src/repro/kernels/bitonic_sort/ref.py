@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the bitonic sort kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def sort_pairs(keys: jax.Array, vals: jax.Array):
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def argsort_i32(keys: jax.Array):
+    return jnp.argsort(keys, stable=True).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.pair_expand.ops import pair_expand  # noqa: F401

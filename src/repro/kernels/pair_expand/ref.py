@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for pair expansion (the expand half of Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+
+
+def pair_expand(prefix: jax.Array, counts: jax.Array, capacity: int):
+    n_left = prefix.shape[0]
+    t = jnp.arange(capacity, dtype=jnp.int32)
+    i = jnp.searchsorted(prefix, t, side="right").astype(jnp.int32)
+    i = jnp.clip(i, 0, n_left - 1)
+    start = prefix[i] - counts[i]
+    total = prefix[-1]
+    return i, t - start, (t < total)

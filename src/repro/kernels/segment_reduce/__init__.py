@@ -1,0 +1,1 @@
+from repro.kernels.segment_reduce.ops import sorted_segment_sum  # noqa: F401

@@ -1,0 +1,61 @@
+"""Sorted segment sum as a one-hot MXU matmul — the shared Reduce phase.
+
+Serves three consumers of the MapSQ reduce: GNN message aggregation
+(edges sorted by destination), MoE combine (tokens sorted by expert), and
+recsys embedding-bag (ids sorted by bag). On TPU the irregular scatter-add
+becomes `onehot(ids).T @ data`, a 128x128 systolic matmul per tile — the
+canonical TPU answer to reduce-by-key, and only viable BECAUSE the ids are
+sorted/partitioned first (the paper's insight).
+
+Tiling: rows are tiled (BLOCK_N x d) over a sequential grid; the (S x d)
+output block stays resident in VMEM and accumulates across grid steps
+(revisited output block, init on step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+
+
+def _seg_sum_kernel(ids_ref, data_ref, out_ref, *, num_segments: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]
+    data = data_ref[...]
+    onehot = (
+        ids[:, None] == jax.lax.iota(jnp.int32, num_segments)[None, :]
+    ).astype(data.dtype)
+    out_ref[...] += jnp.dot(
+        onehot.T, data, preferred_element_type=out_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "interpret")
+)
+def sorted_segment_sum_pallas(data: jax.Array, ids: jax.Array,
+                              num_segments: int, *, interpret: bool = True):
+    """data (n, d) float, ids (n,) int32 sorted; out (num_segments, d)."""
+    n, d = data.shape
+    assert n % BLOCK_N == 0, n
+    kernel = functools.partial(_seg_sum_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(ids, data)

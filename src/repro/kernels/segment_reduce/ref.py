@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for sorted segment sum."""
+import jax
+
+
+def sorted_segment_sum(data: jax.Array, ids: jax.Array, num_segments: int):
+    return jax.ops.segment_sum(data, ids, num_segments=num_segments,
+                               indices_are_sorted=True)

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+cell on 512 placeholder devices, and extract the roofline inputs
+(per-device FLOPs / bytes from cost_analysis, per-device collective bytes
+parsed from the post-SPMD HLO, memory_analysis to prove it fits).
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and only the dry-run wants 512 fake devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+      --shape train_4k --mesh both --out results/
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, SHAPES_FOR, build_cell
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e-like hardware constants (per chip) — see EXPERIMENTS.md §Roofline.
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# result type is either a scalar type or a tuple `(...)` which may contain
+# `=` inside /*index=N*/ comments — match to the closing paren, not to `=`.
+_INSTR_RE = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_COLL_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute"}
+_TYPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                      r"\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for ty, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[ty]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes by op kind, from the post-SPMD HLO.
+
+    Scheduled HLO omits operand types, so pass 1 maps instruction name ->
+    result bytes, pass 2 sums the named operands of every collective
+    (the assignment's 'sum operand sizes' definition). Shapes in the
+    partitioned module are already per-device. `link_bytes` additionally
+    applies per-op wire multipliers (all-reduce moves ~2x its operand).
+    """
+    sizes: dict[str, int] = {}
+    colls: list[tuple[str, str]] = []  # (op, args_segment)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        sizes[name] = _type_bytes(type_str)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_OPS:
+            args = line[m.end():].split(")", 1)[0]
+            colls.append((base, args))
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    link = 0.0
+    for op, args in colls:
+        bytes_ = sum(sizes.get(nm, 0) for nm in _OPERAND_RE.findall(args))
+        out[op] = out.get(op, 0) + bytes_
+        count[op] = count.get(op, 0) + 1
+        link += bytes_ * (2.0 if op == "all-reduce" else 1.0)
+    out["total"] = sum(v for k, v in out.items())
+    out["link_bytes"] = link
+    out["counts"] = count
+    return out
+
+
+def _compile_cell(arch, shape, multi_pod, mesh, n_layers=None):
+    cell = build_cell(arch, shape, mesh, multi_pod, n_layers=n_layers)
+    jf = jax.jit(cell.fn, donate_argnums=cell.donate)
+    with jax.set_mesh(mesh):  # PartitionSpec-based constraints resolve here
+        t0 = time.time()
+        lowered = jf.lower(*cell.inputs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return cell, compiled, t_lower, t_compile
+
+
+def _cost_terms(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    from repro.configs.registry import family_of, lm_layer_count
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    cell, compiled, t_lower, t_compile = _compile_cell(
+        arch, shape, multi_pod, mesh)
+    mem = compiled.memory_analysis()
+    terms = _cost_terms(compiled)
+    probe = None
+    if family_of(arch) == "lm":
+        # Differential cost extraction: XLA counts the scanned layer body
+        # once, so compile L=2 / L=4 and extrapolate the affine terms.
+        L = lm_layer_count(arch)
+        _, c2, _, _ = _compile_cell(arch, shape, multi_pod, mesh, n_layers=2)
+        _, c4, _, _ = _compile_cell(arch, shape, multi_pod, mesh, n_layers=4)
+        t2, t4 = _cost_terms(c2), _cost_terms(c4)
+
+        def extrap(a2, a4):
+            # clamp: scheduling noise can make the L=4 module report fewer
+            # collective bytes than L=2; a negative slope would extrapolate
+            # below zero, so never go under the larger measured module.
+            return max(a4 + (a4 - a2) / 2.0 * (L - 4), a2, a4)
+
+        probe = {"L2": t2, "L4": t4}
+        terms = {
+            "flops": extrap(t2["flops"], t4["flops"]),
+            "bytes": extrap(t2["bytes"], t4["bytes"]),
+            "coll": {
+                "total": extrap(t2["coll"]["total"], t4["coll"]["total"]),
+                "link_bytes": extrap(t2["coll"]["link_bytes"],
+                                     t4["coll"]["link_bytes"]),
+                "counts": t4["coll"]["counts"],
+            },
+        }
+    coll = terms["coll"]
+    flops_dev = terms["flops"]
+    bytes_dev = terms["bytes"]
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "temp_bytes": mem.temp_size_in_bytes,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "model_flops_global": cell.model_flops,
+        "layer_probe": probe,
+        # roofline terms (seconds)
+        "t_compute": flops_dev / PEAK_FLOPS,
+        "t_memory": bytes_dev / HBM_BW,
+        # 'bytes accessed' sums every HLO op's operands — an upper bound
+        # that ignores fusion/VMEM residency. t_memory_io is the matching
+        # lower bound: only the per-device resident state (args + outputs)
+        # crossing HBM once. True HBM time lies between the two.
+        "t_memory_io": (mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        - mem.alias_size_in_bytes) / HBM_BW,
+        "t_collective": coll["link_bytes"] / LINK_BW,
+    }
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    hlo_global = flops_dev * n_chips
+    rec["useful_flops_ratio"] = (
+        cell.model_flops / hlo_global if hlo_global else 0.0
+    )
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES_FOR(a):
+                cells.append((a, s))
+    else:
+        assert args.arch, "--arch or --all required"
+        shapes = [args.shape] if args.shape else list(SHAPES_FOR(args.arch))
+        cells = [(args.arch, s) for s in shapes]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)", flush=True)
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(
+                    f"[ ok ] {tag}: compile={rec['t_compile_s']}s "
+                    f"flops/dev={rec['flops_per_device']:.3e} "
+                    f"coll/dev={rec['collective_bytes_per_device']['total']:.3e}B "
+                    f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                    f"bottleneck={rec['bottleneck']}",
+                    flush=True,
+                )
+            except Exception:
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}:\n{traceback.format_exc()}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

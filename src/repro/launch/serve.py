@@ -1,0 +1,80 @@
+"""Serving launcher: `python -m repro.launch.serve --mode sparql|lm`.
+
+sparql — stand up the MapSQ engine + micro-batching server over LUBM data
+         and run the 5 benchmark queries through it.
+lm     — reduced-config LM generation (prefill + greedy decode loop).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def serve_sparql(scale: int, n_queries: int) -> None:
+    from repro.serve.sparql_server import SPARQLServer
+    from repro.sparql.engine import QueryEngine
+    from repro.sparql.lubm import QUERIES, generate
+
+    store = generate(scale=scale)
+    print(f"LUBM-ish store: {len(store)} triples")
+    srv = SPARQLServer(QueryEngine(store))
+    import threading
+
+    results = {}
+
+    def ask(name, text):
+        results[name] = srv.query(text)
+
+    threads = [
+        threading.Thread(target=ask, args=(f"{name}#{i}", text))
+        for i in range(n_queries)
+        for name, text in QUERIES.items()
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for name in sorted(results):
+        print(f"{name}: {len(results[name])} rows")
+    print("server stats:", srv.stats())
+    srv.close()
+
+
+def serve_lm(arch: str) -> None:
+    import importlib
+
+    from repro.configs.registry import ARCHS
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import reduced_lm
+    from repro.models import transformer as T
+    from repro.serve.decode import Generator
+
+    cfg = reduced_lm(importlib.import_module(ARCHS[arch]).CONFIG)
+    mesh = make_local_mesh(model=jax.device_count())
+    params = T.init_params(jax.random.PRNGKey(0), cfg,
+                           ep=mesh.shape["model"])
+    gen = Generator(cfg, params, mesh, max_len=64)
+    with jax.set_mesh(mesh):
+        prompts = np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab
+        out = gen.generate(prompts, n_new=16)
+    print("generated:", out.shape)
+    print(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["sparql", "lm"], default="sparql")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--scale", type=int, default=2)
+    ap.add_argument("--n-queries", type=int, default=4)
+    args = ap.parse_args()
+    if args.mode == "sparql":
+        serve_sparql(args.scale, args.n_queries)
+    else:
+        serve_lm(args.arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Runs a REDUCED config of the selected architecture on this host's devices
+(full configs are exercised via dryrun.py). This is the same code path a
+real pod launch takes: registry config → mesh → jitted step → Trainer with
+checkpoints/restart.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_local_mesh
+
+
+def reduced_lm(cfg, vocab=512):
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4), d_head=16,
+        d_ff=min(cfg.d_ff, 128), vocab=vocab,
+        n_experts=min(cfg.n_experts, 8) if cfg.is_moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+        d_expert_ff=min(cfg.d_expert_ff, 64) if cfg.is_moe else 0,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window
+        else 0, kv_chunk=16, fsdp=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    import importlib
+
+    from repro.configs.registry import ARCHS
+    from repro.data.tokens import TokenPipeline
+    from repro.models import transformer as T
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.trainer import Trainer, TrainSettings
+
+    mod = importlib.import_module(ARCHS[args.arch])
+    assert mod.FAMILY == "lm", "train.py drives LM archs; see examples/"
+    cfg = reduced_lm(mod.CONFIG)
+    mesh = make_local_mesh(data=1, model=jax.device_count())
+    params = T.init_params(jax.random.PRNGKey(0), cfg,
+                           ep=mesh.shape["model"])
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=10,
+                          total_steps=args.steps)
+    step_fn = jax.jit(T.make_train_step(cfg, mesh, opt_cfg, False),
+                      donate_argnums=(0, 1))
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+    tr = Trainer(
+        step_fn, params, pipe, args.ckpt_dir,
+        TrainSettings(total_steps=args.steps, ckpt_every=args.ckpt_every),
+    )
+    tr.resume_if_possible()
+    with jax.set_mesh(mesh):
+        hist = tr.run()
+    print(f"final loss: {hist[-1]['loss']:.4f} (step {hist[-1]['step']})")
+
+
+if __name__ == "__main__":
+    main()

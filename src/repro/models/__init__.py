@@ -1,0 +1,5 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, RecSys.
+
+Every irregular-compute model (MoE dispatch, GNN aggregation, embedding
+bags) is built on repro.core.segments — the paper's sort→segment pipeline.
+"""

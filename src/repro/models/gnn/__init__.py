@@ -1,0 +1,5 @@
+"""GNN family. Message passing = the paper's pipeline (DESIGN.md §3):
+edges are sorted by destination once at load time (the Sort phase), and
+aggregation is a sorted segment reduce (the ReduceDuplicate phase) — the
+same machinery as the SPARQL join, with node ids as keys.
+"""

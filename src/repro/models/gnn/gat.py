@@ -1,0 +1,69 @@
+"""GAT (Velickovic et al., arXiv:1710.10903) — SDDMM/SpMM regime.
+
+Edge attention = per-edge score (SDDMM analogue via gathers), segment
+softmax over dst (sorted; the MapSQ reduce), weighted segment sum (SpMM).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    d_in: int = 1433
+    negative_slope: float = 0.2
+
+
+def init_params(key: jax.Array, cfg: GATConfig) -> dict:
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        h = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        layers.append({
+            "w": jax.random.normal(k1, (d_in, h, d_out), jnp.float32) * d_in**-0.5,
+            "a_src": jax.random.normal(k2, (h, d_out), jnp.float32) * d_out**-0.5,
+            "a_dst": jax.random.normal(k3, (h, d_out), jnp.float32) * d_out**-0.5,
+            "b": jnp.zeros((h, d_out), jnp.float32),
+        })
+        d_in = d_out * h if not last else d_out
+    return {"layers": layers}
+
+
+def apply(params: dict, g: C.GraphBatch, cfg: GATConfig) -> jax.Array:
+    x = g.node_feat
+    n = g.n_nodes
+    for i, p in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        h = jnp.einsum("nf,fhd->nhd", x, p["w"])  # (N, H, D)
+        s_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
+        s_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
+        scores = jax.nn.leaky_relu(
+            s_src[g.src] + s_dst[g.dst], cfg.negative_slope
+        )  # (E, H)
+        agg = C.aggregate_softmax(scores, h[g.src], g.dst, n, g.edge_mask)
+        agg = agg + p["b"][None]
+        if last:
+            x = jnp.mean(agg, axis=1)  # average heads -> (N, C)
+        else:
+            x = jax.nn.elu(agg).reshape(n, -1)  # concat heads
+        x = jnp.where(g.node_mask[:, None], x, 0)
+    return x
+
+
+def loss_fn(params, g: C.GraphBatch, cfg: GATConfig):
+    logits = apply(params, g, cfg)
+    labels = g.extras["labels"]
+    mask = g.extras["train_mask"] & g.node_mask
+    return C.masked_ce(logits, labels, mask)

@@ -1,0 +1,175 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN (arXiv:2212.12794).
+
+Grid nodes carry n_vars=227 features; a coarser mesh (n_mesh = N/4 here,
+standing in for the refined icosahedron) runs 16 interaction-network
+processor layers; grid→mesh and mesh→grid bipartite GNN blocks encode and
+decode. Every aggregation is a dst-sorted segment sum — the MapSQ reduce.
+
+The assigned shape grid (full_graph_sm / minibatch_lg / ogb_products /
+molecule) supplies (n_nodes, n_edges); mesh sizes derive from them (see
+configs/gnn_shapes.py) so every (arch × shape) cell is well-defined.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    n_layers: int = 16  # processor depth
+    d_hidden: int = 512
+    n_vars: int = 227
+    mesh_refinement: int = 6  # recorded; mesh size derives from the shape
+    # §Perf iterations 1-5: axes the node dim shards over on large graphs
+    node_spec: tuple[str, ...] = ()
+    remat: bool = False  # checkpoint each processor block
+    compute_dtype: object = jnp.float32  # bf16 halves node/edge traffic
+    shuffle_gather: bool = False  # MapSQ shuffle gather/scatter (iter 4)
+    # iter 5: stream the g2m/m2g edge sets through a scan in ~this many
+    # chunks (their edge features are consumed once, so nothing O(E·d)
+    # ever lives). 0 = off.
+    edge_stream_chunks: int = 0
+
+
+def _block_init(key, d):
+    k1, k2 = jax.random.split(key)
+    return {
+        "edge": C.init_mlp(k1, [3 * d, d, d]),
+        "node": C.init_mlp(k2, [2 * d, d, d]),
+    }
+
+
+def init_params(key: jax.Array, cfg: GraphCastConfig) -> dict:
+    ks = iter(jax.random.split(key, 8 + cfg.n_layers))
+    d = cfg.d_hidden
+    return {
+        "enc_grid": C.init_mlp(next(ks), [cfg.n_vars, d, d]),
+        "mesh_init": jax.random.normal(next(ks), (1, d), jnp.float32) * 0.02,
+        "enc_g2m_edge": C.init_mlp(next(ks), [4, d, d]),
+        "g2m": _block_init(next(ks), d),
+        "enc_mesh_edge": C.init_mlp(next(ks), [4, d, d]),
+        "processor": [_block_init(next(ks), d) for _ in range(cfg.n_layers)],
+        "enc_m2g_edge": C.init_mlp(next(ks), [4, d, d]),
+        "m2g": _block_init(next(ks), d),
+        "dec_grid": C.init_mlp(next(ks), [d, d, cfg.n_vars]),
+    }
+
+
+def _bipartite_block(p, e_feat, x_src_tab, x_dst_tab, src, dst, mask, n_dst,
+                     node_spec=(), shuffle=False):
+    """Interaction-network block over a (possibly bipartite) edge set.
+    (n_dst / node_spec / shuffle are static — last, for jax.checkpoint.)"""
+    xs = C.take_nodes(x_src_tab, src, mask, node_spec, shuffle)
+    xd = C.take_nodes(x_dst_tab, dst, mask, node_spec, shuffle)
+    e_in = jnp.concatenate([e_feat, xs, xd], -1)
+    e = e_feat + C.layer_norm(C.mlp(p["edge"], e_in)).astype(e_feat.dtype)
+    agg = C.aggregate_nodes(e, dst, n_dst, mask, node_spec, shuffle)
+    x = x_dst_tab + C.layer_norm(
+        C.mlp(p["node"], jnp.concatenate([x_dst_tab, agg], -1))
+    ).astype(x_dst_tab.dtype)
+    return e, C.constrain_nodes(x, node_spec)
+
+
+def _pick_chunks(e: int, want: int) -> int:
+    """Largest divisor of e//512 that is <= want (chunks must keep the
+    512-way edge sharding divisible)."""
+    base = max(1, e // 512)
+    best = 1
+    for k in range(1, min(want, base) + 1):
+        if base % k == 0:
+            best = k
+    return best
+
+
+def _bipartite_block_streamed(p, enc_p, raw_ef, x_src_tab, x_dst_tab, src,
+                              dst, mask, n_dst, node_spec, n_chunks):
+    """iter 5 (§Perf): one-shot edge sets (g2m / m2g) processed in chunks —
+    encode chunk → shuffle-gather endpoints → edge MLP → shuffle-scatter
+    partial aggregate. No O(E·d) tensor is ever resident."""
+    e = src.shape[0]
+    n_chunks = _pick_chunks(e, n_chunks)
+    c = e // n_chunks
+    dt = x_dst_tab.dtype
+    d = x_dst_tab.shape[-1]
+
+    def chunked(a):
+        return a.reshape((n_chunks, c) + a.shape[1:])
+
+    def body(agg, inp):
+        ef_c, src_c, dst_c, m_c = inp
+        e_enc = C.layer_norm(C.mlp(enc_p, ef_c.astype(dt))).astype(dt)
+        xs = C.take_nodes(x_src_tab, src_c, m_c, node_spec, True)
+        xd = C.take_nodes(x_dst_tab, dst_c, m_c, node_spec, True)
+        e_in = jnp.concatenate([e_enc, xs, xd], -1)
+        e_out = e_enc + C.layer_norm(C.mlp(p["edge"], e_in)).astype(dt)
+        agg = agg + C.aggregate_nodes(e_out, dst_c, n_dst, m_c, node_spec,
+                                      True)
+        return C.constrain_nodes(agg, node_spec), None
+
+    agg0 = C.constrain_nodes(jnp.zeros((n_dst, d), dt), node_spec)
+    agg, _ = jax.lax.scan(
+        body, agg0, (chunked(raw_ef), chunked(src), chunked(dst),
+                     chunked(mask)))
+    x = x_dst_tab + C.layer_norm(
+        C.mlp(p["node"], jnp.concatenate([x_dst_tab, agg], -1))
+    ).astype(dt)
+    return C.constrain_nodes(x, node_spec)
+
+
+def apply(params: dict, g: C.GraphBatch, cfg: GraphCastConfig) -> jax.Array:
+    ex = g.extras
+    n_grid = g.n_nodes
+    n_mesh = ex["mesh_feat_init"].shape[0]
+    ns = cfg.node_spec
+    dt = cfg.compute_dtype
+    xg = C.constrain_nodes(
+        C.layer_norm(C.mlp(params["enc_grid"],
+                           g.node_feat.astype(dt))).astype(dt), ns)
+    xm = C.constrain_nodes(
+        jnp.broadcast_to(params["mesh_init"].astype(dt),
+                         (n_mesh, cfg.d_hidden)), ns)
+    blk = (jax.checkpoint(_bipartite_block, static_argnums=(7, 8, 9))
+           if cfg.remat else _bipartite_block)
+    sg = cfg.shuffle_gather
+    stream = cfg.edge_stream_chunks
+    if stream:  # iter 5: one-shot edge sets never materialize at O(E·d)
+        sblk = (jax.checkpoint(_bipartite_block_streamed,
+                               static_argnums=(8, 9, 10))
+                if cfg.remat else _bipartite_block_streamed)
+        xm = sblk(params["g2m"], params["enc_g2m_edge"], ex["g2m_feat"],
+                  xg, xm, g.src, g.dst, g.edge_mask, n_mesh, ns, stream)
+    else:
+        # encoder: grid -> mesh (edges of the GraphBatch ARE the g2m set)
+        e_g2m = C.layer_norm(C.mlp(params["enc_g2m_edge"],
+                                   ex["g2m_feat"].astype(dt))).astype(dt)
+        _, xm = blk(params["g2m"], e_g2m, xg, xm, g.src,
+                    g.dst, g.edge_mask, n_mesh, ns, sg)
+    # processor: 16 interaction layers on the mesh graph (edge features are
+    # carried across layers, so these stay resident — mesh edges are small)
+    e_m = C.layer_norm(C.mlp(params["enc_mesh_edge"],
+                             ex["mesh_edge_feat"].astype(dt))).astype(dt)
+    for p in params["processor"]:
+        e_m, xm = blk(p, e_m, xm, xm, ex["mesh_src"],
+                      ex["mesh_dst"], ex["mesh_mask"], n_mesh, ns, sg)
+    # decoder: mesh -> grid
+    if stream:
+        xg = sblk(params["m2g"], params["enc_m2g_edge"], ex["m2g_feat"],
+                  xm, xg, ex["m2g_src"], ex["m2g_dst"], ex["m2g_mask"],
+                  n_grid, ns, stream)
+    else:
+        e_m2g = C.layer_norm(C.mlp(params["enc_m2g_edge"],
+                                   ex["m2g_feat"].astype(dt))).astype(dt)
+        _, xg = blk(params["m2g"], e_m2g, xm, xg, ex["m2g_src"],
+                    ex["m2g_dst"], ex["m2g_mask"], n_grid, ns, sg)
+    out = C.mlp(params["dec_grid"], xg).astype(jnp.float32)
+    return jnp.where(g.node_mask[:, None], out, 0.0)
+
+
+def loss_fn(params, g: C.GraphBatch, cfg: GraphCastConfig):
+    pred = apply(params, g, cfg)
+    return C.mse_loss(pred, g.extras["targets"], g.node_mask)

@@ -1,0 +1,81 @@
+"""MeshGraphNet (arXiv:2010.03409): encode-process-decode with residual
+edge/node update blocks. n_layers=15, d=128, 2-layer MLPs + LayerNorm.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8
+    d_edge_in: int = 4
+    d_out: int = 3
+    # §Perf iterations 1-4: axes the node dim shards over on large graphs
+    node_spec: tuple[str, ...] = ()
+    remat: bool = False
+    compute_dtype: object = None  # set to jnp.bfloat16 on large graphs
+    shuffle_gather: bool = False  # MapSQ shuffle gather/scatter (iter 4)
+
+
+def _mlp_sizes(cfg: MGNConfig, d_in: int) -> list[int]:
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def init_params(key: jax.Array, cfg: MGNConfig) -> dict:
+    ks = iter(jax.random.split(key, 3 + 2 * cfg.n_layers))
+    d = cfg.d_hidden
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append({
+            "edge": C.init_mlp(next(ks), _mlp_sizes(cfg, 3 * d)),
+            "node": C.init_mlp(next(ks), _mlp_sizes(cfg, 2 * d)),
+        })
+    return {
+        "enc_node": C.init_mlp(next(ks), _mlp_sizes(cfg, cfg.d_node_in)),
+        "enc_edge": C.init_mlp(next(ks), _mlp_sizes(cfg, cfg.d_edge_in)),
+        "blocks": blocks,
+        "dec": C.init_mlp(next(ks), [d, d, cfg.d_out]),
+    }
+
+
+def apply(params: dict, g: C.GraphBatch, cfg: MGNConfig) -> jax.Array:
+    n = g.n_nodes
+    ns = cfg.node_spec
+    dt = cfg.compute_dtype or g.node_feat.dtype
+    x = C.constrain_nodes(
+        C.layer_norm(C.mlp(params["enc_node"],
+                           g.node_feat.astype(dt))).astype(dt), ns)
+    e = C.layer_norm(C.mlp(params["enc_edge"],
+                           g.extras["edge_feat"].astype(dt))).astype(dt)
+
+    sg = cfg.shuffle_gather
+
+    def block(p, x, e):
+        xs = C.take_nodes(x, g.src, g.edge_mask, ns, sg)
+        xd = C.take_nodes(x, g.dst, g.edge_mask, ns, sg)
+        e_in = jnp.concatenate([e, xs, xd], axis=-1)
+        e = e + C.layer_norm(C.mlp(p["edge"], e_in)).astype(dt)
+        agg = C.aggregate_nodes(e, g.dst, n, g.edge_mask, ns, sg)
+        x = x + C.layer_norm(
+            C.mlp(p["node"], jnp.concatenate([x, agg], -1))).astype(dt)
+        return C.constrain_nodes(x, ns), e
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    for p in params["blocks"]:
+        x, e = blk(p, x, e)
+    out = C.mlp(params["dec"], x)
+    return jnp.where(g.node_mask[:, None], out, 0.0)
+
+
+def loss_fn(params, g: C.GraphBatch, cfg: MGNConfig):
+    pred = apply(params, g, cfg)
+    return C.mse_loss(pred, g.extras["targets"], g.node_mask)

@@ -1,0 +1,213 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked
+online-softmax for long prefill), SwiGLU FFN.
+
+Everything is shape-static and scan-friendly: per-layer weights arrive as
+pytrees of arrays WITHOUT the layer axis (the caller scans over stacked
+weights), and attention takes an `is_global` scalar so local/global layer
+patterns (gemma3's 5:1) stay branch-free inside `lax.scan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    d_half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(0, d_half, dtype=jnp.float32) / d_half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, d_half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (D, H*Dh)
+    wk: jax.Array  # (D, K*Dh)
+    wv: jax.Array  # (D, K*Dh)
+    wo: jax.Array  # (H*Dh, D)
+    bq: jax.Array | None = None  # (H*Dh,) — qwen-style QKV bias
+    bk: jax.Array | None = None
+    bv: jax.Array | None = None
+
+
+def _project_qkv(p: AttnParams, x: jax.Array, n_heads: int, n_kv: int, d_head: int):
+    b, s, _ = x.shape
+    q = x @ p.wq
+    k = x @ p.wk
+    v = x @ p.wv
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    return (
+        q.reshape(b, s, n_heads, d_head),
+        k.reshape(b, s, n_kv, d_head),
+        v.reshape(b, s, n_kv, d_head),
+    )
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """GQA scores without materializing repeated KV.
+
+    q: (B, Sq, H, Dh) grouped as (B, Sq, K, G, Dh); k: (B, Sk, K, Dh).
+    Returns (B, K, G, Sq, Sk) float32.
+    """
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, dh)
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+
+
+def _grouped_values(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B, K, G, Sq, Sk), v: (B, Sk, K, Dh) -> (B, Sq, H, Dh)."""
+    b, kheads, g, sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, kheads * g, v.shape[-1])
+
+
+def attention_prefill(
+    p: AttnParams,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    is_global,
+    window: int,
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+):
+    """Causal self-attention, chunked over KV (online softmax).
+
+    Never materializes the full (Sq, Sk) score matrix: a `lax.scan` walks KV
+    chunks carrying running (max, sum, out) — the standard flash-attention
+    recurrence in pure JAX. `is_global` is a traced bool scalar: local layers
+    add a sliding-window mask of width `window` (branch-free, one code path
+    for gemma3's 5:1 local:global pattern).
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, d_head)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    sc = scale if scale is not None else d_head**-0.5
+    q = q * sc
+
+    n_chunks = max(1, s // kv_chunk)
+    ck = k.reshape(b, n_chunks, kv_chunk, n_kv, d_head).transpose(1, 0, 2, 3, 4)
+    cv = v.reshape(b, n_chunks, kv_chunk, n_kv, d_head).transpose(1, 0, 2, 3, 4)
+    g = n_heads // n_kv
+    q_idx = jnp.arange(s, dtype=jnp.int32)
+
+    def step(carry, chunk):
+        m, l, o = carry
+        kc, vc, c0 = chunk  # kc/vc: (B, C, K, Dh); c0: chunk start offset
+        sc_ = _grouped_scores(q, kc)  # (B, K, G, Sq, C)
+        k_idx = c0 + jnp.arange(kv_chunk, dtype=jnp.int32)
+        causal = q_idx[:, None] >= k_idx[None, :]
+        in_window = (q_idx[:, None] - k_idx[None, :]) < window
+        mask = causal & (is_global | in_window)
+        sc_ = jnp.where(mask[None, None, None], sc_, NEG_INF)
+        m_new = jnp.maximum(m, sc_.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(sc_ - m_new[..., None])
+        l_new = l * alpha + pr.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", pr, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, n_kv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, s), jnp.float32)
+    o0 = jnp.zeros((b, n_kv, g, s, d_head), jnp.float32)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * kv_chunk
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (ck, cv, starts))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, s, n_heads * d_head)  # (B,S,H*Dh)
+    return o.astype(x.dtype) @ p.wo
+
+
+def attention_decode(
+    p: AttnParams,
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    is_global,
+    window: int,
+    scale: float | None = None,
+):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); caches: (B, S_max, K, Dh); cache_len: () current length.
+    Returns (attn_out (B, 1, D), k_cache', v_cache'). Linear in S_max —
+    decode is sub-quadratic by construction, which is why `long_500k` runs
+    for every LM arch (see DESIGN.md §6).
+    """
+    b, _, _ = x.shape
+    s_max = k_cache.shape[1]
+    pos = cache_len  # scalar: write position of the new token
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv, d_head)
+    q = rope(q, pos[None, None].astype(jnp.int32), rope_theta)
+    k_new = rope(k_new, pos[None, None].astype(jnp.int32), rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0)
+    )
+    sc = scale if scale is not None else d_head**-0.5
+    scores = _grouped_scores(q * sc, k_cache)  # (B, K, G, 1, S_max)
+    k_idx = jnp.arange(s_max, dtype=jnp.int32)
+    visible = k_idx <= pos
+    in_window = (pos - k_idx) < window
+    mask = visible & (is_global | in_window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = _grouped_values(probs, v_cache)  # (B, 1, H, Dh)
+    o = o.reshape(b, 1, n_heads * d_head).astype(x.dtype)
+    return o @ p.wo, k_cache, v_cache
+
+
+class FFNParams(NamedTuple):
+    w_gate: jax.Array  # (D, F)
+    w_up: jax.Array  # (D, F)
+    w_down: jax.Array  # (F, D)
+
+
+def swiglu_ffn(p: FFNParams, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p.w_gate) * (x @ p.w_up)) @ p.w_down
+
+
+@dataclasses.dataclass(frozen=True)
+class InitSpec:
+    fan_in_scaled: bool = True
+
+
+def dense_init(key, shape, fan_in: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * fan_in**-0.5).astype(dtype)

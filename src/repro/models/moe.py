@@ -1,0 +1,265 @@
+"""Mixture-of-Experts FFN with MapSQ-style sort-based expert-parallel dispatch.
+
+The MoE token→expert exchange IS the paper's MapReduce join (DESIGN.md §3):
+
+  Map    — every (token, expert-choice) assignment is tagged with its
+           destination chip (expert owner), exactly the paper's key tagging;
+  Sort   — assignments are sorted by destination (``route_plan``);
+  Shuffle— one ``all_to_all`` over the expert (model) mesh axis moves token
+           vectors to expert owners — the MapReduce shuffle as a collective;
+  Reduce — on the expert side a second sort groups rows into contiguous
+           per-expert segments for the grouped GEMM; the weighted combine
+           back on the token side is the segment-sum reduce.
+
+Two realizations, one logical join:
+  * ``moe_ffn_ep_local`` — the shard_map expert-parallel path for training
+    and prefill (tokens sharded over the model axis, sort-based dispatch).
+  * ``moe_ffn_onehot`` — a GShard-style one-hot-dispatch einsum used at
+    decode time, where per-shard token counts are too small (< #chips) to
+    shard; the dispatch/combine tensors stay tiny because T is tiny.
+
+Expert counts that don't divide the mesh axis (granite's 40 experts on a
+16-way axis) are padded to the next multiple; padded experts get -inf router
+logits and are never selected (20% dead weight memory for granite, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segments import segment_offsets_from_sorted
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array  # (D, E_pad)
+    we_gate: jax.Array  # (E_pad, D, Fe)
+    we_up: jax.Array  # (E_pad, D, Fe)
+    we_down: jax.Array  # (E_pad, Fe, D)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    capacity_factor: float = 2.0
+
+    def e_pad(self, ep: int) -> int:
+        return ((self.n_experts + ep - 1) // ep) * ep
+
+
+# ---------------------------------------------------------------------------
+# Routing machinery (the Map + Sort phases, shared with core/distributed)
+# ---------------------------------------------------------------------------
+
+def route_plan(part: jax.Array, valid: jax.Array, num_parts: int, cap: int):
+    """Sort rows by destination partition and assign buffer slots.
+
+    Returns (order, slot, ok):
+      order — permutation sorting rows by destination (stable);
+      slot  — flat index into a (num_parts, cap) buffer, for sorted row j;
+      ok    — sorted-row validity (dest in range, within capacity).
+    """
+    n = part.shape[0]
+    part = jnp.where(valid, part, num_parts).astype(jnp.int32)
+    order = jnp.argsort(part, stable=True)
+    part_s = part[order]
+    offsets = segment_offsets_from_sorted(part_s, num_parts)
+    pos = jnp.arange(n, dtype=jnp.int32) - offsets[jnp.clip(part_s, 0, num_parts - 1)]
+    ok = (part_s < num_parts) & (pos < cap)
+    slot = jnp.where(ok, part_s * cap + pos, num_parts * cap)
+    return order, slot, ok
+
+
+def scatter_to_buckets(data, order, slot, ok, num_parts: int, cap: int):
+    """Pack rows (in original order) into a (num_parts, cap, ...) buffer."""
+    trail = data.shape[1:]
+    src = data[order]
+    mask = ok.reshape((-1,) + (1,) * len(trail))
+    buf = jnp.zeros((num_parts * cap,) + trail, data.dtype)
+    buf = buf.at[slot].set(jnp.where(mask, src, 0), mode="drop")
+    return buf.reshape((num_parts, cap) + trail)
+
+
+def gather_from_buckets(buf, order, slot, ok, n_rows: int):
+    """Inverse of scatter_to_buckets: recover per-row values (original order).
+    Rows that were dropped (not ok) come back as zeros."""
+    flat = buf.reshape((-1,) + buf.shape[2:])
+    res_sorted = flat[jnp.clip(slot, 0, flat.shape[0] - 1)]
+    mask = ok.reshape((-1,) + (1,) * (flat.ndim - 1))
+    res_sorted = jnp.where(mask, res_sorted, 0)
+    out = jnp.zeros((n_rows,) + flat.shape[1:], flat.dtype)
+    return out.at[order].set(res_sorted)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path (training / prefill) — runs INSIDE shard_map
+# ---------------------------------------------------------------------------
+
+def moe_ffn_ep_local(
+    p: MoEParams,
+    x: jax.Array,
+    st: MoESettings,
+    *,
+    expert_axis: str,
+):
+    """Per-device body of the EP MoE layer.
+
+    x: (B_loc, S_loc, D) — this device's token shard (S split over the
+    expert/model axis by shard_map's in_spec, so every token exists exactly
+    once per data-parallel group; gradients are exact).
+    p: this device's expert shard — we_*: (e_local, ...), router replicated.
+    """
+    ep = jax.lax.axis_size(expert_axis)
+    er = jax.lax.axis_index(expert_axis)
+    b, s_loc, d = x.shape
+    t_my = b * s_loc
+    e_pad = st.e_pad(ep)
+    e_local = e_pad // ep
+    k = st.top_k
+
+    x_my = x.reshape(t_my, d)
+    # Router (Map phase: key = expert id).
+    logits = x_my.astype(jnp.float32) @ p.router.astype(jnp.float32)
+    logits = jnp.where(jnp.arange(e_pad) < st.n_experts, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)  # (t_my, k)
+
+    a_e = eidx.reshape(-1).astype(jnp.int32)  # (A,) assignment expert ids
+    a_tok = jnp.repeat(jnp.arange(t_my, dtype=jnp.int32), k)
+    a_gate = gate_vals.reshape(-1)
+    n_assign = a_e.shape[0]
+
+    # Sort + bucketize by destination chip, shuffle (all_to_all).
+    chip_cap = _round8(int(n_assign / ep * st.capacity_factor) + 8)
+    dest = a_e // e_local
+    order, slot, ok = route_plan(dest, jnp.ones((n_assign,), bool), ep, chip_cap)
+    send_x = scatter_to_buckets(x_my[a_tok], order, slot, ok, ep, chip_cap)
+    send_e = scatter_to_buckets(a_e, order, slot, ok, ep, chip_cap)
+    send_v = scatter_to_buckets(
+        jnp.ones((n_assign,), jnp.int32), order, slot, ok, ep, chip_cap
+    )
+    recv_x = jax.lax.all_to_all(send_x, expert_axis, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, expert_axis, 0, 0, tiled=False)
+    recv_v = jax.lax.all_to_all(send_v, expert_axis, 0, 0, tiled=False)
+
+    # Expert-side Reduce: second sort groups rows into per-expert segments.
+    n_recv = ep * chip_cap
+    rx = recv_x.reshape(n_recv, d)
+    re_loc = recv_e.reshape(-1) - er * e_local
+    rv = recv_v.reshape(-1) > 0
+    expert_cap = _round8(int(n_assign / e_local * st.capacity_factor) + 8)
+    order2, slot2, ok2 = route_plan(re_loc, rv, e_local, expert_cap)
+    ebuf = scatter_to_buckets(rx, order2, slot2, ok2, e_local, expert_cap)
+
+    # Grouped GEMM over contiguous expert segments (SwiGLU experts).
+    g = jnp.einsum("ecd,edf->ecf", ebuf, p.we_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", ebuf, p.we_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    eout = jnp.einsum("ecf,efd->ecd", h, p.we_down,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # Return trip: un-bucket on the expert side, shuffle back, un-bucket at
+    # the sender, weighted segment-sum combine over each token's k slots.
+    res_recv = gather_from_buckets(eout, order2, slot2, ok2, n_recv)
+    back = jax.lax.all_to_all(
+        res_recv.reshape(ep, chip_cap, d), expert_axis, 0, 0, tiled=False
+    )
+    res_asn = gather_from_buckets(back, order, slot, ok, n_assign)
+    combined = jnp.zeros((t_my, d), jnp.float32)
+    combined = combined.at[a_tok].add(
+        res_asn.astype(jnp.float32) * a_gate[:, None]
+    )
+    return combined.astype(x.dtype).reshape(b, s_loc, d)
+
+
+def _round8(n: int) -> int:
+    return ((n + 7) // 8) * 8
+
+
+# ---------------------------------------------------------------------------
+# One-hot dispatch path (decode: tiny per-shard token counts) — plain pjit
+# ---------------------------------------------------------------------------
+
+def moe_ffn_onehot(p: MoEParams, x: jax.Array, st: MoESettings, e_pad: int,
+                   capacity: int | None = None):
+    """GShard-style dispatch/combine einsum MoE for small T (decode).
+
+    x: (B, S, D) with B*S small. The (T, E, C) dispatch tensor is the dense
+    materialization of the same token↔expert join; it is only affordable
+    because T is tiny at decode time.
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = st.top_k
+    cap = capacity or _round8(max(k, int(t * k / st.n_experts * 4) + 1))
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p.router.astype(jnp.float32)
+    logits = jnp.where(jnp.arange(e_pad) < st.n_experts, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    onehot = jax.nn.one_hot(eidx, e_pad, dtype=jnp.int32)  # (T, k, E)
+    # position of each assignment within its expert (running count over T*k)
+    flat = onehot.reshape(t * k, e_pad)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (T*k, E)
+    pos = pos.reshape(t, k, e_pad)
+    within = pos < cap
+    disp = (onehot * within).astype(x.dtype)  # (T, k, E)
+    # dispatch tensor (T, E, C): 1 where token t goes to expert e slot c
+    posc = jnp.sum(pos * onehot, axis=-1)  # (T, k) slot per assignment
+    dmask = jnp.einsum("tke,tkc->tec", disp,
+                       jax.nn.one_hot(posc, cap, dtype=x.dtype))
+    xe = jnp.einsum("tec,td->ecd", dmask, xf)  # (E, C, D)
+    g = jnp.einsum("ecd,edf->ecf", xe, p.we_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, p.we_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    eo = jnp.einsum("ecf,efd->ecd", h, p.we_down,
+                    preferred_element_type=jnp.float32).astype(jnp.float32)
+    comb = jnp.einsum("tke,tkc->tec", disp * gate_vals[..., None].astype(x.dtype),
+                      jax.nn.one_hot(posc, cap, dtype=x.dtype)).astype(jnp.float32)
+    y = jnp.einsum("tec,ecd->td", comb, eo)
+    return y.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_aux_loss(p: MoEParams, x: jax.Array, st: MoESettings, e_pad: int):
+    """Switch-style load-balance loss, computed in the pjit world (cheap:
+    one (T, E) router matmul; the EP path doesn't have to export stats)."""
+    xf = x.reshape(-1, x.shape[-1])
+    logits = xf.astype(jnp.float32) @ p.router.astype(jnp.float32)
+    logits = jnp.where(jnp.arange(e_pad) < st.n_experts, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = jax.lax.top_k(probs, st.top_k)
+    f = jnp.mean(
+        jax.nn.one_hot(eidx, e_pad, dtype=jnp.float32).sum(axis=1), axis=0
+    )
+    pmean = jnp.mean(probs, axis=0)
+    return st.n_experts * jnp.sum(f * pmean) / st.top_k
+
+
+def init_moe_params(key, d_model: int, st: MoESettings, ep: int, dtype):
+    e_pad = st.e_pad(ep)
+    ks = jax.random.split(key, 4)
+    fe = st.d_expert_ff
+    live = (jnp.arange(e_pad) < st.n_experts).astype(jnp.float32)
+
+    def w(k, shape, fan_in):
+        arr = jax.random.normal(k, shape, jnp.float32) * fan_in**-0.5
+        return (arr * live[:, None, None]).astype(dtype)
+
+    router = (
+        jax.random.normal(ks[0], (d_model, e_pad), jnp.float32) * d_model**-0.5
+    ).astype(jnp.float32)
+    return MoEParams(
+        router=router,
+        we_gate=w(ks[1], (e_pad, d_model, fe), d_model),
+        we_up=w(ks[2], (e_pad, d_model, fe), d_model),
+        we_down=w(ks[3], (e_pad, fe, d_model), fe),
+    )

@@ -1,0 +1,166 @@
+"""DeepFM (arXiv:1703.04247): sparse embedding tables → FM interaction →
+deep MLP. The embedding LOOKUP is the hot path and JAX has no EmbeddingBag —
+we build it from `jnp.take` + `segment_sum` (local form) and, distributed,
+as the MapSQ shuffle: ids routed to the table shard that owns them over the
+"model" axis (sort → bucketize → all_to_all), rows shipped back, combined.
+This reuses moe.route_plan / scatter / gather — one join, three consumers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as M
+from repro.models.gnn.common import init_mlp, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    n_sparse: int = 39
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    rows_per_field: int = 860_000  # ~33.5M rows total (Criteo-scale)
+    n_item_fields: int = 3  # retrieval: fields forming the item tower
+    shuffle_capacity_factor: float = 1.5
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sparse * self.rows_per_field
+
+
+def init_params(key: jax.Array, cfg: DeepFMConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in = cfg.n_sparse * cfg.embed_dim
+    return {
+        "table": jax.random.normal(
+            k1, (cfg.total_rows, cfg.embed_dim), jnp.float32
+        ) * 0.01,
+        "fm_w": jax.random.normal(k2, (cfg.total_rows, 1), jnp.float32) * 0.01,
+        "mlp": init_mlp(k3, [d_in, *cfg.mlp_dims, 1]),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def param_specs(cfg: DeepFMConfig) -> dict:
+    return {
+        "table": P("model", None),  # row-sharded: the huge array
+        "fm_w": P("model", None),
+        "mlp": [{"w": P(None, None), "b": P(None)} for _ in
+                range(len(cfg.mlp_dims) + 1)],
+        "bias": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def embedding_bag_local(table: jax.Array, flat_ids: jax.Array,
+                        bag_ids: jax.Array, n_bags: int) -> jax.Array:
+    """Single-device EmbeddingBag: take + sorted segment_sum (the oracle)."""
+    rows = jnp.take(table, jnp.clip(flat_ids, 0, table.shape[0] - 1), axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags,
+                               indices_are_sorted=True)
+
+
+def _sharded_lookup_local(table_shard, ids, *, expert_axis: str, cap: int):
+    """shard_map body: route each id to its owner shard, gather, route back.
+
+    table_shard: (R_local, D) — this chip's row range;
+    ids: (n_local,) — this chip's slice of the flattened id stream.
+    Returns (n_local, D) embedding rows.
+    """
+    ep = jax.lax.axis_size(expert_axis)
+    er = jax.lax.axis_index(expert_axis)
+    r_local = table_shard.shape[0]
+    n = ids.shape[0]
+    owner = (ids // r_local).astype(jnp.int32)
+    order, slot, ok = M.route_plan(owner, jnp.ones((n,), bool), ep, cap)
+    send_ids = M.scatter_to_buckets(ids.astype(jnp.int32), order, slot, ok,
+                                    ep, cap)
+    recv_ids = jax.lax.all_to_all(send_ids, expert_axis, 0, 0, tiled=False)
+    local_idx = jnp.clip(recv_ids - er * r_local, 0, r_local - 1)
+    rows = jnp.take(table_shard, local_idx.reshape(-1), axis=0)
+    back = jax.lax.all_to_all(rows.reshape(ep, cap, -1), expert_axis, 0, 0,
+                              tiled=False)
+    return M.gather_from_buckets(back, order, slot, ok, n)
+
+
+def make_sharded_lookup(mesh, dp: tuple[str, ...], cap: int):
+    """jit-compatible distributed lookup: ids (n_flat,) sharded over
+    (dp..., model) jointly; table (R, D) row-sharded on model."""
+    spec_ids = P(dp + ("model",))
+    return jax.shard_map(
+        partial(_sharded_lookup_local, expert_axis="model", cap=cap),
+        mesh=mesh,
+        in_specs=(P("model", None), spec_ids),
+        out_specs=P(dp + ("model",), None),
+        check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _lookup(params, ids, cfg, lookup_fn):
+    """ids: (B, F) field-offset-free ids in [0, rows_per_field). Returns
+    (emb (B, F, D), fm1 (B, F))."""
+    b, f = ids.shape
+    offsets = (jnp.arange(f, dtype=jnp.int32) * cfg.rows_per_field)[None]
+    flat = (ids + offsets).reshape(-1)
+    if lookup_fn is None:
+        emb = embedding_bag_local(params["table"], flat,
+                                  jnp.arange(flat.shape[0]), flat.shape[0])
+        fm1 = embedding_bag_local(params["fm_w"], flat,
+                                  jnp.arange(flat.shape[0]), flat.shape[0])
+    else:
+        emb = lookup_fn(params["table"], flat)
+        fm1 = lookup_fn(params["fm_w"], flat)
+    return emb.reshape(b, f, cfg.embed_dim), fm1.reshape(b, f)
+
+
+def forward(params: dict, ids: jax.Array, cfg: DeepFMConfig,
+            lookup_fn=None) -> jax.Array:
+    """CTR logits (B,). ids: (B, n_sparse) int32."""
+    emb, fm1 = _lookup(params, ids, cfg, lookup_fn)
+    # FM second order: 0.5 * ((Σv)² − Σv²), summed over embed dim
+    s = jnp.sum(emb, axis=1)
+    fm2 = 0.5 * jnp.sum(s * s - jnp.sum(emb * emb, axis=1), axis=-1)
+    deep = mlp(params["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return params["bias"] + fm1.sum(axis=1) + fm2 + deep
+
+
+def bce_loss(params, ids, labels, cfg, lookup_fn=None):
+    logits = forward(params, ids, cfg, lookup_fn)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_scores(params: dict, user_ids: jax.Array, cand_ids: jax.Array,
+                     cfg: DeepFMConfig, lookup_fn=None) -> jax.Array:
+    """Score 1 query against n_candidates items: batched dot, not a loop.
+
+    user_ids: (1, n_sparse); cand_ids: (n_cand, n_item_fields).
+    Item tower = sum of item-field embeddings; score = item · user.
+    The user tower is a handful of rows — always the local gather path
+    (a 39-id shuffle can't shard over 256+ chips, and shouldn't).
+    """
+    emb_u, _ = _lookup(params, user_ids, cfg, None)
+    u = jnp.sum(emb_u[0], axis=0)  # (D,)
+    b, f = cand_ids.shape
+    offsets = (jnp.arange(f, dtype=jnp.int32) * cfg.rows_per_field)[None]
+    flat = (cand_ids + offsets).reshape(-1)
+    if lookup_fn is None:
+        rows = jnp.take(params["table"],
+                        jnp.clip(flat, 0, cfg.total_rows - 1), axis=0)
+    else:
+        rows = lookup_fn(params["table"], flat)
+    items = rows.reshape(b, f, cfg.embed_dim).sum(axis=1)  # (n_cand, D)
+    return items @ u

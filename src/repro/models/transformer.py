@@ -1,0 +1,642 @@
+"""LM transformer family: one config covers the five assigned archs
+(olmoe-1b-7b, granite-moe-3b-a800m, qwen2.5-32b, gemma3-1b, deepseek-67b).
+
+Structure: weights are stacked per-layer pytrees scanned with `lax.scan`
+(small HLO, fast multi-pod compiles); attention is chunked online-softmax
+(flash recurrence in pure JAX — never materializes S×S); MoE layers use the
+MapSQ sort-based EP dispatch (models/moe.py) under shard_map for train /
+prefill and the one-hot einsum at decode.
+
+Sharding posture (see DESIGN.md §5):
+  * batch on ("pod","data"), Megatron TP on "model" (heads / FFN / vocab);
+  * residual stream sequence-sharded on "model" between layers (SP) so
+    saved activations divide by the model axis;
+  * `fsdp=True` archs (qwen-32b, deepseek-67b) additionally shard weight
+    matrices over "data" — GSPMD materializes the per-layer all-gather /
+    reduce-scatter schedule (ZeRO-3);
+  * optimizer state always gets a ZeRO-1 extra "data" sharding (launch/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert_ff: int = 0
+    capacity_factor: float = 2.0
+    # attention pattern
+    sliding_window: int = 0  # 0 -> full attention in every layer
+    global_every: int = 0  # gemma3: every Nth layer global (5:1 -> 6)
+    qkv_bias: bool = False  # qwen
+    qk_norm: bool = False  # gemma3
+    rope_theta: float = 1e4
+    rope_theta_local: float = 0.0  # gemma3 local layers (0 -> same)
+    embed_scale: bool = False  # gemma: x *= sqrt(d_model)
+    tied_embeddings: bool = False
+    # distribution
+    fsdp: bool = False
+    seq_shard: bool = True
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    kv_chunk: int = 1024
+    # Fully unroll the layer scan. Used by the dry-run's cost probes:
+    # XLA's cost_analysis counts a while-loop body ONCE, so only an
+    # unrolled module yields true FLOP/byte/collective counts.
+    scan_unroll: bool = False
+    # §Perf iteration (deepseek/qwen train): fuse head-projection + CE in
+    # sequence chunks so the (B, S, V) logits tensor never materializes.
+    # 0 = off (loss over full logits).
+    ce_chunk: int = 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Physical vocab rows: padded to 256 so the embedding/head shard
+        over any mesh axis combination (padding logits are masked out)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def moe_settings(self) -> M.MoESettings:
+        return M.MoESettings(
+            self.n_experts, self.top_k, self.d_expert_ff, self.capacity_factor
+        )
+
+    def is_global_layers(self) -> jnp.ndarray:
+        idx = jnp.arange(self.n_layers)
+        if self.global_every <= 0:
+            return jnp.ones((self.n_layers,), bool)
+        return (idx + 1) % self.global_every == 0
+
+    def rope_thetas(self) -> jnp.ndarray:
+        base = jnp.full((self.n_layers,), self.rope_theta, jnp.float32)
+        if self.rope_theta_local <= 0 or self.global_every <= 0:
+            return base
+        return jnp.where(
+            self.is_global_layers(), base, self.rope_theta_local
+        )
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: TransformerConfig, ep: int = 1) -> dict:
+    """`ep` = size of the expert/model axis (for expert padding)."""
+    ks = iter(jax.random.split(key, 32))
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    lyr = cfg.n_layers
+    dt = cfg.dtype
+
+    def w(shape, fan_in):
+        return L.dense_init(next(ks), shape, fan_in, dt)
+
+    attn = {
+        "wq": w((lyr, d, h * dh), d),
+        "wk": w((lyr, d, kv * dh), d),
+        "wv": w((lyr, d, kv * dh), d),
+        "wo": w((lyr, h * dh, d), h * dh),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((lyr, h * dh), dt)
+        attn["bk"] = jnp.zeros((lyr, kv * dh), dt)
+        attn["bv"] = jnp.zeros((lyr, kv * dh), dt)
+    if cfg.qk_norm:
+        attn["qnorm"] = jnp.zeros((lyr, dh), dt)
+        attn["knorm"] = jnp.zeros((lyr, dh), dt)
+    blocks: dict[str, Any] = {
+        "ln1": jnp.zeros((lyr, d), dt),
+        "ln2": jnp.zeros((lyr, d), dt),
+        "attn": attn,
+    }
+    if cfg.is_moe:
+        st = cfg.moe_settings()
+        moe0 = M.init_moe_params(next(ks), d, st, ep, dt)
+        blocks["moe"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (lyr,) + a.shape), moe0
+        )._asdict()
+    else:
+        blocks["ffn"] = {
+            "w_gate": w((lyr, d, cfg.d_ff), d),
+            "w_up": w((lyr, d, cfg.d_ff), d),
+            "w_down": w((lyr, cfg.d_ff, d), cfg.d_ff),
+        }
+    params = {
+        "embed": w((cfg.padded_vocab, d), d),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((d,), dt),
+    }
+    if not cfg.tied_embeddings:
+        params["head"] = w((d, cfg.padded_vocab), d)
+    return params
+
+
+def count_params(cfg: TransformerConfig, ep: int = 1) -> tuple[int, int]:
+    """(total, active) parameter counts — active discounts unused experts."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg, ep),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(int(math.prod(a.shape)) for a in jax.tree.leaves(shapes))
+    # discount dead vocab-padding rows from the 'useful param' count
+    pad_rows = cfg.padded_vocab - cfg.vocab
+    total -= pad_rows * cfg.d_model * (1 if cfg.tied_embeddings else 2)
+    active = total
+    if cfg.is_moe:
+        st = cfg.moe_settings()
+        e_pad = st.e_pad(ep)
+        per_expert = 3 * cfg.d_model * cfg.d_expert_ff
+        expert_total = cfg.n_layers * e_pad * per_expert
+        expert_active = cfg.n_layers * cfg.top_k * per_expert
+        active = total - expert_total + expert_active
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# Partition specs
+# ---------------------------------------------------------------------------
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def param_specs(cfg: TransformerConfig, multi_pod: bool, model_size: int) -> dict:
+    fs = "data" if cfg.fsdp else None
+    kv_shardable = (cfg.n_kv_heads % model_size == 0)
+    kvs = "model" if kv_shardable else None
+    attn = {
+        "wq": P(None, fs, "model"),
+        "wk": P(None, fs, kvs),
+        "wv": P(None, fs, kvs),
+        "wo": P(None, "model", fs),
+    }
+    if cfg.qkv_bias:
+        attn.update(bq=P(None, "model"), bk=P(None, kvs), bv=P(None, kvs))
+    if cfg.qk_norm:
+        attn.update(qnorm=P(None, None), knorm=P(None, None))
+    blocks: dict[str, Any] = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "attn": attn,
+    }
+    if cfg.is_moe:
+        blocks["moe"] = {
+            "router": P(None, None, None),
+            "we_gate": P(None, "model", fs, None),
+            "we_up": P(None, "model", fs, None),
+            "we_down": P(None, "model", None, fs),
+        }
+    else:
+        blocks["ffn"] = {
+            "w_gate": P(None, fs, "model"),
+            "w_up": P(None, fs, "model"),
+            "w_down": P(None, "model", fs),
+        }
+    specs = {
+        "embed": P("model", fs),
+        "blocks": blocks,
+        "ln_f": P(None),
+    }
+    if not cfg.tied_embeddings:
+        specs["head"] = P(fs, "model")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _moe_specs_one_layer(cfg: TransformerConfig) -> M.MoEParams:
+    return M.MoEParams(
+        router=P(None, None),
+        we_gate=P("model", None, None),
+        we_up=P("model", None, None),
+        we_down=P("model", None, None),
+    )
+
+
+def _forward_trunk(
+    params: dict,
+    tokens: jax.Array,
+    cfg: TransformerConfig,
+    mesh: jax.sharding.Mesh,
+    multi_pod: bool,
+    *,
+    collect_cache: bool = False,
+):
+    """Embed + layer stack + final norm. Returns (x, aux, caches|None)."""
+    dp = dp_axes(multi_pod)
+    sp = "model" if cfg.seq_shard else None
+
+    def _c(arr, spec):  # sharding constraint bound to our mesh
+        return jax.lax.with_sharding_constraint(
+            arr, jax.sharding.NamedSharding(mesh, spec)
+        )
+
+    x_spec = P(dp, sp, None)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x = _c(x, x_spec)
+
+    st = cfg.moe_settings() if cfg.is_moe else None
+    if cfg.is_moe:
+        moe_local = partial(M.moe_ffn_ep_local, st=st, expert_axis="model")
+        token_spec = P(dp, "model", None)
+        moe_ep = jax.shard_map(
+            moe_local,
+            mesh=mesh,
+            in_specs=(_moe_specs_one_layer(cfg), token_spec),
+            out_specs=token_spec,
+            check_vma=False,
+        )
+
+    window = cfg.sliding_window if cfg.sliding_window > 0 else s + 1
+
+    def block(x, xs):
+        p, is_global, theta = xs
+        h = L.rms_norm(x, p["ln1"])
+        ap = L.AttnParams(
+            wq=p["attn"]["wq"], wk=p["attn"]["wk"], wv=p["attn"]["wv"],
+            wo=p["attn"]["wo"],
+            bq=p["attn"].get("bq"), bk=p["attn"].get("bk"),
+            bv=p["attn"].get("bv"),
+        )
+        attn_out, kc, vc = _attention_prefill_cached(
+            ap, h, cfg, is_global=is_global, window=window, theta=theta,
+            qk=(p["attn"].get("qnorm"), p["attn"].get("knorm")),
+        )
+        x = x + attn_out
+        x = _c(x, x_spec)
+        h2 = L.rms_norm(x, p["ln2"])
+        if cfg.is_moe:
+            h2 = _c(h2, P(dp, "model", None))
+            moe_p = M.MoEParams(**{k: p["moe"][k] for k in M.MoEParams._fields})
+            y = moe_ep(moe_p, h2)
+        else:
+            fp = L.FFNParams(**p["ffn"])
+            y = L.swiglu_ffn(fp, h2)
+        x = x + y
+        x = _c(x, x_spec)
+        ys = (kc, vc) if collect_cache else None
+        return x, ys
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    xs = (params["blocks"], cfg.is_global_layers(), cfg.rope_thetas())
+    x, caches = jax.lax.scan(body, x, xs,
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"])
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        # Load-balance loss from the last layer's router on the final
+        # hidden state (cheap proxy; per-layer stats cost one extra scan).
+        moe_p0 = jax.tree.map(lambda a: a[-1], params["blocks"]["moe"])
+        aux = M.moe_aux_loss(
+            M.MoEParams(**moe_p0), x, st, st.e_pad(_axis_size(mesh, "model"))
+        )
+    return x, aux, caches
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: TransformerConfig,
+    mesh: jax.sharding.Mesh,
+    multi_pod: bool,
+    *,
+    collect_cache: bool = False,
+):
+    """Full-sequence forward. Returns (logits, aux_loss, caches|None)."""
+    x, aux, caches = _forward_trunk(
+        params, tokens, cfg, mesh, multi_pod, collect_cache=collect_cache)
+    dp = dp_axes(multi_pod)
+    head = params["embed"].T if cfg.tied_embeddings else params["head"]
+    logits = x @ head.astype(cfg.dtype)
+    if cfg.padded_vocab != cfg.vocab:  # mask dead padding columns
+        logits = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, L.NEG_INF
+        )
+    # S and V can't both sit on "model": keep vocab sharded for the loss.
+    logits = jax.lax.with_sharding_constraint(
+        logits, jax.sharding.NamedSharding(mesh, P(dp, None, "model")))
+    return logits, aux, caches
+
+
+def forward_hidden(params, tokens, cfg, mesh, multi_pod):
+    """forward() up to the final RMSNorm — no head projection (the chunked
+    CE path fuses projection into the loss). Returns (x, aux_loss)."""
+    x, aux, _ = _forward_trunk(params, tokens, cfg, mesh, multi_pod)
+    return x, aux
+
+
+def _axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _attention_prefill_cached(ap, h, cfg, *, is_global, window, theta, qk):
+    """attention_prefill + expose post-RoPE K/V for prefill cache export."""
+    b, s, _ = h.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = L._project_qkv(ap, h, cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    if qk[0] is not None:
+        q = L.rms_norm(q, qk[0])
+        k = L.rms_norm(k, qk[1])
+    q = L.rope(q, positions, theta)
+    k = L.rope(k, positions, theta)
+    out = _flash_core(
+        q, k, v, cfg, is_global=is_global, window=window
+    )
+    return out.astype(h.dtype) @ ap.wo, k, v
+
+
+def _flash_core(q, k, v, cfg, *, is_global, window):
+    """Online-softmax over KV chunks (shared by prefill paths)."""
+    b, s, h, dh = q.shape
+    n_kv = cfg.n_kv_heads
+    g = h // n_kv
+    q = q * (dh**-0.5)
+    kv_chunk = min(cfg.kv_chunk, s)
+    n_chunks = s // kv_chunk
+    ck = k.reshape(b, n_chunks, kv_chunk, n_kv, dh).transpose(1, 0, 2, 3, 4)
+    cv = v.reshape(b, n_chunks, kv_chunk, n_kv, dh).transpose(1, 0, 2, 3, 4)
+    q_idx = jnp.arange(s, dtype=jnp.int32)
+
+    def step(carry, chunk):
+        m, l, o = carry
+        kc, vc, c0 = chunk
+        sc_ = L._grouped_scores(q, kc)
+        k_idx = c0 + jnp.arange(kv_chunk, dtype=jnp.int32)
+        causal = q_idx[:, None] >= k_idx[None, :]
+        in_window = (q_idx[:, None] - k_idx[None, :]) < window
+        mask = causal & (is_global | in_window)
+        sc_ = jnp.where(mask[None, None, None], sc_, L.NEG_INF)
+        m_new = jnp.maximum(m, sc_.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(sc_ - m_new[..., None])
+        l_new = l * alpha + pr.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", pr, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, n_kv, g, s), L.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, s), jnp.float32)
+    o0 = jnp.zeros((b, n_kv, g, s, dh), jnp.float32)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * kv_chunk
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (ck, cv, starts))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Loss + train step
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Cross-entropy over a vocab-sharded last dim (one-hot form keeps GSPMD
+    from all-gathering logits: per-shard partial sums + psum)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.bfloat16)
+    ll = jnp.einsum("bsv,bsv->bs", lf.astype(jnp.bfloat16), onehot).astype(
+        jnp.float32
+    )
+    nll = jnp.mean(lse - ll)
+    return nll + z_loss * jnp.mean(lse**2), nll
+
+
+def chunked_ce_loss(x: jax.Array, head: jax.Array, labels: jax.Array,
+                    cfg: TransformerConfig, z_loss: float = 1e-4):
+    """Fused projection + CE over sequence chunks: the (B, S, V) logits
+    tensor never lives in memory — only (B, ce_chunk, V/model) slices.
+    §Perf iteration on the memory term of the big dense archs."""
+    b, s, d = x.shape
+    # clamp for short sequences (smoke tests): one chunk when S % chunk != 0
+    c = cfg.ce_chunk if (cfg.ce_chunk and s % cfg.ce_chunk == 0) else s
+    n_chunks = s // c
+    xs = x.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    def chunk(carry, inp):
+        xc, lc = inp
+        logits = xc @ head.astype(xc.dtype)  # (B, c, V)
+        if cfg.padded_vocab != cfg.vocab:
+            logits = jnp.where(
+                jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, L.NEG_INF)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=jnp.bfloat16)
+        ll = jnp.einsum("bsv,bsv->bs", lf.astype(jnp.bfloat16),
+                        onehot).astype(jnp.float32)
+        nll_sum, z_sum = carry
+        return (nll_sum + jnp.sum(lse - ll), z_sum + jnp.sum(lse**2)), None
+
+    (nll_sum, z_sum), _ = jax.lax.scan(
+        chunk, (jnp.float32(0), jnp.float32(0)), (xs, ls))
+    n = b * s
+    return nll_sum / n + z_loss * z_sum / n, nll_sum / n
+
+
+def make_loss_fn(cfg, mesh, multi_pod, aux_weight: float = 0.01):
+    use_chunked = cfg.ce_chunk > 0
+
+    def loss_fn(params, tokens, labels):
+        if use_chunked:
+            x, aux = forward_hidden(params, tokens, cfg, mesh, multi_pod)
+            head = (params["embed"].T if cfg.tied_embeddings
+                    else params["head"])
+            total, nll = chunked_ce_loss(x, head, labels, cfg)
+        else:
+            logits, aux, _ = forward(params, tokens, cfg, mesh, multi_pod)
+            total, nll = ce_loss(logits, labels)
+        total = total + aux_weight * aux
+        return total, {"loss": nll, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: TransformerConfig,
+    mesh: jax.sharding.Mesh,
+    opt_cfg: AdamWConfig,
+    multi_pod: bool,
+    n_micro: int = 1,
+):
+    """Returns train_step(params, opt_state, batch)->(params, opt_state,
+    metrics). Grad accumulation scans `n_micro` microbatches (straggler
+    blast-radius control + activation memory bound)."""
+    loss_fn = make_loss_fn(cfg, mesh, multi_pod)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if n_micro == 1:
+            grads, metrics = grad_fn(params, tokens, labels)
+        else:
+            b = tokens.shape[0]
+            mb = b // n_micro
+            tk = tokens.reshape(n_micro, mb, -1)
+            lb = labels.reshape(n_micro, mb, -1)
+
+            def micro(acc, xs):
+                t, l = xs
+                g, m = grad_fn(params, t, l)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g
+                )
+                return acc, m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, ms = jax.lax.scan(micro, zeros, (tk, lb))
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+        new_params, new_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, **om)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, mesh, multi_pod):
+    def prefill_step(params, tokens):
+        logits, _, caches = forward(
+            params, tokens, cfg, mesh, multi_pod, collect_cache=True
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        kc, vc = caches
+        return next_tok, kc.astype(cfg.dtype), vc.astype(cfg.dtype)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: TransformerConfig, mesh, multi_pod: bool):
+    """decode: (params, kc, vc, pos, tokens(B,)) -> (next (B,), kc', vc').
+    kc/vc: (L, B, S_max, K, Dh); pos: () int32 current cache length."""
+    st = cfg.moe_settings() if cfg.is_moe else None
+    e_pad = st.e_pad(_axis_size(mesh, "model")) if cfg.is_moe else 0
+
+    def serve_step(params, kc, vc, pos, tokens):
+        x = params["embed"][tokens][:, None, :].astype(cfg.dtype)  # (B,1,D)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+        window = cfg.sliding_window if cfg.sliding_window > 0 else kc.shape[2] + 1
+
+        def block(x, xs):
+            p, kc_l, vc_l, is_global, theta = xs
+            h = L.rms_norm(x, p["ln1"])
+            ap = L.AttnParams(
+                wq=p["attn"]["wq"], wk=p["attn"]["wk"], wv=p["attn"]["wv"],
+                wo=p["attn"]["wo"],
+                bq=p["attn"].get("bq"), bk=p["attn"].get("bk"),
+                bv=p["attn"].get("bv"),
+            )
+            attn_out, kc_n, vc_n = _decode_attn(
+                ap, h, kc_l, vc_l, pos, cfg, is_global, window, theta,
+                qk=(p["attn"].get("qnorm"), p["attn"].get("knorm")),
+            )
+            x = x + attn_out
+            h2 = L.rms_norm(x, p["ln2"])
+            if cfg.is_moe:
+                moe_p = M.MoEParams(
+                    **{k: p["moe"][k] for k in M.MoEParams._fields}
+                )
+                y = M.moe_ffn_onehot(moe_p, h2, st, e_pad)
+            else:
+                y = L.swiglu_ffn(L.FFNParams(**p["ffn"]), h2)
+            return x + y, (kc_n, vc_n)
+
+        xs = (params["blocks"], kc, vc, cfg.is_global_layers(),
+              cfg.rope_thetas())
+        x, (kc2, vc2) = jax.lax.scan(
+            block, x, xs, unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        x = L.rms_norm(x, params["ln_f"])
+        head = params["embed"].T if cfg.tied_embeddings else params["head"]
+        logits = (x @ head.astype(cfg.dtype))[:, 0, :]
+        if cfg.padded_vocab != cfg.vocab:
+            logits = jnp.where(
+                jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, L.NEG_INF
+            )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, kc2, vc2
+
+    return serve_step
+
+
+def _decode_attn(ap, x, kc, vc, pos, cfg, is_global, window, theta, qk):
+    b = x.shape[0]
+    s_max = kc.shape[1]
+    q, k_new, v_new = L._project_qkv(ap, x, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.d_head)
+    if qk[0] is not None:
+        q = L.rms_norm(q, qk[0])
+        k_new = L.rms_norm(k_new, qk[1])
+    posb = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q = L.rope(q, posb, theta)
+    k_new = L.rope(k_new, posb, theta)
+    kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
+                                      (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new.astype(vc.dtype),
+                                      (0, pos, 0, 0))
+    scores = L._grouped_scores(q * (cfg.d_head**-0.5), kc)
+    k_idx = jnp.arange(s_max, dtype=jnp.int32)
+    visible = k_idx <= pos
+    in_window = (pos - k_idx) < window
+    mask = visible & (is_global | in_window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, L.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = L._grouped_values(probs, vc)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return o @ ap.wo, kc, vc
+
+
+def init_decode_cache(cfg: TransformerConfig, batch: int, s_max: int):
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Roofline bookkeeping
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: TransformerConfig, kind: str, batch: int, seq: int,
+                ep: int = 1) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (+attention) for inference."""
+    total, active = count_params(cfg, ep)
+    n_tok = batch * seq
+    attn = 4.0 * n_tok * seq * cfg.n_heads * cfg.d_head  # QK^T + PV (causal/2 applied below)
+    if kind == "train":
+        return 6.0 * active * n_tok + 3.0 * attn / 2
+    if kind == "prefill":
+        return 2.0 * active * n_tok + attn / 2
+    # decode: one token per sequence over a seq-long cache
+    return 2.0 * active * batch + 4.0 * batch * seq * cfg.n_heads * cfg.d_head

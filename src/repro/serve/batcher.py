@@ -1,0 +1,66 @@
+"""Request micro-batcher: collects requests into fixed-size device batches
+(pad-to-capacity, the serving analogue of the Mars static-shape discipline),
+dispatches when full or when max_wait elapses."""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class Request:
+    payload: Any
+    event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: Any = None
+
+
+class MicroBatcher:
+    def __init__(self, batch_fn: Callable[[list[Any]], list[Any]],
+                 max_batch: int, max_wait_s: float = 0.005):
+        self.batch_fn = batch_fn
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.q: queue.Queue[Request] = queue.Queue()
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._loop, daemon=True)
+        self.t.start()
+        self.n_batches = 0
+        self.n_requests = 0
+
+    def submit(self, payload: Any, timeout: float = 30.0) -> Any:
+        r = Request(payload)
+        self.q.put(r)
+        if not r.event.wait(timeout):
+            raise TimeoutError("batcher timed out")
+        return r.result
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                first = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.time() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                left = deadline - time.time()
+                if left <= 0:
+                    break
+                try:
+                    batch.append(self.q.get(timeout=left))
+                except queue.Empty:
+                    break
+            results = self.batch_fn([r.payload for r in batch])
+            self.n_batches += 1
+            self.n_requests += len(batch)
+            for r, res in zip(batch, results):
+                r.result = res
+                r.event.set()
+
+    def close(self) -> None:
+        self._stop.set()
+        self.t.join(timeout=2)

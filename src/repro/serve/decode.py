@@ -1,0 +1,48 @@
+"""Autoregressive serving driver: prefill once, then greedy decode with a
+static-capacity KV cache (prefill_step / serve_step from models/transformer).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Generator:
+    cfg: T.TransformerConfig
+    params: dict
+    mesh: jax.sharding.Mesh
+    multi_pod: bool = False
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            T.make_prefill_step(self.cfg, self.mesh, self.multi_pod)
+        )
+        self._step = jax.jit(
+            T.make_serve_step(self.cfg, self.mesh, self.multi_pod),
+            donate_argnums=(1, 2),
+        )
+
+    def generate(self, prompts: np.ndarray, n_new: int) -> np.ndarray:
+        """prompts: (B, S0) int32. Returns (B, n_new) greedy tokens."""
+        b, s0 = prompts.shape
+        assert s0 + n_new <= self.max_len
+        kc, vc = T.init_decode_cache(self.cfg, b, self.max_len)
+        nxt, kc_p, vc_p = self._prefill(self.params, jnp.asarray(prompts))
+        kc = jax.lax.dynamic_update_slice(
+            kc, kc_p.astype(kc.dtype), (0, 0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, vc_p.astype(vc.dtype), (0, 0, 0, 0, 0))
+        out = [np.asarray(nxt)]
+        pos = s0
+        for _ in range(n_new - 1):
+            nxt, kc, vc = self._step(self.params, kc, vc, jnp.int32(pos), nxt)
+            out.append(np.asarray(nxt))
+            pos += 1
+        return np.stack(out, axis=1)

@@ -1,0 +1,39 @@
+"""SPARQL serving front-end: the MapSQ framework (Fig 1) as a service.
+
+Requests (query strings) flow through the MicroBatcher; the engine executes
+each batch — partial matching per pattern, then the MapReduce join chain on
+device. Batching amortizes dispatch overhead exactly like the paper's
+CPU-assigns / GPU-computes split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serve.batcher import MicroBatcher
+from repro.sparql.engine import QueryEngine
+
+
+@dataclasses.dataclass
+class SPARQLServer:
+    engine: QueryEngine
+    max_batch: int = 8
+    max_wait_s: float = 0.002
+
+    def __post_init__(self):
+        self._batcher = MicroBatcher(self._run_batch, self.max_batch,
+                                     self.max_wait_s)
+
+    def _run_batch(self, queries: list[str]) -> list[list[dict]]:
+        return [self.engine.query(q) for q in queries]
+
+    def query(self, text: str) -> list[dict]:
+        return self._batcher.submit(text)
+
+    def stats(self) -> dict:
+        return {
+            "batches": self._batcher.n_batches,
+            "requests": self._batcher.n_requests,
+        }
+
+    def close(self) -> None:
+        self._batcher.close()

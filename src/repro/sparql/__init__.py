@@ -1,0 +1,3 @@
+"""RDF/SPARQL substrate: dictionary encoding, indexed triple store, a SPARQL
+BGP parser, LUBM-style data generation, and query engines (MapSQ + the
+CPU-join baselines the paper compares against)."""

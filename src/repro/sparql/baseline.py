@@ -1,0 +1,80 @@
+"""Join baselines standing in for gStore / gStoreD's CPU joins (Table 2).
+
+The paper compares MapSQ's GPU MapReduce join against the join operation of
+two CPU engines. gStore itself isn't available (C++/CPU), so we implement
+the comparison class faithfully:
+
+  * nested_loop_join   — the "plain join algorithm" the paper names;
+    classic tuple-at-a-time CPU nested loop (host numpy, O(n·m)).
+  * hash_join          — build/probe hash join, the standard CPU engine
+    join (host python dict, O(n+m)); stands in for gStore.
+  * partitioned_hash_join — hash-partitioned two-phase variant standing in
+    for the distributed gStoreD (partition overhead + per-partition probe).
+
+All three consume/produce the same dictionary-encoded numpy rows as the
+device join, so benchmarks/bench_join.py can reproduce the Table 2 shape:
+same partial matches in, same result set out, join time compared.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _key_cols(schema_l, schema_r):
+    shared = [v for v in schema_l if v in schema_r]
+    li = [schema_l.index(v) for v in shared]
+    ri = [schema_r.index(v) for v in shared]
+    r_extra = [i for i, v in enumerate(schema_r) if v not in schema_l]
+    out_schema = tuple(schema_l) + tuple(schema_r[i] for i in r_extra)
+    return li, ri, r_extra, out_schema
+
+
+def nested_loop_join(schema_l, rows_l: np.ndarray, schema_r,
+                     rows_r: np.ndarray):
+    """Tuple-at-a-time nested loop (the paper's 'plain join algorithm')."""
+    li, ri, r_extra, out_schema = _key_cols(schema_l, schema_r)
+    out = []
+    for a in rows_l:
+        ka = tuple(a[i] for i in li)
+        for b in rows_r:
+            if ka == tuple(b[i] for i in ri):
+                out.append(list(a) + [b[i] for i in r_extra])
+    return out_schema, np.asarray(out, np.int32).reshape(-1, len(out_schema))
+
+
+def hash_join(schema_l, rows_l: np.ndarray, schema_r, rows_r: np.ndarray):
+    """Build (left) + probe (right) hash join — the gStore stand-in."""
+    li, ri, r_extra, out_schema = _key_cols(schema_l, schema_r)
+    table: dict[tuple, list] = {}
+    for a in rows_l:
+        table.setdefault(tuple(a[i] for i in li), []).append(a)
+    out = []
+    for b in rows_r:
+        for a in table.get(tuple(b[i] for i in ri), ()):
+            out.append(list(a) + [b[i] for i in r_extra])
+    return out_schema, np.asarray(out, np.int32).reshape(-1, len(out_schema))
+
+
+def partitioned_hash_join(schema_l, rows_l, schema_r, rows_r,
+                          n_parts: int = 4):
+    """Grace-style partitioned hash join — the gStoreD stand-in (adds the
+    partition pass a distributed engine pays before local joins)."""
+    li, ri, r_extra, out_schema = _key_cols(schema_l, schema_r)
+
+    def part(rows, idx):
+        buckets = [[] for _ in range(n_parts)]
+        for r in rows:
+            buckets[hash(tuple(r[i] for i in idx)) % n_parts].append(r)
+        return buckets
+
+    bl = part(rows_l, li)
+    br = part(rows_r, ri)
+    out = []
+    for p in range(n_parts):
+        _, rows = hash_join(schema_l, np.asarray(bl[p], np.int32).reshape(
+            -1, len(schema_l)), schema_r,
+            np.asarray(br[p], np.int32).reshape(-1, len(schema_r)))
+        out.append(rows)
+    rows = np.concatenate(out) if out else np.zeros((0, len(out_schema)),
+                                                    np.int32)
+    return out_schema, rows

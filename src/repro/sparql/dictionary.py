@@ -1,0 +1,37 @@
+"""Term dictionary: RDF terms <-> dense int32 ids.
+
+Dictionary encoding happens on the host (the paper's CPU side); all device
+arrays hold ids only. Ids are dense so they double as array indexes.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+
+class TermDict:
+    def __init__(self):
+        self._term_to_id: dict[str, int] = {}
+        self._id_to_term: list[str] = []
+
+    def encode(self, term: str) -> int:
+        tid = self._term_to_id.get(term)
+        if tid is None:
+            tid = len(self._id_to_term)
+            self._term_to_id[term] = tid
+            self._id_to_term.append(term)
+        return tid
+
+    def encode_many(self, terms: Iterable[str]) -> list[int]:
+        return [self.encode(t) for t in terms]
+
+    def lookup(self, term: str) -> int | None:
+        return self._term_to_id.get(term)
+
+    def decode(self, tid: int) -> str:
+        return self._id_to_term[tid]
+
+    def __len__(self) -> int:
+        return len(self._id_to_term)
+
+    def __contains__(self, term: str) -> bool:
+        return term in self._term_to_id

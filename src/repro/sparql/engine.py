@@ -1,0 +1,127 @@
+"""The MapSQ query engine (Figure 1 of the paper).
+
+Coprocessing split, exactly as the paper describes it:
+  CPU  — parse, dictionary-encode, plan join order, size capacities,
+         dispatch subqueries (this file, host Python);
+  GPU→TPU — pattern range-scans feed the MapReduce join (Algorithm 1,
+         core/mr_join.py, jitted).
+
+Dynamic result sizes use the Mars two-pass discipline: a jitted COUNT pass
+returns the exact cardinality of the next join; the host allocates the
+exactly-sized (next-pow2) buffer and runs the jitted EXPAND pass. On
+overflow (capacity hints disabled) the engine doubles and retries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+
+from repro.core import mr_join as mj
+from repro.core.planner import TriplePattern, plan_bgp
+from repro.core.relation import Relation
+from repro.sparql.parser import Query, parse
+from repro.sparql.store import TripleStore, _next_pow2
+
+
+@dataclasses.dataclass
+class ExecStats:
+    n_joins: int = 0
+    n_count_passes: int = 0
+    n_retries: int = 0
+    peak_capacity: int = 0
+
+
+@dataclasses.dataclass
+class QueryEngine:
+    store: TripleStore
+    use_kernel: bool = False  # Pallas pair-expand in the join
+    exact_count_pass: bool = True  # Mars two-pass vs double-on-overflow
+    max_capacity: int = 1 << 24
+
+    def __post_init__(self):
+        self._jit_join = jax.jit(
+            mj.mr_join, static_argnames=("capacity", "use_kernel")
+        )
+        self._jit_count = jax.jit(mj.mr_join_count)
+        self._jit_cross = jax.jit(mj.cross_join, static_argnames=("capacity",))
+
+    # -- public API --------------------------------------------------------
+    def query(self, text: str) -> list[dict[str, str]]:
+        """Parse, execute, decode: rows as {var: term} dicts."""
+        q = parse(text)
+        rel, stats = self.execute(q)
+        rel = rel.project(q.projection())
+        rows = rel.to_numpy()
+        if q.distinct:
+            rows = np.unique(rows, axis=0)
+        d = self.store.dictionary
+        return [
+            {v: d.decode(int(t)) for v, t in zip(rel.schema, row)}
+            for row in rows
+        ]
+
+    def execute(self, q: Query) -> tuple[Relation, ExecStats]:
+        """Run the BGP: partial matching then the MapReduce-join chain."""
+        stats = ExecStats()
+        steps = plan_bgp(q.patterns, self.store.estimate_cardinality)
+        # partial matching (the paper's step 1; gStore-equivalent scans)
+        partials = [
+            self.store.match_pattern(q.patterns[st.pattern_index])
+            for st in steps
+        ]
+        acc = partials[0]
+        for st, nxt in zip(steps[1:], partials[1:]):
+            acc = self._join_once(acc, nxt, st.is_cross, stats)
+        return acc, stats
+
+    # -- internals ---------------------------------------------------------
+    def _join_once(self, left: Relation, right: Relation, is_cross: bool,
+                   stats: ExecStats) -> Relation:
+        stats.n_joins += 1
+        if is_cross:
+            cap = max(1, _next_pow2(left.capacity * right.capacity))
+            out, total, overflow = self._jit_cross(left, right, capacity=cap)
+            assert not bool(overflow)
+            stats.peak_capacity = max(stats.peak_capacity, cap)
+            return mj.compact(out)
+        if self.exact_count_pass:
+            total = int(self._jit_count(left, right))
+            stats.n_count_passes += 1
+            cap = max(1, _next_pow2(total))
+            out, _, overflow = self._jit_join(
+                left, right, capacity=cap, use_kernel=self.use_kernel
+            )
+            assert not bool(overflow)
+            stats.peak_capacity = max(stats.peak_capacity, cap)
+            return out
+        cap = max(left.capacity, right.capacity)
+        while True:
+            out, total, overflow = self._jit_join(
+                left, right, capacity=cap, use_kernel=self.use_kernel
+            )
+            stats.peak_capacity = max(stats.peak_capacity, cap)
+            if not bool(overflow):
+                return out
+            stats.n_retries += 1
+            cap *= 2
+            if cap > self.max_capacity:
+                raise MemoryError(f"join result exceeds {self.max_capacity}")
+
+    def explain(self, text: str) -> list[dict[str, Any]]:
+        q = parse(text)
+        steps = plan_bgp(q.patterns, self.store.estimate_cardinality)
+        return [
+            {
+                "pattern": dataclasses.astuple(q.patterns[st.pattern_index]),
+                "est_rows": self.store.estimate_cardinality(
+                    q.patterns[st.pattern_index]
+                ),
+                "join_vars": st.key_vars,
+                "cross": st.is_cross,
+            }
+            for st in steps
+        ]

@@ -1,0 +1,112 @@
+"""LUBM-style benchmark data + the 5 evaluation queries (paper §3).
+
+The real LUBM generator emits a university-domain ontology; we reproduce
+its structural skeleton (universities → departments → professors/students/
+courses with typed relations) at an arbitrary scale factor, so join
+selectivities behave like the benchmark: type scans are wide, relation
+scans are narrow, multi-pattern BGPs have 1:N and N:M joins.
+
+Five queries in the spirit of LUBM Q1/Q2/Q4/Q7/Q9 — star and chain BGPs of
+2–5 triple patterns over the generated schema (the paper does not list its
+exact 5; these cover the shape classes its Table 2 spans).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparql.dictionary import TermDict
+from repro.sparql.store import TripleStore
+
+UB = "http://swat.cse.lehigh.edu/onto/univ-bench.owl#"
+RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
+
+
+def _e(name: str) -> str:  # entity IRI
+    return f"<http://example.org/{name}>"
+
+
+def _u(name: str) -> str:  # ontology IRI
+    return f"<{UB}{name}>"
+
+
+def generate(scale: int = 1, seed: int = 0):
+    """~scale × (15 departments × ~70 people) university graph."""
+    rng = np.random.default_rng(seed)
+    triples: list[tuple[str, str, str]] = []
+    t = triples.append
+    for ui in range(scale):
+        uni = _e(f"University{ui}")
+        t((uni, RDF_TYPE, _u("University")))
+        for di in range(15):
+            dept = _e(f"Dept{ui}_{di}")
+            t((dept, RDF_TYPE, _u("Department")))
+            t((dept, _u("subOrganizationOf"), uni))
+            n_prof = 7 + int(rng.integers(0, 5))
+            profs = []
+            for pi in range(n_prof):
+                prof = _e(f"Prof{ui}_{di}_{pi}")
+                profs.append(prof)
+                t((prof, RDF_TYPE, _u("FullProfessor")))
+                t((prof, _u("worksFor"), dept))
+                t((prof, _u("name"), f'"prof_{ui}_{di}_{pi}"'))
+                deg = _e(f"University{int(rng.integers(0, max(1, scale)))}")
+                t((prof, _u("undergraduateDegreeFrom"), deg))
+            n_course = 12 + int(rng.integers(0, 6))
+            courses = []
+            for ci in range(n_course):
+                c = _e(f"Course{ui}_{di}_{ci}")
+                courses.append(c)
+                t((c, RDF_TYPE, _u("Course")))
+                teacher = profs[int(rng.integers(0, n_prof))]
+                t((teacher, _u("teacherOf"), c))
+            for si in range(40 + int(rng.integers(0, 20))):
+                s = _e(f"Student{ui}_{di}_{si}")
+                t((s, RDF_TYPE, _u("GraduateStudent")))
+                t((s, _u("memberOf"), dept))
+                t((s, _u("advisor"), profs[int(rng.integers(0, n_prof))]))
+                for c in rng.choice(n_course, size=min(3, n_course),
+                                    replace=False):
+                    t((s, _u("takesCourse"), courses[int(c)]))
+    d = TermDict()
+    enc = np.array(
+        [[d.encode(a), d.encode(b), d.encode(c)] for a, b, c in triples],
+        np.int32,
+    )
+    return TripleStore(enc, d)
+
+
+PREFIX = f"PREFIX ub: <{UB}>\nPREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>\n"
+
+QUERIES: dict[str, str] = {
+    # Q1 (LUBM-1-like): students taking a specific course — selective 2-join
+    "Q1": PREFIX + """SELECT ?x WHERE {
+        ?x rdf:type ub:GraduateStudent .
+        ?x ub:takesCourse <http://example.org/Course0_0_0> .
+    }""",
+    # Q2 (chain): student -> advisor -> department (3 patterns, chain join)
+    "Q2": PREFIX + """SELECT ?s ?p ?d WHERE {
+        ?s ub:advisor ?p .
+        ?p ub:worksFor ?d .
+        ?d ub:subOrganizationOf <http://example.org/University0> .
+    }""",
+    # Q4 (star): professor attributes within a department
+    "Q4": PREFIX + """SELECT ?p ?n WHERE {
+        ?p rdf:type ub:FullProfessor .
+        ?p ub:worksFor <http://example.org/Dept0_0> .
+        ?p ub:name ?n .
+    }""",
+    # Q7 (N:M): students of courses taught by a given professor
+    "Q7": PREFIX + """SELECT ?s ?c WHERE {
+        ?s ub:takesCourse ?c .
+        <http://example.org/Prof0_0_0> ub:teacherOf ?c .
+        ?s rdf:type ub:GraduateStudent .
+    }""",
+    # Q9 (triangle-ish, 5 patterns): classmate pairs sharing advisor's course
+    "Q9": PREFIX + """SELECT ?s ?t ?c WHERE {
+        ?s ub:advisor ?t .
+        ?t ub:teacherOf ?c .
+        ?s ub:takesCourse ?c .
+        ?s rdf:type ub:GraduateStudent .
+        ?t rdf:type ub:FullProfessor .
+    }""",
+}

@@ -1,0 +1,132 @@
+"""A small SPARQL parser: PREFIX / SELECT [DISTINCT] / WHERE { BGP }.
+
+Covers the query class the paper evaluates (basic graph patterns with
+variables, IRIs, prefixed names and literals). Parsing is host-side — part
+of the CPU half of the coprocessing strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.planner import TriplePattern
+
+_TOKEN = re.compile(
+    r"""\s*(?:
+        (?P<var>\?[A-Za-z_][\w]*)
+      | (?P<iri><[^>]*>)
+      | (?P<literal>"(?:[^"\\]|\\.)*")
+      | (?P<pname>[A-Za-z_][\w\-]*:[A-Za-z_][\w\-]*)
+      | (?P<pdecl>[A-Za-z_][\w\-]*:)
+      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|\{|\}|\.|\*|a\b)
+    )""",
+    re.VERBOSE | re.IGNORECASE,
+)
+
+_RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
+
+
+@dataclasses.dataclass
+class Query:
+    select_vars: list[str]  # empty => SELECT *
+    distinct: bool
+    patterns: list[TriplePattern]
+
+    def all_vars(self) -> list[str]:
+        out: list[str] = []
+        for tp in self.patterns:
+            for v in tp.variables():
+                if v not in out:
+                    out.append(v)
+        return out
+
+    def projection(self) -> list[str]:
+        return self.select_vars or self.all_vars()
+
+
+class ParseError(ValueError):
+    pass
+
+
+def _tokenize(text: str) -> list[str]:
+    tokens, pos = [], 0
+    while pos < len(text):
+        if text[pos:].strip() == "":
+            break
+        m = _TOKEN.match(text, pos)
+        if not m:
+            raise ParseError(f"unexpected input at: {text[pos:pos + 30]!r}")
+        tokens.append(m.group(0).strip())
+        pos = m.end()
+    return tokens
+
+
+def parse(text: str) -> Query:
+    tokens = _tokenize(text)
+    i = 0
+    prefixes: dict[str, str] = {}
+
+    def peek() -> str:
+        return tokens[i] if i < len(tokens) else ""
+
+    def eat(expect: str | None = None) -> str:
+        nonlocal i
+        if i >= len(tokens):
+            raise ParseError(f"unexpected end of query (wanted {expect})")
+        tok = tokens[i]
+        if expect and tok.upper() != expect.upper():
+            raise ParseError(f"expected {expect}, got {tok!r}")
+        i += 1
+        return tok
+
+    while peek().upper() == "PREFIX":
+        eat()
+        pname = eat()
+        if not pname.endswith(":"):
+            raise ParseError(f"malformed PREFIX declaration near {pname!r}")
+        iri = eat()
+        if not (iri.startswith("<") and iri.endswith(">")):
+            raise ParseError(f"PREFIX needs an IRI, got {iri!r}")
+        prefixes[pname[:-1]] = iri[1:-1]
+
+    eat("SELECT")
+    distinct = False
+    if peek().upper() == "DISTINCT":
+        eat()
+        distinct = True
+    select_vars: list[str] = []
+    if peek() == "*":
+        eat()
+    else:
+        while peek().startswith("?"):
+            select_vars.append(eat())
+        if not select_vars:
+            raise ParseError("SELECT needs variables or *")
+    eat("WHERE")
+    eat("{")
+
+    def resolve(tok: str) -> str:
+        if tok.startswith("?"):
+            return tok
+        if tok == "a":
+            return _RDF_TYPE
+        if tok.startswith("<") or tok.startswith('"'):
+            return tok
+        ns, _, local = tok.partition(":")
+        if ns not in prefixes:
+            raise ParseError(f"unknown prefix {ns!r} in {tok!r}")
+        return f"<{prefixes[ns]}{local}>"
+
+    patterns: list[TriplePattern] = []
+    while peek() != "}":
+        s, p, o = resolve(eat()), resolve(eat()), resolve(eat())
+        patterns.append(TriplePattern(s, p, o))
+        if peek() == ".":
+            eat()
+    eat("}")
+    if not patterns:
+        raise ParseError("empty basic graph pattern")
+    unknown = [v for v in select_vars if all(v not in tp.variables() for tp in patterns)]
+    if unknown:
+        raise ParseError(f"SELECT vars not in WHERE clause: {unknown}")
+    return Query(select_vars, distinct, patterns)

@@ -1,0 +1,127 @@
+"""Indexed triple store — our stand-in for the paper's gStore black box.
+
+Three sorted permutation indexes (SPO, POS, OSP) give a binary-search range
+scan for any bound-prefix pattern; the scan result IS the paper's "partial
+match" relation fed to the MapReduce join. Index build is host-side numpy
+(load time); scans are O(log n) + slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.planner import TriplePattern
+from repro.core.relation import Relation
+from repro.sparql.dictionary import TermDict
+
+# index order -> the permutation of (s, p, o) columns it sorts by
+_INDEXES = {
+    "spo": (0, 1, 2),
+    "pos": (1, 2, 0),
+    "osp": (2, 0, 1),
+}
+# bound-position tuple -> preferred index (longest sorted prefix bound)
+_CHOICE = {
+    (): "spo",
+    ("s",): "spo",
+    ("s", "p"): "spo",
+    ("s", "p", "o"): "spo",
+    ("p",): "pos",
+    ("p", "o"): "pos",
+    ("o",): "osp",
+    ("s", "o"): "osp",
+}
+
+
+@dataclasses.dataclass
+class TripleStore:
+    triples: np.ndarray  # (n, 3) int32 dictionary-encoded
+    dictionary: TermDict
+
+    def __post_init__(self):
+        self.triples = np.asarray(self.triples, np.int32).reshape(-1, 3)
+        self._sorted: dict[str, np.ndarray] = {}
+        for name, perm in _INDEXES.items():
+            reordered = self.triples[:, perm]
+            order = np.lexsort((reordered[:, 2], reordered[:, 1], reordered[:, 0]))
+            self._sorted[name] = np.ascontiguousarray(reordered[order])
+
+    def __len__(self) -> int:
+        return len(self.triples)
+
+    # -- pattern matching ------------------------------------------------
+    def _bound(self, tp: TriplePattern) -> dict[str, int]:
+        out = {}
+        for pos, term in zip("spo", (tp.s, tp.p, tp.o)):
+            if not term.startswith("?"):
+                tid = self.dictionary.lookup(term)
+                out[pos] = -1 if tid is None else tid
+        return out
+
+    def _range_scan(self, index: str, prefix_vals: list[int]) -> np.ndarray:
+        data = self._sorted[index]
+        lo, hi = 0, len(data)
+        for level, v in enumerate(prefix_vals):
+            col = data[lo:hi, level]
+            lo, hi = lo + np.searchsorted(col, v, "left"), lo + np.searchsorted(
+                col, v, "right"
+            )
+        return data[lo:hi]
+
+    def estimate_cardinality(self, tp: TriplePattern) -> int:
+        return len(self.match_rows(tp))
+
+    def match_rows(self, tp: TriplePattern) -> np.ndarray:
+        """Matching triples in (s, p, o) column order."""
+        bound = self._bound(tp)
+        if any(v < 0 for v in bound.values()):
+            return np.zeros((0, 3), np.int32)  # unknown constant: no matches
+        key = tuple(sorted(bound.keys(), key="spo".index))
+        index = _CHOICE[key]  # every bound-position subset has an index
+        perm = _INDEXES[index]
+        pos_order = ["spo"[i] for i in perm]
+        prefix = []
+        for p in pos_order:
+            if p in bound:
+                prefix.append(bound[p])
+            else:
+                break
+        rows = self._range_scan(index, prefix)
+        # invert the permutation back to (s, p, o)
+        inv = np.argsort(perm)
+        rows = rows[:, inv]
+        # residual filters for bound positions beyond the sorted prefix
+        for i, p in enumerate("spo"):
+            if p in bound and p not in pos_order[: len(prefix)]:
+                rows = rows[rows[:, i] == bound[p]]
+        return rows
+
+    def match_pattern(self, tp: TriplePattern, min_capacity: int = 1) -> Relation:
+        """Partial-match Relation over the pattern's variables."""
+        rows = self.match_rows(tp)
+        vars_, cols = [], []
+        for i, term in enumerate((tp.s, tp.p, tp.o)):
+            if term.startswith("?"):
+                if term in vars_:  # repeated var, e.g. (?x p ?x): filter
+                    rows = rows[rows[:, i] == rows[:, cols[vars_.index(term)]]]
+                else:
+                    vars_.append(term)
+                    cols.append(i)
+        mat = rows[:, cols] if len(rows) else np.zeros((0, len(cols)), np.int32)
+        capacity = max(min_capacity, _next_pow2(len(mat)))
+        return Relation.from_numpy(tuple(vars_), mat, capacity=capacity)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (max(1, n) - 1).bit_length())
+
+
+def store_from_string_triples(
+    triples: list[tuple[str, str, str]], dictionary: TermDict | None = None
+) -> TripleStore:
+    d = dictionary or TermDict()
+    enc = np.array(
+        [[d.encode(s), d.encode(p), d.encode(o)] for s, p, o in triples], np.int32
+    ).reshape(-1, 3)
+    return TripleStore(enc, d)

@@ -1,0 +1,114 @@
+"""Fault tolerance: checkpoint manager semantics + crash/restart training
+equivalence + elastic re-shard restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.tokens import TokenPipeline
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.trainer import (SimulatedFailure, Trainer, TrainSettings,
+                                 run_with_restarts)
+
+
+def _tree_allclose(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), rtol=0, atol=0)
+
+
+def test_manager_roundtrip_keepk_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_k=2, async_write=True)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.int32(3)]}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree, extra_meta={"pipeline": {"step": step}})
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]  # keep_k pruned
+    got = mgr.restore(4, tree)
+    _tree_allclose(got, tree)
+    assert mgr.meta(4)["pipeline"]["step"] == 4
+
+
+def test_manager_atomic_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_k=5)
+    mgr.save(7, {"x": jnp.ones(3)})
+    names = os.listdir(tmp_path)
+    assert "step_00000007" in names
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+CFG = T.TransformerConfig(
+    name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+    d_ff=64, vocab=128, kv_chunk=8, remat=False)
+
+
+def _make_trainer(tmp_path, fail_at=-1, total=12):
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    step = jax.jit(T.make_train_step(CFG, mesh, AdamWConfig(lr=1e-3), False))
+    pipe = TokenPipeline(vocab=CFG.vocab, batch=4, seq=16)
+    to_dev = lambda b: {k: jnp.asarray(v) for k, v in b.items()}
+    return Trainer(step, params, pipe, str(tmp_path),
+                   TrainSettings(total_steps=total, ckpt_every=4,
+                                 log_every=0, fail_at_step=fail_at,
+                                 async_ckpt=False),
+                   to_device=to_dev)
+
+
+def test_crash_restart_matches_uninterrupted(tmp_path):
+    straight = _make_trainer(tmp_path / "a")
+    straight.run()
+    calls = {"n": 0}
+
+    def factory():  # one-off preemption: only the first attempt dies
+        calls["n"] += 1
+        return _make_trainer(tmp_path / "b",
+                             fail_at=6 if calls["n"] == 1 else -1)
+
+    resumed = run_with_restarts(factory)
+    assert resumed.step == straight.step
+    _tree_allclose(straight.params, resumed.params)
+    _tree_allclose(straight.opt_state["m"], resumed.opt_state["m"])
+
+
+def test_restart_resumes_pipeline_position(tmp_path):
+    tr = _make_trainer(tmp_path, fail_at=6, total=8)
+    with pytest.raises(SimulatedFailure):
+        tr.run()
+    tr2 = _make_trainer(tmp_path, total=8)
+    assert tr2.resume_if_possible()
+    assert tr2.step == 4  # last checkpoint
+    assert tr2.pipeline.step == 4  # data stream cursor restored
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save on one mesh, restore onto a different sharding layout."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_local_mesh
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    mgr.save(1, tree)
+    mesh = make_local_mesh(data=1, model=1)
+    shard = {"w": NamedSharding(mesh, P(None, "model"))}
+    got = mgr.restore(1, tree, shardings=shard)
+    assert got["w"].sharding == shard["w"]
+    _tree_allclose(got, tree)
+
+
+def test_nonfinite_step_skipped(tmp_path):
+    tr = _make_trainer(tmp_path, total=1)
+    bad_step = lambda p, s, b: (p, s, {"loss": jnp.float32(np.nan)})
+    tr.train_step = bad_step
+    before = jax.tree.leaves(tr.params)[0]
+    tr.run()
+    after = jax.tree.leaves(tr.params)[0]
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+    assert tr.history[-1].get("skipped") == 1.0

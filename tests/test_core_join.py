@@ -1,0 +1,145 @@
+"""Algorithm 1 (MapReduce join) vs a python oracle, incl. hypothesis sweeps."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mr_join as mj
+from repro.core.relation import Relation
+
+
+def oracle_join(l_schema, l_rows, r_schema, r_rows):
+    """Nested-loop natural join with python sets (ground truth)."""
+    shared = [v for v in l_schema if v in r_schema]
+    r_extra = [v for v in r_schema if v not in l_schema]
+    out = []
+    for lr in l_rows:
+        for rr in r_rows:
+            if all(lr[l_schema.index(v)] == rr[r_schema.index(v)] for v in shared):
+                out.append(tuple(lr) + tuple(rr[r_schema.index(v)] for v in r_extra))
+    return out
+
+
+def make_rel(schema, rows, capacity=None):
+    return Relation.from_numpy(schema, np.array(rows, np.int32).reshape(-1, len(schema)),
+                               capacity=capacity)
+
+
+def run_join(l_schema, l_rows, r_schema, r_rows, capacity=None, **kw):
+    left = make_rel(l_schema, l_rows)
+    right = make_rel(r_schema, r_rows)
+    expected = oracle_join(l_schema, l_rows, r_schema, r_rows)
+    cap = capacity or max(1, 2 * len(expected) + 4)
+    out, total, overflowed = mj.mr_join(left, right, cap, **kw)
+    assert int(total) == len(expected)
+    assert not bool(overflowed)
+    got = sorted(map(tuple, out.to_numpy().tolist()))
+    assert got == sorted(expected)
+    return out
+
+
+def test_paper_table1_example():
+    """The exact example of Table 1: persons/jobs joined on ?job."""
+    # dictionary: Professor=0 Doctor=1 Nurse=2 Anny=3 Jim=4 Susan=5 Hospital=6
+    tp1 = [(0, 3), (1, 4), (2, 5)]  # (?job, ?person)
+    tp2 = [(1, 6), (2, 6)]  # (?job, "Hospital"-bound object col)
+    out = run_join(("?job", "?person"), tp1, ("?job", "?o"), tp2)
+    assert out.to_set() == {(1, 4, 6), (2, 5, 6)}  # Doctor/Jim, Nurse/Susan
+
+
+def test_duplicate_keys_cartesian_within_group():
+    l = [(7, i) for i in range(4)] + [(8, 9)]
+    r = [(7, 100 + j) for j in range(3)]
+    run_join(("?k", "?a"), l, ("?k", "?b"), r)
+
+
+def test_no_matches():
+    out = run_join(("?k", "?a"), [(1, 2)], ("?k", "?b"), [(3, 4)])
+    assert out.to_set() == set()
+
+
+def test_multi_variable_key():
+    l = [(1, 2, 10), (1, 3, 11), (2, 2, 12)]
+    r = [(1, 2, 20), (2, 2, 21), (2, 2, 22)]
+    run_join(("?x", "?y", "?a"), l, ("?x", "?y", "?b"), r)
+
+
+def test_overflow_flag():
+    left = make_rel(("?k", "?a"), [(1, i) for i in range(8)])
+    right = make_rel(("?k", "?b"), [(1, i) for i in range(8)])
+    out, total, overflowed = mj.mr_join(left, right, capacity=16)
+    assert int(total) == 64 and bool(overflowed)
+    # truncated but the reported rows are real join rows
+    rows = out.to_numpy()
+    assert len(rows) == 16 and set(rows[:, 0].tolist()) == {1}
+
+
+def test_padding_rows_never_join():
+    left = make_rel(("?k", "?a"), [(0, 1)], capacity=8)  # 7 invalid zero rows
+    right = make_rel(("?k", "?b"), [(0, 2)], capacity=8)
+    out, total, _ = mj.mr_join(left, right, 8)
+    assert int(total) == 1
+    assert out.to_set() == {(0, 1, 2)}
+
+
+def test_jit_count_and_expand_agree():
+    left = make_rel(("?k", "?a"), [(i % 3, i) for i in range(32)])
+    right = make_rel(("?k", "?b"), [(i % 5, i) for i in range(32)])
+    count = jax.jit(mj.mr_join_count)(left, right)
+    out, total, _ = jax.jit(mj.mr_join, static_argnums=2)(left, right, 512)
+    assert int(count) == int(total)
+
+
+def test_cross_join():
+    left = make_rel(("?a",), [(1,), (2,)])
+    right = make_rel(("?b",), [(5,), (6,), (7,)])
+    out, total, ov = mj.cross_join(left, right, 8)
+    assert int(total) == 6 and not bool(ov)
+    assert out.to_set() == set(
+        (a, b) for a in (1, 2) for b in (5, 6, 7)
+    )
+
+
+def test_distinct_and_compact():
+    rel = make_rel(("?a", "?b"), [(1, 2), (1, 2), (3, 4), (0, 0)], capacity=8)
+    d = mj.distinct(rel)
+    assert d.to_set() == {(1, 2), (3, 4), (0, 0)}
+    assert int(d.count()) == 3
+    c = mj.compact(d)
+    assert bool(np.all(np.asarray(c.valid)[: int(d.count())]))
+
+
+def test_semijoin_mask():
+    left = make_rel(("?k", "?a"), [(1, 10), (2, 11), (3, 12)])
+    right = make_rel(("?k", "?b"), [(1, 0), (3, 0)])
+    mask = mj.semijoin_mask(left, right)
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, True])
+
+
+@st.composite
+def relation_pair(draw):
+    n_keys = draw(st.integers(1, 5))
+    l_rows = draw(st.lists(st.tuples(st.integers(0, n_keys), st.integers(0, 6)),
+                           min_size=1, max_size=24))
+    r_rows = draw(st.lists(st.tuples(st.integers(0, n_keys), st.integers(0, 6)),
+                           min_size=1, max_size=24))
+    return l_rows, r_rows
+
+
+@settings(max_examples=60, deadline=None)
+@given(relation_pair())
+def test_hypothesis_matches_oracle(pair):
+    l_rows, r_rows = pair
+    run_join(("?k", "?a"), l_rows, ("?k", "?b"), r_rows)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 5)),
+                min_size=1, max_size=16),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 5)),
+                min_size=1, max_size=16))
+def test_hypothesis_multivar(l_rows, r_rows):
+    run_join(("?x", "?y", "?a"), l_rows, ("?x", "?y", "?b"), r_rows)
