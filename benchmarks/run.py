@@ -2,6 +2,8 @@
 
   bench_join     — Table 2 / Figure 2: join time per LUBM query,
                    MapSQ vs gStore/gStoreD stand-ins (+ speedups)
+  bench_query    — repeated (warm-cache) LUBM queries: eager per-join
+                   loop vs the compiled one-dispatch pipeline
   bench_scaling  — Figure 2(b)-style: MapSQ vs hash join as relation
                    size grows (the 'large dataset scale' claim)
   bench_kernels  — Pallas kernels vs their jnp references (micro)
@@ -83,9 +85,10 @@ def bench_kernels() -> None:
 
 
 def main() -> None:
-    from benchmarks import bench_join
+    from benchmarks import bench_join, bench_query
 
     bench_join.main()
+    bench_query.main()
     bench_scaling()
     bench_kernels()
     try:

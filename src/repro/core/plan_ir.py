@@ -1,0 +1,205 @@
+"""Physical-plan IR for the MapSQ join chain.
+
+The planner (core/planner.py) decides the join ORDER; this module turns that
+order into a *physical* plan — a tree of frozen, hashable nodes (Scan /
+MRJoin / CrossJoin / Project / Distinct) whose static capacities are the
+shapes a compiled executor is specialised on (core/executor.py lowers the
+tree to one jitted device program).
+
+Two properties make plans reusable across queries, which is the whole point
+of the plan/compile cache in sparql/engine.py:
+
+  * capacity bucketing — every capacity is quantised to a pow-2 bucket with
+    a floor (`bucket_capacity`), so near-miss result sizes land on the same
+    static shape instead of forcing a recompile per query;
+  * variable canonicalisation — variable names are renamed ?c0, ?c1, ... in
+    plan order (`canonical_renaming`), so two queries that differ only in
+    variable spelling (or in the constants inside their patterns — those
+    live in the scan *data*, not the plan) share one compiled program.
+
+`PlanShape` is the hashable cache key: scan schemas + scan buckets + join
+structure + projection + distinct. `build_plan(shape, join_caps)` fills in
+the per-join bucket capacities (learned from the calibration run or grown
+by the overflow-retry fallback) and yields the node tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+# Pow-2 bucket floor: tiny relations all share the same smallest shape.
+MIN_BUCKET = 8
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (max(1, n) - 1).bit_length())
+
+
+def bucket_capacity(n: int, floor: int = MIN_BUCKET) -> int:
+    """Quantise a row count to its static capacity bucket (pow-2, floored)."""
+    return max(floor, next_pow2(int(n)))
+
+
+# -- plan nodes --------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    """A partial-match relation, fed in as executor input `scans[index]`."""
+
+    index: int
+    schema: tuple[str, ...]
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MRJoin:
+    """Algorithm-1 MapReduce join at a static output capacity."""
+
+    left: "PlanNode"
+    right: "PlanNode"
+    key_vars: tuple[str, ...]
+    schema: tuple[str, ...]
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossJoin:
+    """Cartesian product for disconnected BGP components.
+
+    Capacity is always the full left×right product: cross_join enumerates
+    pair POSITIONS, so a smaller capacity could silently drop valid pairs
+    (unlike MRJoin, whose overflow flag is exact).
+    """
+
+    left: "PlanNode"
+    right: "PlanNode"
+    schema: tuple[str, ...]
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    child: "PlanNode"
+    schema: tuple[str, ...]
+
+    @property
+    def capacity(self) -> int:
+        return self.child.capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class Distinct:
+    child: "PlanNode"
+
+    @property
+    def schema(self) -> tuple[str, ...]:
+        return self.child.schema
+
+    @property
+    def capacity(self) -> int:
+        return self.child.capacity
+
+
+PlanNode = Union[Scan, MRJoin, CrossJoin, Project, Distinct]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    root: PlanNode
+    n_scans: int
+    join_caps: tuple[int, ...]  # per join step, chain order
+
+    def max_capacity(self) -> int:
+        def walk(node: PlanNode) -> int:
+            kids = [
+                getattr(node, a)
+                for a in ("left", "right", "child")
+                if hasattr(node, a)
+            ]
+            return max([node.capacity] + [walk(k) for k in kids])
+
+        return walk(self.root)
+
+
+# -- shape (the cache key) ---------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanShape:
+    """Everything a compiled program is specialised on, minus join caps.
+
+    Pattern constants are deliberately absent: they only affect scan *data*.
+    Two queries with the same shape dispatch the same compiled executable.
+    """
+
+    scan_schemas: tuple[tuple[str, ...], ...]  # canonical names, plan order
+    scan_caps: tuple[int, ...]
+    cross_flags: tuple[bool, ...]  # per join step (len == n_scans - 1)
+    projection: tuple[str, ...]  # canonical names
+    distinct: bool
+
+
+def canonical_renaming(
+    schemas: tuple[tuple[str, ...], ...],
+) -> dict[str, str]:
+    """Original var -> ?cN by order of first appearance across the plan."""
+    mapping: dict[str, str] = {}
+    for schema in schemas:
+        for v in schema:
+            if v not in mapping:
+                mapping[v] = f"?c{len(mapping)}"
+    return mapping
+
+
+def make_shape(
+    scan_schemas: tuple[tuple[str, ...], ...],
+    scan_caps: tuple[int, ...],
+    cross_flags: tuple[bool, ...],
+    projection: tuple[str, ...],
+    distinct: bool,
+) -> PlanShape:
+    assert len(scan_schemas) == len(scan_caps) == len(cross_flags) + 1
+    return PlanShape(scan_schemas, scan_caps, cross_flags, projection, distinct)
+
+
+def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
+    """Materialise the node tree for a shape at given join bucket capacities."""
+    assert len(join_caps) == len(shape.cross_flags)
+    node: PlanNode = Scan(0, shape.scan_schemas[0], shape.scan_caps[0])
+    effective: list[int] = []
+    for i, is_cross in enumerate(shape.cross_flags):
+        right = Scan(i + 1, shape.scan_schemas[i + 1], shape.scan_caps[i + 1])
+        if is_cross:
+            cap = node.capacity * right.capacity  # exact: see CrossJoin doc
+            schema = node.schema + right.schema
+            node = CrossJoin(node, right, schema, cap)
+        else:
+            cap = bucket_capacity(join_caps[i])
+            key = tuple(v for v in node.schema if v in right.schema)
+            extra = tuple(v for v in right.schema if v not in node.schema)
+            node = MRJoin(node, right, key, node.schema + extra, cap)
+        effective.append(cap)
+    node = Project(node, shape.projection)
+    if shape.distinct:
+        node = Distinct(node)
+    return PhysicalPlan(node, len(shape.scan_schemas), tuple(effective))
+
+
+def grow_join_caps(
+    join_caps: tuple[int, ...],
+    totals: list[int],
+    overflowed: list[bool],
+) -> tuple[int, ...]:
+    """Bucket-overflow fallback: resize flagged joins from their exact totals.
+
+    `totals` are exact even when the join output was truncated (the count is
+    computed before expansion), so one growth step is enough per flagged
+    join; downstream joins that consumed a truncated input are re-checked on
+    the retry dispatch.
+    """
+    new = list(join_caps)
+    for i, flag in enumerate(overflowed):
+        if flag:
+            new[i] = bucket_capacity(max(int(totals[i]), 2 * join_caps[i]))
+    return tuple(new)

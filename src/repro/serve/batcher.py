@@ -3,6 +3,7 @@
 dispatches when full or when max_wait elapses."""
 from __future__ import annotations
 
+import copy
 import dataclasses
 import queue
 import threading
@@ -36,6 +37,8 @@ class MicroBatcher:
         self.q.put(r)
         if not r.event.wait(timeout):
             raise TimeoutError("batcher timed out")
+        if isinstance(r.result, BaseException):
+            raise r.result
         return r.result
 
     def _loop(self) -> None:
@@ -54,7 +57,12 @@ class MicroBatcher:
                     batch.append(self.q.get(timeout=left))
                 except queue.Empty:
                     break
-            results = self.batch_fn([r.payload for r in batch])
+            try:
+                results = self.batch_fn([r.payload for r in batch])
+            except BaseException as e:  # keep the worker alive: fail the
+                # batch, not the server; per-request copies so concurrent
+                # re-raises in client threads don't race on __traceback__
+                results = [copy.copy(e) for _ in batch]
             self.n_batches += 1
             self.n_requests += len(batch)
             for r, res in zip(batch, results):

@@ -1,9 +1,15 @@
 """SPARQL serving front-end: the MapSQ framework (Fig 1) as a service.
 
 Requests (query strings) flow through the MicroBatcher; the engine executes
-each batch — partial matching per pattern, then the MapReduce join chain on
-device. Batching amortizes dispatch overhead exactly like the paper's
+each batch — partial matching per pattern, then the join chain on device.
+Batching amortizes dispatch overhead exactly like the paper's
 CPU-assigns / GPU-computes split.
+
+All requests in all batches share one QueryEngine and therefore ONE plan/
+compile cache and one device scan cache: the first request of a given query
+shape pays calibration + compilation, every later request (from any client)
+is a cache hit dispatching a single precompiled device program. `stats()`
+reports the plan-cache hit rate so operators can watch the warm fraction.
 """
 from __future__ import annotations
 
@@ -23,8 +29,16 @@ class SPARQLServer:
         self._batcher = MicroBatcher(self._run_batch, self.max_batch,
                                      self.max_wait_s)
 
-    def _run_batch(self, queries: list[str]) -> list[list[dict]]:
-        return [self.engine.query(q) for q in queries]
+    def _run_batch(self, queries: list[str]) -> list:
+        # per-request isolation: one bad query (parse error, overflow) fails
+        # that request only, never its batchmates or the worker thread
+        out = []
+        for q in queries:
+            try:
+                out.append(self.engine.query(q))
+            except Exception as e:
+                out.append(e)
+        return out
 
     def query(self, text: str) -> list[dict]:
         return self._batcher.submit(text)
@@ -33,6 +47,8 @@ class SPARQLServer:
         return {
             "batches": self._batcher.n_batches,
             "requests": self._batcher.n_requests,
+            "plan_cache": self.engine.cache_stats(),
+            "scan_cache": self.engine.store.scan_cache_stats(),
         }
 
     def close(self) -> None:

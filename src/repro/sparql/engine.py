@@ -6,22 +6,41 @@ Coprocessing split, exactly as the paper describes it:
   GPU→TPU — pattern range-scans feed the MapReduce join (Algorithm 1,
          core/mr_join.py, jitted).
 
-Dynamic result sizes use the Mars two-pass discipline: a jitted COUNT pass
-returns the exact cardinality of the next join; the host allocates the
-exactly-sized (next-pow2) buffer and runs the jitted EXPAND pass. On
-overflow (capacity hints disabled) the engine doubles and retries.
+Two execution modes share one planner:
+
+  compiled (default) — parse → plan → plan-cache lookup → ONE device
+      dispatch. The whole join chain (plus projection and DISTINCT) is
+      lowered by core/executor.py into a single AOT-compiled program,
+      cached by (plan shape, bucket signature) in a PlanCache. A cache
+      miss first runs the eager chain once: its Mars count passes double
+      as the capacity *calibration* that picks the pow-2 join buckets the
+      program is compiled at. Warm queries then run with zero compiles,
+      no per-join host sync (the only sync reads the overflow flags that
+      ride back with the results), and upload-once device scans from
+      TripleStore.match_pattern_device. If a bucket overflows (a
+      same-shape query with a bigger result), the engine grows the bucket
+      from the exact totals returned by the dispatch and recompiles —
+      the double-on-overflow retry demoted to a host-level fallback.
+
+  eager (compiled=False) — the original loop, kept for differential
+      testing: per join, a jitted COUNT pass, host sync of the
+      cardinality, exactly-sized (next-pow2) buffer, jitted EXPAND pass;
+      or double-on-overflow when exact_count_pass=False.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any
 
 import numpy as np
 
 import jax
 
+from repro.core import executor as ex
 from repro.core import mr_join as mj
-from repro.core.planner import TriplePattern, plan_bgp
+from repro.core import plan_ir
+from repro.core.planner import JoinStep, plan_bgp
 from repro.core.relation import Relation
 from repro.sparql.parser import Query, parse
 from repro.sparql.store import TripleStore, _next_pow2
@@ -33,6 +52,56 @@ class ExecStats:
     n_count_passes: int = 0
     n_retries: int = 0
     peak_capacity: int = 0
+    # compiled-pipeline accounting
+    cache_hits: int = 0
+    cache_misses: int = 0
+    n_compiles: int = 0  # XLA compilations triggered by this query
+    n_dispatches: int = 0  # device program launches (warm target: 1)
+
+
+@dataclasses.dataclass
+class PlanCacheEntry:
+    shape: plan_ir.PlanShape
+    join_caps: tuple[int, ...]
+    compiled: ex.CompiledPlan
+
+
+class PlanCache:
+    """(plan shape, bucket signature) -> compiled executable, FIFO-bounded."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[plan_ir.PlanShape, PlanCacheEntry] = (
+            OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0
+
+    def get(self, shape: plan_ir.PlanShape) -> PlanCacheEntry | None:
+        return self._entries.get(shape)
+
+    def put(self, shape: plan_ir.PlanShape, entry: PlanCacheEntry) -> None:
+        self._entries[shape] = entry
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "compiles": self.compiles,
+            "entries": len(self._entries),
+            "hit_rate": self.hit_rate,
+        }
 
 
 @dataclasses.dataclass
@@ -41,6 +110,8 @@ class QueryEngine:
     use_kernel: bool = False  # Pallas pair-expand in the join
     exact_count_pass: bool = True  # Mars two-pass vs double-on-overflow
     max_capacity: int = 1 << 24
+    compiled: bool = True  # one-dispatch compiled pipeline vs eager loop
+    plan_cache_entries: int = 256
 
     def __post_init__(self):
         self._jit_join = jax.jit(
@@ -48,16 +119,14 @@ class QueryEngine:
         )
         self._jit_count = jax.jit(mj.mr_join_count)
         self._jit_cross = jax.jit(mj.cross_join, static_argnames=("capacity",))
+        self.plan_cache = PlanCache(self.plan_cache_entries)
 
     # -- public API --------------------------------------------------------
     def query(self, text: str) -> list[dict[str, str]]:
         """Parse, execute, decode: rows as {var: term} dicts."""
         q = parse(text)
-        rel, stats = self.execute(q)
-        rel = rel.project(q.projection())
+        rel, _ = self.execute(q)
         rows = rel.to_numpy()
-        if q.distinct:
-            rows = np.unique(rows, axis=0)
         d = self.store.dictionary
         return [
             {v: d.decode(int(t)) for v, t in zip(rel.schema, row)}
@@ -65,51 +134,196 @@ class QueryEngine:
         ]
 
     def execute(self, q: Query) -> tuple[Relation, ExecStats]:
-        """Run the BGP: partial matching then the MapReduce-join chain."""
+        """Run the BGP; the result is projected (and DISTINCT-deduplicated,
+        device-side) per the query."""
         stats = ExecStats()
         steps = plan_bgp(q.patterns, self.store.estimate_cardinality)
-        # partial matching (the paper's step 1; gStore-equivalent scans)
+        if self.compiled:
+            rel = self._execute_compiled(q, steps, stats)
+        else:
+            rel = self._execute_eager(q, steps, stats)
+        return rel, stats
+
+    def cache_stats(self) -> dict:
+        return self.plan_cache.stats()
+
+    # -- eager path --------------------------------------------------------
+    def _execute_eager(
+        self, q: Query, steps: list[JoinStep], stats: ExecStats
+    ) -> Relation:
         partials = [
             self.store.match_pattern(q.patterns[st.pattern_index])
             for st in steps
         ]
-        acc = partials[0]
-        for st, nxt in zip(steps[1:], partials[1:]):
-            acc = self._join_once(acc, nxt, st.is_cross, stats)
-        return acc, stats
+        acc, _ = self._run_chain_eager(
+            partials, [st.is_cross for st in steps[1:]], stats
+        )
+        acc = acc.project(q.projection())
+        if q.distinct:
+            acc = mj.distinct(acc)  # device-side dedup before decode
+        return acc
 
-    # -- internals ---------------------------------------------------------
-    def _join_once(self, left: Relation, right: Relation, is_cross: bool,
-                   stats: ExecStats) -> Relation:
+    def _run_chain_eager(
+        self,
+        partials: list[Relation],
+        cross_flags: list[bool],
+        stats: ExecStats,
+    ) -> tuple[Relation, list[int]]:
+        """The per-join loop. Returns the result and each join's exact total
+        (the totals are what the compiled path calibrates its buckets on)."""
+        acc = partials[0]
+        totals: list[int] = []
+        for nxt, is_cross in zip(partials[1:], cross_flags):
+            acc, total = self._join_once(acc, nxt, is_cross, stats)
+            totals.append(total)
+        return acc, totals
+
+    def _join_once(
+        self, left: Relation, right: Relation, is_cross: bool, stats: ExecStats
+    ) -> tuple[Relation, int]:
         stats.n_joins += 1
         if is_cross:
             cap = max(1, _next_pow2(left.capacity * right.capacity))
+            stats.n_dispatches += 1
             out, total, overflow = self._jit_cross(left, right, capacity=cap)
             assert not bool(overflow)
             stats.peak_capacity = max(stats.peak_capacity, cap)
-            return mj.compact(out)
+            return mj.compact(out), int(total)
         if self.exact_count_pass:
+            stats.n_dispatches += 1
             total = int(self._jit_count(left, right))
             stats.n_count_passes += 1
             cap = max(1, _next_pow2(total))
+            stats.n_dispatches += 1
             out, _, overflow = self._jit_join(
                 left, right, capacity=cap, use_kernel=self.use_kernel
             )
             assert not bool(overflow)
             stats.peak_capacity = max(stats.peak_capacity, cap)
-            return out
+            return out, total
         cap = max(left.capacity, right.capacity)
         while True:
+            stats.n_dispatches += 1
             out, total, overflow = self._jit_join(
                 left, right, capacity=cap, use_kernel=self.use_kernel
             )
             stats.peak_capacity = max(stats.peak_capacity, cap)
             if not bool(overflow):
-                return out
+                return out, int(total)
             stats.n_retries += 1
             cap *= 2
             if cap > self.max_capacity:
                 raise MemoryError(f"join result exceeds {self.max_capacity}")
+
+    # -- compiled path -----------------------------------------------------
+    def _execute_compiled(
+        self, q: Query, steps: list[JoinStep], stats: ExecStats
+    ) -> Relation:
+        patterns = [q.patterns[st.pattern_index] for st in steps]
+        cross_flags = tuple(st.is_cross for st in steps[1:])
+        # upload-once device scans (bucketed pow-2 capacities)
+        scans = tuple(self.store.match_pattern_device(tp) for tp in patterns)
+        # canonicalise variable names so structurally-equal queries share
+        # one compiled program (constants live in the scan data, not here)
+        schemas = tuple(s.schema for s in scans)
+        rename = plan_ir.canonical_renaming(schemas)
+        inverse = {c: o for o, c in rename.items()}
+        canon_scans = tuple(
+            Relation(tuple(rename[v] for v in s.schema), s.cols, s.valid)
+            for s in scans
+        )
+        shape = plan_ir.make_shape(
+            tuple(s.schema for s in canon_scans),
+            tuple(s.capacity for s in canon_scans),
+            cross_flags,
+            tuple(rename[v] for v in q.projection()),
+            q.distinct,
+        )
+        stats.n_joins = len(cross_flags)
+
+        entry = self.plan_cache.get(shape)
+        if entry is None:
+            rel = self._compiled_cold(shape, canon_scans, cross_flags, stats)
+        else:
+            rel = self._compiled_warm(shape, entry, canon_scans, stats)
+        # back to the query's own variable names
+        return Relation(
+            tuple(inverse[v] for v in rel.schema), rel.cols, rel.valid
+        )
+
+    def _compiled_cold(
+        self,
+        shape: plan_ir.PlanShape,
+        canon_scans: tuple[Relation, ...],
+        cross_flags: tuple[bool, ...],
+        stats: ExecStats,
+    ) -> Relation:
+        """Cache miss: the eager chain's count passes calibrate the join
+        buckets; compile at those shapes; serve this query from the eager
+        result (the compiled program takes over from the next query on)."""
+        stats.cache_misses += 1
+        self.plan_cache.misses += 1
+        eager_stats = ExecStats()
+        acc, totals = self._run_chain_eager(
+            list(canon_scans), list(cross_flags), eager_stats
+        )
+        stats.n_count_passes += eager_stats.n_count_passes
+        stats.n_dispatches += eager_stats.n_dispatches
+        stats.n_retries += eager_stats.n_retries
+        join_caps = tuple(plan_ir.bucket_capacity(t) for t in totals)
+        self._compile_entry(shape, join_caps, canon_scans, stats)
+        acc = acc.project(list(shape.projection))
+        if shape.distinct:
+            acc = mj.distinct(acc)
+        return acc
+
+    def _compiled_warm(
+        self,
+        shape: plan_ir.PlanShape,
+        entry: PlanCacheEntry,
+        canon_scans: tuple[Relation, ...],
+        stats: ExecStats,
+    ) -> Relation:
+        stats.cache_hits += 1
+        self.plan_cache.hits += 1
+        while True:
+            stats.n_dispatches += 1
+            rel, totals, flags = entry.compiled(canon_scans)
+            stats.peak_capacity = max(
+                stats.peak_capacity, entry.compiled.plan.max_capacity()
+            )
+            flags_np = np.asarray(flags)  # the single host sync
+            if not flags_np.any():
+                return rel
+            # bucket overflow: grow from the exact totals, recompile, retry
+            stats.n_retries += 1
+            new_caps = plan_ir.grow_join_caps(
+                entry.join_caps,
+                [int(t) for t in np.asarray(totals)],
+                [bool(f) for f in flags_np],
+            )
+            if max(new_caps) > self.max_capacity:
+                raise MemoryError(
+                    f"join result exceeds {self.max_capacity}"
+                )
+            entry = self._compile_entry(shape, new_caps, canon_scans, stats)
+
+    def _compile_entry(
+        self,
+        shape: plan_ir.PlanShape,
+        join_caps: tuple[int, ...],
+        canon_scans: tuple[Relation, ...],
+        stats: ExecStats,
+    ) -> PlanCacheEntry:
+        plan = plan_ir.build_plan(shape, join_caps)
+        compiled = ex.compile_plan(
+            plan, canon_scans, use_kernel=self.use_kernel
+        )
+        stats.n_compiles += 1
+        self.plan_cache.compiles += 1
+        entry = PlanCacheEntry(shape, join_caps, compiled)
+        self.plan_cache.put(shape, entry)
+        return entry
 
     def explain(self, text: str) -> list[dict[str, Any]]:
         q = parse(text)
@@ -119,6 +333,11 @@ class QueryEngine:
                 "pattern": dataclasses.astuple(q.patterns[st.pattern_index]),
                 "est_rows": self.store.estimate_cardinality(
                     q.patterns[st.pattern_index]
+                ),
+                "bucket": plan_ir.bucket_capacity(
+                    self.store.estimate_cardinality(
+                        q.patterns[st.pattern_index]
+                    )
                 ),
                 "join_vars": st.key_vars,
                 "cross": st.is_cross,

@@ -1,8 +1,9 @@
 """A small SPARQL parser: PREFIX / SELECT [DISTINCT] / WHERE { BGP }.
 
 Covers the query class the paper evaluates (basic graph patterns with
-variables, IRIs, prefixed names and literals). Parsing is host-side — part
-of the CPU half of the coprocessing strategy.
+variables, IRIs, prefixed names, literals, and `;` predicate-object lists
+as used in LUBM-style queries). Parsing is host-side — part of the CPU
+half of the coprocessing strategy.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ _TOKEN = re.compile(
       | (?P<literal>"(?:[^"\\]|\\.)*")
       | (?P<pname>[A-Za-z_][\w\-]*:[A-Za-z_][\w\-]*)
       | (?P<pdecl>[A-Za-z_][\w\-]*:)
-      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|\{|\}|\.|\*|a\b)
+      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|\{|\}|\.|;|\*|a\b)
     )""",
     re.VERBOSE | re.IGNORECASE,
 )
@@ -119,8 +120,14 @@ def parse(text: str) -> Query:
 
     patterns: list[TriplePattern] = []
     while peek() != "}":
-        s, p, o = resolve(eat()), resolve(eat()), resolve(eat())
-        patterns.append(TriplePattern(s, p, o))
+        s = resolve(eat())
+        patterns.append(TriplePattern(s, resolve(eat()), resolve(eat())))
+        # `;` predicate-object lists: `?x a ub:Student ; ub:memberOf ?d .`
+        while peek() == ";":
+            eat()
+            if peek() in (".", "}"):  # dangling `;` before a terminator
+                break
+            patterns.append(TriplePattern(s, resolve(eat()), resolve(eat())))
         if peek() == ".":
             eat()
     eat("}")

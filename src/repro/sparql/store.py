@@ -4,16 +4,30 @@ Three sorted permutation indexes (SPO, POS, OSP) give a binary-search range
 scan for any bound-prefix pattern; the scan result IS the paper's "partial
 match" relation fed to the MapReduce join. Index build is host-side numpy
 (load time); scans are O(log n) + slice.
+
+For the compiled query pipeline the store additionally keeps scan results
+*device-resident*: `match_pattern_device` uploads a pattern's partial-match
+arrays once, at a bucketed (pow-2) capacity, and hands the same device
+buffers to every later query with the same pattern structure — so warm
+queries feed the compiled executor with zero host->device re-staging. A
+host-side row cache backs `match_rows`, making repeated planning
+(cardinality estimation) a dict lookup. Both caches assume the triple set
+is immutable after construction (it is: `triples` is fixed in __post_init__).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
+from repro.core.plan_ir import bucket_capacity, next_pow2
 from repro.core.planner import TriplePattern
 from repro.core.relation import Relation
 from repro.sparql.dictionary import TermDict
+
+# back-compat alias: engine/benchmarks historically import it from here
+_next_pow2 = next_pow2
 
 # index order -> the permutation of (s, p, o) columns it sorts by
 _INDEXES = {
@@ -38,6 +52,7 @@ _CHOICE = {
 class TripleStore:
     triples: np.ndarray  # (n, 3) int32 dictionary-encoded
     dictionary: TermDict
+    scan_cache_entries: int = 512  # per cache; FIFO eviction
 
     def __post_init__(self):
         self.triples = np.asarray(self.triples, np.int32).reshape(-1, 3)
@@ -46,6 +61,11 @@ class TripleStore:
             reordered = self.triples[:, perm]
             order = np.lexsort((reordered[:, 2], reordered[:, 1], reordered[:, 0]))
             self._sorted[name] = np.ascontiguousarray(reordered[order])
+        # scan caches, keyed by the pattern's canonical structure
+        self._rows_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._device_cache: OrderedDict[tuple, Relation] = OrderedDict()
+        self._scan_hits = 0
+        self._scan_misses = 0
 
     def __len__(self) -> int:
         return len(self.triples)
@@ -69,11 +89,42 @@ class TripleStore:
             )
         return data[lo:hi]
 
+    def _scan_key(self, tp: TriplePattern) -> tuple:
+        """Canonical pattern structure: variables -> ?0/?1/... by first
+        appearance (captures repeated-variable filters), constants verbatim.
+        """
+        seen: dict[str, str] = {}
+        out = []
+        for term in (tp.s, tp.p, tp.o):
+            if term.startswith("?"):
+                if term not in seen:
+                    seen[term] = f"?{len(seen)}"
+                out.append(seen[term])
+            else:
+                out.append(term)
+        return tuple(out)
+
+    @staticmethod
+    def _put(cache: OrderedDict, key, value, limit: int) -> None:
+        cache[key] = value
+        while len(cache) > limit:
+            cache.popitem(last=False)
+
     def estimate_cardinality(self, tp: TriplePattern) -> int:
         return len(self.match_rows(tp))
 
     def match_rows(self, tp: TriplePattern) -> np.ndarray:
-        """Matching triples in (s, p, o) column order."""
+        """Matching triples in (s, p, o) column order (cached; treat the
+        returned array as read-only)."""
+        key = self._scan_key(tp)
+        cached = self._rows_cache.get(key)
+        if cached is not None:
+            return cached
+        rows = self._match_rows_uncached(tp)
+        self._put(self._rows_cache, key, rows, self.scan_cache_entries)
+        return rows
+
+    def _match_rows_uncached(self, tp: TriplePattern) -> np.ndarray:
         bound = self._bound(tp)
         if any(v < 0 for v in bound.values()):
             return np.zeros((0, 3), np.int32)  # unknown constant: no matches
@@ -97,24 +148,60 @@ class TripleStore:
                 rows = rows[rows[:, i] == bound[p]]
         return rows
 
-    def match_pattern(self, tp: TriplePattern, min_capacity: int = 1) -> Relation:
-        """Partial-match Relation over the pattern's variables."""
-        rows = self.match_rows(tp)
-        vars_, cols = [], []
+    def _pattern_columns(
+        self, tp: TriplePattern, rows: np.ndarray
+    ) -> tuple[tuple[str, ...], np.ndarray]:
+        """Project matched triples to the pattern's variable columns,
+        filtering repeated variables (e.g. (?x p ?x))."""
+        vars_: list[str] = []
+        cols: list[int] = []
         for i, term in enumerate((tp.s, tp.p, tp.o)):
             if term.startswith("?"):
-                if term in vars_:  # repeated var, e.g. (?x p ?x): filter
+                if term in vars_:  # repeated var: equality filter
                     rows = rows[rows[:, i] == rows[:, cols[vars_.index(term)]]]
                 else:
                     vars_.append(term)
                     cols.append(i)
         mat = rows[:, cols] if len(rows) else np.zeros((0, len(cols)), np.int32)
+        return tuple(vars_), mat
+
+    def match_pattern(self, tp: TriplePattern, min_capacity: int = 1) -> Relation:
+        """Partial-match Relation over the pattern's variables (eager path:
+        fresh host->device upload, exact next-pow2 capacity)."""
+        vars_, mat = self._pattern_columns(tp, self.match_rows(tp))
         capacity = max(min_capacity, _next_pow2(len(mat)))
-        return Relation.from_numpy(tuple(vars_), mat, capacity=capacity)
+        return Relation.from_numpy(vars_, mat, capacity=capacity)
 
+    def match_pattern_device(self, tp: TriplePattern) -> Relation:
+        """Device-resident partial match at a bucketed capacity.
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (max(1, n) - 1).bit_length())
+        The device arrays are uploaded once per pattern structure and shared
+        by every subsequent call (and across queries differing only in
+        variable spelling); the returned Relation just rebinds the schema to
+        this pattern's variable names.
+        """
+        key = self._scan_key(tp)
+        entry = self._device_cache.get(key)
+        if entry is None:
+            self._scan_misses += 1
+            vars_, mat = self._pattern_columns(tp, self.match_rows(tp))
+            placeholder = tuple(f"?{i}" for i in range(len(vars_)))
+            entry = Relation.from_numpy(
+                placeholder, mat, capacity=bucket_capacity(len(mat))
+            )
+            self._put(self._device_cache, key, entry, self.scan_cache_entries)
+            actual = vars_
+        else:
+            self._scan_hits += 1
+            actual, _ = self._pattern_columns(tp, np.zeros((0, 3), np.int32))
+        return Relation(tuple(actual), entry.cols, entry.valid)
+
+    def scan_cache_stats(self) -> dict:
+        return {
+            "hits": self._scan_hits,
+            "misses": self._scan_misses,
+            "entries": len(self._device_cache),
+        }
 
 
 def store_from_string_triples(

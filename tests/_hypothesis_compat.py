@@ -1,0 +1,49 @@
+"""Fallback stand-ins for `hypothesis` so test modules collect without it.
+
+The property tests are kept when hypothesis is installed (it's in
+requirements-dev.txt); without it they become individually-skipped tests
+instead of failing the whole module at import time. Usage:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+HAVE_HYPOTHESIS = False
+
+
+class _Stub:
+    """Absorbs any strategy-building expression (st.lists(...), composites)."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _Stub()
+
+
+def given(*args, **kwargs):
+    def decorate(fn):
+        @pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
+        def skipped():
+            pass
+
+        skipped.__name__ = fn.__name__
+        skipped.__doc__ = fn.__doc__
+        return skipped
+
+    return decorate
+
+
+def settings(*args, **kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import mr_join as mj
 from repro.core.relation import Relation

@@ -2,8 +2,11 @@
 hypothesis properties of the batch formats."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.data.graphs import MinibatchPipeline, make_molecule_batch
 from repro.data.recsys import CTRPipeline

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.kernels.bitonic_sort import ops as sort_ops
 from repro.kernels.bitonic_sort import ref as sort_ref
