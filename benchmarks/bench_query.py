@@ -7,6 +7,10 @@ calibration + compilation ONCE per plan shape, then serves every repeat
 with a single device dispatch from the plan/compile cache — the behaviour a
 query-serving deployment actually sees.
 
+Besides the 5 plain-BGP LUBM queries this also tracks the FILTER /
+OPTIONAL / LIMIT operator shapes (F1, O1, FO1) so the perf trajectory
+covers the full prepared-query algebra, not just join chains.
+
     PYTHONPATH=src python -m benchmarks.bench_query [scale] [repeats]
 """
 from __future__ import annotations
@@ -16,6 +20,28 @@ import time
 
 from repro.sparql import lubm
 from repro.sparql.engine import QueryEngine
+
+# operator-coverage shapes: device-side FILTER masks, OPTIONAL left joins
+# with UNBOUND padding, and a LIMIT slice on top of both
+EXTRA_QUERIES: dict[str, str] = {
+    # F1: star BGP + string-identity and numeric-free filter
+    "F1": lubm.PREFIX + """SELECT ?p ?n WHERE {
+        ?p a ub:FullProfessor .
+        ?p ub:name ?n .
+        FILTER (?n != "prof_0_0_0")
+    }""",
+    # O1: wide type scan, optional advisor edge (some students unmatched)
+    "O1": lubm.PREFIX + """SELECT ?s ?a WHERE {
+        ?s a ub:GraduateStudent .
+        OPTIONAL { ?s ub:advisor ?a }
+    }""",
+    # FO1: filter + optional + limit through one compiled program
+    "FO1": lubm.PREFIX + """SELECT ?s ?d ?a WHERE {
+        ?s ub:memberOf ?d .
+        OPTIONAL { ?s ub:advisor ?a }
+        FILTER (?s != ?a)
+    } LIMIT 64""",
+}
 
 
 def _time(fn, repeat: int) -> float:
@@ -30,7 +56,8 @@ def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
     eager = QueryEngine(store, compiled=False)
     compiled = QueryEngine(store)
     out = []
-    for name, text in lubm.QUERIES.items():
+    queries = {**lubm.QUERIES, **EXTRA_QUERIES}
+    for name, text in queries.items():
         # warm both: the eager jit cache and the compiled plan cache
         rows_e = eager.query(text)
         rows_c = compiled.query(text)

@@ -39,5 +39,6 @@ store = store_from_string_triples([
 engine = QueryEngine(store)
 q = 'SELECT ?person WHERE { ?person <hasJob> ?job . ?job <workAt> "Hospital" . }'
 print("\nSPARQL:", q)
-print("plan:", engine.explain(q))
-print("answers:", engine.query(q))
+prepared = engine.prepare(q)
+print(prepared.explain())
+print("answers:", prepared.run().rows)

@@ -55,6 +55,25 @@ print(f"plan-cache hit rate: {stats['plan_cache']['hit_rate']:.0%} "
       f"{stats['requests']} requests)")
 server.close()
 
+# prepared-query API: FILTER + OPTIONAL + LIMIT compiled into one program;
+# explain() shows the algebra, the physical plan and the cache state
+prepared = engine.prepare(
+    "PREFIX ub: <http://swat.cse.lehigh.edu/onto/univ-bench.owl#>\n"
+    "SELECT ?s ?d ?a WHERE {\n"
+    "  ?s ub:memberOf ?d .          # required pattern\n"
+    "  OPTIONAL { ?s ub:advisor ?a }\n"
+    "  FILTER (?s != ?a)\n"
+    "} LIMIT 20"
+)
+print("\nprepared FILTER+OPTIONAL+LIMIT query, before the first run:")
+print(prepared.explain())
+rs = prepared.run()
+print(f"-> {len(rs)} rows; cold run: {rs.stats.n_compiles} compile(s)")
+rs = prepared.run()
+print(f"-> warm run: {rs.stats.n_compiles} compiles, "
+      f"{rs.stats.n_dispatches} dispatch")
+print(prepared.explain().splitlines()[-3])  # cache: compiled, buckets=...
+
 # cross-check every query against the CPU hash-join baseline
 print("validating against the hash-join baseline:")
 for name, text in QUERIES.items():

@@ -2,14 +2,22 @@
 
 The eager engine dispatches per join (count pass, host sync, expand pass).
 This module instead lowers the whole plan tree — every MapReduce join, the
-cross joins, projection and DISTINCT — into a single function of the scan
-relations, then AOT-compiles it with `jax.jit(...).lower(...).compile()`.
+cross joins, OPTIONAL left joins, FILTER masks, projection, DISTINCT and
+LIMIT/OFFSET — into a single function of the scan relations plus the
+runtime constants, then AOT-compiles it with `jax.jit(...).lower(...)
+.compile()`.
 
 A warm query is therefore exactly one device dispatch. The per-join exact
 totals and overflow flags ride back in that same dispatch, so the host's
 only synchronisation is reading the flags afterwards; when a bucket
 overflowed, the engine grows it (plan_ir.grow_join_caps) and recompiles —
 the Mars double-on-overflow discipline demoted to a rare fallback.
+
+Runtime constants keep the cache hot across query variants: FILTER
+comparison constants arrive as `consts_i` (term ids) / `consts_f` (numeric
+values), LIMIT/OFFSET ride at the tail of `consts_i`, and `num_vals` is
+the store's per-term numeric table — all plain inputs, none baked into the
+executable.
 
 AOT compilation (rather than relying on jit's implicit cache) keeps the
 compile count observable: `compile_plan` is the only place XLA compilation
@@ -28,11 +36,14 @@ from repro.core import mr_join as mj
 from repro.core.plan_ir import (
     CrossJoin,
     Distinct,
+    Filter,
+    LeftJoin,
     MRJoin,
     PhysicalPlan,
     PlanNode,
     Project,
     Scan,
+    Slice,
 )
 from repro.core.relation import Relation
 
@@ -47,14 +58,20 @@ class ChainResult(NamedTuple):
 
 def lower(
     plan: PhysicalPlan, use_kernel: bool = False
-) -> Callable[[tuple[Relation, ...]], ChainResult]:
-    """Plan tree -> a pure function of the scan tuple (jit-able).
+) -> Callable[..., ChainResult]:
+    """Plan tree -> a pure function of (scans, consts_i, consts_f, num_vals).
 
-    Join totals/overflows are collected in evaluation (post-)order, which
-    for the planner's left-deep chains is simply chain order.
+    Join totals/overflows are collected in evaluation (post-)order: the
+    required chain first, then each OPTIONAL group's inner joins followed
+    by its left join — the order the engine calibrates join_caps in.
     """
 
-    def run(scans: tuple[Relation, ...]) -> ChainResult:
+    def run(
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+    ) -> ChainResult:
         totals: list[jax.Array] = []
         flags: list[jax.Array] = []
 
@@ -79,10 +96,32 @@ def lower(
                 totals.append(total)
                 flags.append(ovf)
                 return mj.compact(out)
+            if isinstance(node, LeftJoin):
+                left = eval_node(node.left)
+                right = eval_node(node.right)
+                out, total, ovf = mj.left_join(
+                    left, right, capacity=node.join_cap, use_kernel=use_kernel
+                )
+                totals.append(total)
+                flags.append(ovf)
+                return out
+            if isinstance(node, Filter):
+                child = eval_node(node.child)
+                keep = mj.filter_mask(
+                    child, node.conds, consts_i, consts_f, num_vals
+                )
+                return Relation(child.schema, child.cols, keep)
             if isinstance(node, Project):
                 return eval_node(node.child).project(list(node.schema))
             if isinstance(node, Distinct):
                 return mj.distinct(eval_node(node.child))
+            if isinstance(node, Slice):
+                child = eval_node(node.child)
+                return mj.slice_valid(
+                    child,
+                    consts_i[node.offset_index],
+                    consts_i[node.limit_index],
+                )
             raise TypeError(f"unknown plan node {node!r}")
 
         rel = eval_node(plan.root)
@@ -103,29 +142,43 @@ class CompiledPlan:
     executable: Any  # jax.stages.Compiled
     n_joins: int
 
-    def __call__(self, scans: tuple[Relation, ...]) -> ChainResult:
-        return self.executable(scans)
+    def __call__(
+        self,
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+    ) -> ChainResult:
+        return self.executable(scans, consts_i, consts_f, num_vals)
 
 
 def compile_plan(
     plan: PhysicalPlan,
     scans: tuple[Relation, ...],
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
     use_kernel: bool = False,
 ) -> CompiledPlan:
-    """AOT-compile the plan against the scans' (static) shapes.
+    """AOT-compile the plan against the inputs' (static) shapes.
 
-    The executable accepts any scan tuple with the same schemas/capacities —
-    i.e. every future query that hashes to the same PlanShape.
+    The executable accepts any input tuple with the same schemas/capacities
+    — i.e. every future query that hashes to the same PlanShape.
     """
     fn = jax.jit(lower(plan, use_kernel=use_kernel))
-    executable = fn.lower(scans).compile()
+    executable = fn.lower(scans, consts_i, consts_f, num_vals).compile()
     return CompiledPlan(plan, executable, len(plan.join_caps))
 
 
 def execute_plan(
     plan: PhysicalPlan,
     scans: tuple[Relation, ...],
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
     use_kernel: bool = False,
 ) -> ChainResult:
     """Uncompiled (op-by-op) interpretation — for tests and debugging."""
-    return lower(plan, use_kernel=use_kernel)(scans)
+    return lower(plan, use_kernel=use_kernel)(
+        scans, consts_i, consts_f, num_vals
+    )

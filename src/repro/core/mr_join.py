@@ -25,7 +25,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.relation import INVALID_LEFT, INVALID_RIGHT, Relation, shared_vars
+from repro.core.relation import (
+    INVALID_LEFT,
+    INVALID_RIGHT,
+    UNBOUND,
+    Relation,
+    shared_vars,
+)
 from repro.core.segments import dense_rank_two_sided
 
 
@@ -143,6 +149,44 @@ def mr_join(
     return Relation(out_schema, cols, valid), plan.total, overflowed
 
 
+def left_join(
+    left: Relation,
+    right: Relation,
+    capacity: int,
+    use_kernel: bool = False,
+) -> tuple[Relation, jax.Array, jax.Array]:
+    """OPTIONAL as Algorithm 1 plus unmatched-left padding.
+
+    The first `capacity` output slots hold the inner-join result; the
+    trailing `left.capacity` slots hold the left rows with no right match,
+    their right-only columns set to the UNBOUND sentinel (so the padding
+    part can never overflow). Returns (result, join_total, join_overflowed)
+    where the total/overflow describe only the inner-join part — that is
+    the bucket the engine calibrates and grows.
+    """
+    plan, _ = mr_join_plan(left, right)
+    li, rj, valid = expand_pairs(plan, capacity, use_kernel=use_kernel)
+    right_extra = [v for v in right.schema if v not in left.schema]
+    out_schema = tuple(left.schema) + tuple(right_extra)
+    l_cols = left.cols[li]
+    r_cols = (
+        right.project(right_extra).cols[rj]
+        if right_extra
+        else jnp.zeros((capacity, 0), jnp.int32)
+    )
+    join_cols = jnp.where(
+        valid[:, None], jnp.concatenate([l_cols, r_cols], axis=1), 0
+    )
+    # unmatched-left padding (the semijoin mask, inverted)
+    unmatched = left.valid & ~_matched_left_mask(plan, left)
+    pad = jnp.full((left.capacity, len(right_extra)), UNBOUND, jnp.int32)
+    pad_cols = jnp.concatenate([left.cols, pad], axis=1)
+    cols = jnp.concatenate([join_cols, pad_cols], axis=0)
+    valid_all = jnp.concatenate([valid, unmatched])
+    overflowed = plan.total > capacity
+    return Relation(out_schema, cols, valid_all), plan.total, overflowed
+
+
 def cross_join(
     left: Relation, right: Relation, capacity: int
 ) -> tuple[Relation, jax.Array, jax.Array]:
@@ -183,9 +227,83 @@ def distinct(rel: Relation) -> Relation:
     return Relation(rel.schema, rel.cols, keep[inv])
 
 
+def _matched_left_mask(plan: JoinPlanArrays, left: Relation) -> jax.Array:
+    """valid mask of left rows having >=1 right match, in buffer order
+    (shared by semijoin_mask and left_join's unmatched padding)."""
+    has = plan.counts > 0
+    in_sorted_order = jnp.zeros(left.capacity, bool).at[plan.order_l].set(has)
+    return left.valid & in_sorted_order
+
+
 def semijoin_mask(left: Relation, right: Relation) -> jax.Array:
     """valid mask of left rows having >=1 match in right (for FILTER EXISTS)."""
     plan, _ = mr_join_plan(left, right)
-    has = plan.counts > 0
-    mask_sorted_order = jnp.zeros(left.capacity, bool).at[plan.order_l].set(has)
-    return left.valid & mask_sorted_order
+    return _matched_left_mask(plan, left)
+
+
+# -- FILTER masks and LIMIT/OFFSET (device-side, jit-able) -------------------
+
+_NUMERIC_CMP = {
+    "=": jnp.equal,
+    "!=": jnp.not_equal,
+    "<": jnp.less,
+    "<=": jnp.less_equal,
+    ">": jnp.greater,
+    ">=": jnp.greater_equal,
+}
+
+
+def _numeric_of(col: jax.Array, num_vals: jax.Array) -> jax.Array:
+    """Gather per-row numeric values; UNBOUND/non-numeric terms become NaN."""
+    safe = jnp.clip(col, 0, num_vals.shape[0] - 1)
+    return jnp.where(col >= 0, num_vals[safe], jnp.nan)
+
+
+def filter_mask(
+    rel: Relation,
+    conds: tuple,
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
+) -> jax.Array:
+    """Conjunction of comparison conditions as a validity mask.
+
+    Each cond is a plan_ir.FilterCond `(lhs_var, op, kind, ref)`:
+      kind "var" — rhs is the variable named `ref`;
+      kind "id"  — rhs is the term id `consts_i[ref]` (= / != by identity);
+      kind "num" — rhs is the float `consts_f[ref]` (compared by value via
+                   the dictionary's numeric table).
+    SPARQL error semantics: an unbound operand, or a non-numeric term under
+    a numeric comparison, fails the condition — even for `!=`.
+    """
+    keep = rel.valid
+    for lhs, op, kind, ref in conds:
+        a = rel.column(lhs)
+        if kind == "num" or (kind == "var" and op in ("<", "<=", ">", ">=")):
+            va = _numeric_of(a, num_vals)
+            vb = (
+                _numeric_of(rel.column(ref), num_vals)
+                if kind == "var"
+                else consts_f[ref]
+            )
+            ok = ~jnp.isnan(va) & ~jnp.isnan(vb)
+            keep = keep & ok & _NUMERIC_CMP[op](va, vb)
+        else:  # term-identity comparison (= / != on ids)
+            b = rel.column(ref) if kind == "var" else consts_i[ref]
+            bound = a != UNBOUND
+            if kind == "var":
+                bound = bound & (b != UNBOUND)
+            eq = a == b
+            keep = keep & bound & (eq if op == "=" else ~eq)
+    return keep
+
+
+def slice_valid(rel: Relation, offset, limit) -> Relation:
+    """LIMIT/OFFSET over the valid rows, in buffer order.
+
+    `offset`/`limit` may be traced int scalars, so one compiled program
+    serves every (offset, limit) combination of the same plan shape.
+    """
+    rank = jnp.cumsum(rel.valid.astype(jnp.int32))
+    keep = rel.valid & (rank > offset) & (rank <= offset + limit)
+    return Relation(rel.schema, rel.cols, keep)

@@ -2,12 +2,12 @@
 
 The planner (core/planner.py) decides the join ORDER; this module turns that
 order into a *physical* plan — a tree of frozen, hashable nodes (Scan /
-MRJoin / CrossJoin / Project / Distinct) whose static capacities are the
-shapes a compiled executor is specialised on (core/executor.py lowers the
-tree to one jitted device program).
+MRJoin / CrossJoin / LeftJoin / Filter / Project / Distinct / Slice) whose
+static capacities are the shapes a compiled executor is specialised on
+(core/executor.py lowers the tree to one jitted device program).
 
-Two properties make plans reusable across queries, which is the whole point
-of the plan/compile cache in sparql/engine.py:
+Three properties make plans reusable across queries, which is the whole
+point of the plan/compile cache in sparql/engine.py:
 
   * capacity bucketing — every capacity is quantised to a pow-2 bucket with
     a floor (`bucket_capacity`), so near-miss result sizes land on the same
@@ -15,12 +15,18 @@ of the plan/compile cache in sparql/engine.py:
   * variable canonicalisation — variable names are renamed ?c0, ?c1, ... in
     plan order (`canonical_renaming`), so two queries that differ only in
     variable spelling (or in the constants inside their patterns — those
-    live in the scan *data*, not the plan) share one compiled program.
+    live in the scan *data*, not the plan) share one compiled program;
+  * runtime constants — FILTER comparison constants and LIMIT/OFFSET values
+    are NOT part of the plan: they are passed to the compiled program as
+    int/float input arrays (FilterCond stores an *index* into them), so
+    queries differing only in a filter constant or a limit share one
+    executable too.
 
 `PlanShape` is the hashable cache key: scan schemas + scan buckets + join
-structure + projection + distinct. `build_plan(shape, join_caps)` fills in
-the per-join bucket capacities (learned from the calibration run or grown
-by the overflow-retry fallback) and yields the node tree.
+structure (required chain plus OPTIONAL group specs) + filter structure +
+projection + distinct + slice presence. `build_plan(shape, join_caps)`
+fills in the per-join bucket capacities (learned from the calibration run
+or grown by the overflow-retry fallback) and yields the node tree.
 """
 from __future__ import annotations
 
@@ -29,6 +35,12 @@ from typing import Union
 
 # Pow-2 bucket floor: tiny relations all share the same smallest shape.
 MIN_BUCKET = 8
+
+# FILTER comparisons: (lhs_var, op, kind, ref) where kind is
+#   "var" — ref is the rhs variable name;
+#   "id"  — ref indexes the int runtime-constants array (term identity);
+#   "num" — ref indexes the float runtime-constants array (numeric value).
+FilterCond = tuple[str, str, str, Union[str, int]]
 
 
 def next_pow2(n: int) -> int:
@@ -79,6 +91,42 @@ class CrossJoin:
 
 
 @dataclasses.dataclass(frozen=True)
+class LeftJoin:
+    """OPTIONAL: MRJoin plus unmatched-left rows padded with UNBOUND.
+
+    `join_cap` is the calibrated/grown bucket for the inner-join part; the
+    node's output capacity is join_cap + left.capacity (the padding slots
+    are exact, they can never overflow).
+    """
+
+    left: "PlanNode"
+    right: "PlanNode"
+    key_vars: tuple[str, ...]
+    schema: tuple[str, ...]
+    join_cap: int
+
+    @property
+    def capacity(self) -> int:
+        return self.join_cap + self.left.capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    """Device-side validity mask from comparison conditions."""
+
+    child: "PlanNode"
+    conds: tuple[FilterCond, ...]
+
+    @property
+    def schema(self) -> tuple[str, ...]:
+        return self.child.schema
+
+    @property
+    def capacity(self) -> int:
+        return self.child.capacity
+
+
+@dataclasses.dataclass(frozen=True)
 class Project:
     child: "PlanNode"
     schema: tuple[str, ...]
@@ -101,14 +149,34 @@ class Distinct:
         return self.child.capacity
 
 
-PlanNode = Union[Scan, MRJoin, CrossJoin, Project, Distinct]
+@dataclasses.dataclass(frozen=True)
+class Slice:
+    """LIMIT/OFFSET: the actual values are runtime inputs (indexes into the
+    int constants array), so one program serves every limit."""
+
+    child: "PlanNode"
+    offset_index: int
+    limit_index: int
+
+    @property
+    def schema(self) -> tuple[str, ...]:
+        return self.child.schema
+
+    @property
+    def capacity(self) -> int:
+        return self.child.capacity
+
+
+PlanNode = Union[
+    Scan, MRJoin, CrossJoin, LeftJoin, Filter, Project, Distinct, Slice
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class PhysicalPlan:
     root: PlanNode
     n_scans: int
-    join_caps: tuple[int, ...]  # per join step, chain order
+    join_caps: tuple[int, ...]  # per join step, evaluation order
 
     def max_capacity(self) -> int:
         def walk(node: PlanNode) -> int:
@@ -126,18 +194,51 @@ class PhysicalPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """An OPTIONAL group: how many scans it consumes (in shape order, after
+    the required chain and earlier groups) and its inner join structure."""
+
+    n_scans: int
+    cross_flags: tuple[bool, ...]  # len == n_scans - 1
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanShape:
     """Everything a compiled program is specialised on, minus join caps.
 
-    Pattern constants are deliberately absent: they only affect scan *data*.
-    Two queries with the same shape dispatch the same compiled executable.
+    Pattern constants, filter constants and LIMIT/OFFSET values are
+    deliberately absent: they only affect scan data / runtime inputs. Two
+    queries with the same shape dispatch the same compiled executable.
     """
 
     scan_schemas: tuple[tuple[str, ...], ...]  # canonical names, plan order
     scan_caps: tuple[int, ...]
-    cross_flags: tuple[bool, ...]  # per join step (len == n_scans - 1)
-    projection: tuple[str, ...]  # canonical names
-    distinct: bool
+    cross_flags: tuple[bool, ...]  # required chain (len == n_required - 1)
+    opt_groups: tuple[GroupSpec, ...] = ()
+    filters: tuple[FilterCond, ...] = ()
+    projection: tuple[str, ...] = ()  # canonical names
+    distinct: bool = False
+    has_slice: bool = False
+
+    @property
+    def n_required(self) -> int:
+        return len(self.cross_flags) + 1
+
+    def n_joins(self) -> int:
+        """Join steps that carry a calibrated bucket, evaluation order:
+        required chain, then per group its inner joins + the left join."""
+        return len(self.cross_flags) + sum(
+            len(g.cross_flags) + 1 for g in self.opt_groups
+        )
+
+    def n_id_consts(self) -> int:
+        return sum(1 for c in self.filters if c[2] == "id")
+
+    def slice_const_indices(self) -> tuple[int, int]:
+        """(offset, limit) positions in the int runtime-constants array:
+        appended right after the filter id constants."""
+        base = self.n_id_consts()
+        return base, base + 1
 
 
 def canonical_renaming(
@@ -158,31 +259,82 @@ def make_shape(
     cross_flags: tuple[bool, ...],
     projection: tuple[str, ...],
     distinct: bool,
+    opt_groups: tuple[GroupSpec, ...] = (),
+    filters: tuple[FilterCond, ...] = (),
+    has_slice: bool = False,
 ) -> PlanShape:
-    assert len(scan_schemas) == len(scan_caps) == len(cross_flags) + 1
-    return PlanShape(scan_schemas, scan_caps, cross_flags, projection, distinct)
+    n_group_scans = sum(g.n_scans for g in opt_groups)
+    assert len(scan_schemas) == len(scan_caps)
+    assert len(scan_schemas) == len(cross_flags) + 1 + n_group_scans
+    return PlanShape(
+        scan_schemas,
+        scan_caps,
+        cross_flags,
+        opt_groups,
+        filters,
+        projection,
+        distinct,
+        has_slice,
+    )
 
 
 def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
-    """Materialise the node tree for a shape at given join bucket capacities."""
-    assert len(join_caps) == len(shape.cross_flags)
-    node: PlanNode = Scan(0, shape.scan_schemas[0], shape.scan_caps[0])
+    """Materialise the node tree for a shape at given join bucket capacities.
+
+    `join_caps` are consumed in evaluation order: required-chain joins,
+    then, per OPTIONAL group, its inner joins followed by the left join.
+    """
+    assert len(join_caps) == shape.n_joins(), (join_caps, shape)
+    caps = iter(join_caps)
     effective: list[int] = []
-    for i, is_cross in enumerate(shape.cross_flags):
-        right = Scan(i + 1, shape.scan_schemas[i + 1], shape.scan_caps[i + 1])
-        if is_cross:
-            cap = node.capacity * right.capacity  # exact: see CrossJoin doc
-            schema = node.schema + right.schema
-            node = CrossJoin(node, right, schema, cap)
-        else:
-            cap = bucket_capacity(join_caps[i])
-            key = tuple(v for v in node.schema if v in right.schema)
-            extra = tuple(v for v in right.schema if v not in node.schema)
-            node = MRJoin(node, right, key, node.schema + extra, cap)
-        effective.append(cap)
+    scan_idx = 0
+
+    def next_scan() -> Scan:
+        nonlocal scan_idx
+        s = Scan(scan_idx, shape.scan_schemas[scan_idx],
+                 shape.scan_caps[scan_idx])
+        scan_idx += 1
+        return s
+
+    def chain(n_scans: int, cross_flags: tuple[bool, ...]) -> PlanNode:
+        node: PlanNode = next_scan()
+        for is_cross in cross_flags:
+            right = next_scan()
+            if is_cross:
+                cap = node.capacity * right.capacity  # exact: see CrossJoin
+                next(caps)  # consumes its slot, value is structural
+                node = CrossJoin(node, right, node.schema + right.schema, cap)
+            else:
+                cap = bucket_capacity(next(caps))
+                key = tuple(v for v in node.schema if v in right.schema)
+                extra = tuple(
+                    v for v in right.schema if v not in node.schema
+                )
+                node = MRJoin(node, right, key, node.schema + extra, cap)
+            effective.append(cap)
+        return node
+
+    node = chain(shape.n_required, shape.cross_flags)
+    for g in shape.opt_groups:
+        grp = chain(g.n_scans, g.cross_flags)
+        key = tuple(v for v in node.schema if v in grp.schema)
+        if not key:
+            raise ValueError(
+                "OPTIONAL group shares no variable with the required "
+                f"patterns: {grp.schema} vs {node.schema}"
+            )
+        join_cap = bucket_capacity(next(caps))
+        extra = tuple(v for v in grp.schema if v not in node.schema)
+        node = LeftJoin(node, grp, key, node.schema + extra, join_cap)
+        effective.append(join_cap)
+    if shape.filters:
+        node = Filter(node, shape.filters)
     node = Project(node, shape.projection)
     if shape.distinct:
         node = Distinct(node)
+    if shape.has_slice:
+        off_idx, lim_idx = shape.slice_const_indices()
+        node = Slice(node, off_idx, lim_idx)
     return PhysicalPlan(node, len(shape.scan_schemas), tuple(effective))
 
 

@@ -19,6 +19,11 @@ import numpy as np
 INVALID_LEFT = np.int32(2**31 - 1)
 INVALID_RIGHT = np.int32(2**31 - 2)
 
+# Term-id sentinel for variables an OPTIONAL group left unbound. Real term
+# ids are dense non-negative ints, so -1 can never collide; FILTER masks and
+# the result decoder treat it as "no binding".
+UNBOUND = np.int32(-1)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

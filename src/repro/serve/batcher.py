@@ -11,6 +11,16 @@ import time
 from typing import Any, Callable
 
 
+def _safe_copy(e: BaseException) -> BaseException:
+    """copy.copy reconstructs exceptions via cls(*args), which TypeErrors
+    for classes whose __init__ signature diverges from their stored args;
+    fall back to sharing the original rather than killing the worker."""
+    try:
+        return copy.copy(e)
+    except Exception:
+        return e
+
+
 @dataclasses.dataclass
 class Request:
     payload: Any
@@ -62,7 +72,7 @@ class MicroBatcher:
             except BaseException as e:  # keep the worker alive: fail the
                 # batch, not the server; per-request copies so concurrent
                 # re-raises in client threads don't race on __traceback__
-                results = [copy.copy(e) for _ in batch]
+                results = [_safe_copy(e) for _ in batch]
             self.n_batches += 1
             self.n_requests += len(batch)
             for r, res in zip(batch, results):

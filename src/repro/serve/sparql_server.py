@@ -1,22 +1,84 @@
 """SPARQL serving front-end: the MapSQ framework (Fig 1) as a service.
 
 Requests (query strings) flow through the MicroBatcher; the engine executes
-each batch — partial matching per pattern, then the join chain on device.
-Batching amortizes dispatch overhead exactly like the paper's
+each batch — partial matching per pattern, then the operator tree on
+device. Batching amortizes dispatch overhead exactly like the paper's
 CPU-assigns / GPU-computes split.
 
+Responses are typed: a successful request yields a `QueryResult` (which
+still compares/iterates like the plain row list for back-compat), a failed
+one raises a `QueryError` on the caller's thread — parse failures raise
+`ParseQueryError`, which is also a `ParseError`. Raw `Exception` objects
+never travel inside result lists.
+
 All requests in all batches share one QueryEngine and therefore ONE plan/
-compile cache and one device scan cache: the first request of a given query
-shape pays calibration + compilation, every later request (from any client)
-is a cache hit dispatching a single precompiled device program. `stats()`
-reports the plan-cache hit rate so operators can watch the warm fraction.
+compile cache and one device scan cache — plus a server-side cache of
+`PreparedQuery` handles keyed by query text, so repeated queries skip
+parsing and planning entirely. The first request of a given query shape
+pays calibration + compilation, every later request (from any client) is a
+cache hit dispatching a single precompiled device program. `stats()`
+reports the cache hit rates so operators can watch the warm fraction.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 from repro.serve.batcher import MicroBatcher
-from repro.sparql.engine import QueryEngine
+from repro.sparql.engine import PreparedQuery, QueryEngine
+from repro.sparql.parser import ParseError
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Successful response envelope: decoded rows + result metadata.
+
+    Sequence-compatible with the historical `list[dict]` return shape:
+    len/iter/index/== all defer to `rows`.
+    """
+
+    rows: list[dict[str, str]]
+    vars: tuple[str, ...]
+    from_cache: bool  # served via a cached PreparedQuery handle
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __getitem__(self, i):
+        return self.rows[i]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, QueryResult):
+            return self.rows == other.rows
+        if isinstance(other, list):
+            return self.rows == other
+        return NotImplemented
+
+
+class QueryError(Exception):
+    """Typed failure envelope: what failed (parse/plan/execution) and for
+    which query. Raised on the submitting caller's thread, never returned
+    inside a result list."""
+
+    def __init__(self, kind: str, message: str, query: str):
+        super().__init__(message)
+        self.kind = kind
+        self.message = message
+        self.query = query
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] {self.message}"
+
+
+class ParseQueryError(QueryError, ParseError):
+    """Parse-stage QueryError; also a sparql.parser.ParseError so callers
+    catching ParseError keep working."""
+
+    def __init__(self, message: str, query: str):
+        QueryError.__init__(self, "parse", message, query)
 
 
 @dataclasses.dataclass
@@ -24,31 +86,64 @@ class SPARQLServer:
     engine: QueryEngine
     max_batch: int = 8
     max_wait_s: float = 0.002
+    prepared_cache_entries: int = 256
 
     def __post_init__(self):
         self._batcher = MicroBatcher(self._run_batch, self.max_batch,
                                      self.max_wait_s)
+        self._prepared: OrderedDict[str, PreparedQuery] = OrderedDict()
+        self._prepared_hits = 0
+        self._prepared_misses = 0
 
-    def _run_batch(self, queries: list[str]) -> list:
+    def _prepared_handle(self, text: str) -> tuple[PreparedQuery, bool]:
+        pq = self._prepared.get(text)
+        if pq is not None:
+            self._prepared_hits += 1
+            self._prepared.move_to_end(text)
+            return pq, True
+        self._prepared_misses += 1
+        pq = self.engine.prepare(text)
+        self._prepared[text] = pq
+        while len(self._prepared) > self.prepared_cache_entries:
+            self._prepared.popitem(last=False)
+        return pq, False
+
+    def _run_one(self, text: str) -> QueryResult | QueryError:
         # per-request isolation: one bad query (parse error, overflow) fails
         # that request only, never its batchmates or the worker thread
-        out = []
-        for q in queries:
-            try:
-                out.append(self.engine.query(q))
-            except Exception as e:
-                out.append(e)
-        return out
+        try:
+            pq, cached = self._prepared_handle(text)
+        except ParseError as e:
+            return ParseQueryError(str(e), query=text)
+        except Exception as e:
+            return QueryError("plan", str(e), query=text)
+        try:
+            rs = pq.run()
+        except Exception as e:
+            return QueryError("execution", str(e), query=text)
+        return QueryResult(rows=rs.rows, vars=rs.vars, from_cache=cached)
 
-    def query(self, text: str) -> list[dict]:
+    def _run_batch(self, queries: list[str]) -> list[QueryResult | QueryError]:
+        return [self._run_one(q) for q in queries]
+
+    def query(self, text: str) -> QueryResult:
+        """Submit one query; raises QueryError (a ParseQueryError for parse
+        failures) on this thread if the request failed."""
         return self._batcher.submit(text)
 
     def stats(self) -> dict:
+        total = self._prepared_hits + self._prepared_misses
         return {
             "batches": self._batcher.n_batches,
             "requests": self._batcher.n_requests,
             "plan_cache": self.engine.cache_stats(),
             "scan_cache": self.engine.store.scan_cache_stats(),
+            "prepared_cache": {
+                "entries": len(self._prepared),
+                "hits": self._prepared_hits,
+                "misses": self._prepared_misses,
+                "hit_rate": self._prepared_hits / total if total else 0.0,
+            },
         }
 
     def close(self) -> None:

@@ -14,8 +14,16 @@ the comparison class faithfully:
 All three consume/produce the same dictionary-encoded numpy rows as the
 device join, so benchmarks/bench_join.py can reproduce the Table 2 shape:
 same partial matches in, same result set out, join time compared.
+
+`reference_rows` additionally evaluates a full parsed Query — BGP,
+OPTIONAL, FILTER, projection, DISTINCT — by backtracking over decoded
+triples. It is the differential oracle the prepared-query tests compare
+the device algebra against (LIMIT/OFFSET are left to the caller, since
+any row subset of the right size is a correct slice).
 """
 from __future__ import annotations
+
+import re
 
 import numpy as np
 
@@ -53,6 +61,101 @@ def hash_join(schema_l, rows_l: np.ndarray, schema_r, rows_r: np.ndarray):
         for a in table.get(tuple(b[i] for i in ri), ()):
             out.append(list(a) + [b[i] for i in r_extra])
     return out_schema, np.asarray(out, np.int32).reshape(-1, len(out_schema))
+
+
+_NUMERIC = re.compile(r"-?\d+(?:\.\d+)?")
+
+
+def _term_numeric(term: str):
+    """Numeric value of a term lexical, at the engine's documented float32
+    precision (the device FILTER path gathers a float32 table, so integers
+    beyond 2^24 compare by their rounded value — the oracle must agree)."""
+    return np.float32(term) if _NUMERIC.fullmatch(term) else None
+
+
+def _extend(bindings: list[dict], triples, tp) -> list[dict]:
+    """All extensions of each binding by one triple pattern (backtracking)."""
+    out = []
+    for b in bindings:
+        for s, p, o in triples:
+            nb = dict(b)
+            ok = True
+            for term, val in ((tp.s, s), (tp.p, p), (tp.o, o)):
+                if term.startswith("?"):
+                    if nb.get(term, val) != val:
+                        ok = False
+                        break
+                    nb[term] = val
+                elif term != val:
+                    ok = False
+                    break
+            if ok:
+                out.append(nb)
+    return out
+
+
+def _filter_true(cond, b: dict) -> bool:
+    """SPARQL error semantics: unbound operands or non-numeric values under
+    numeric operators fail the condition (even for !=)."""
+    from repro.sparql import algebra
+
+    lhs = b.get(cond.lhs)
+    if lhs is None:
+        return False
+    if isinstance(cond.rhs, algebra.Var):
+        rhs = b.get(cond.rhs.name)
+        if rhs is None:
+            return False
+        if cond.op in ("=", "!="):
+            return (lhs == rhs) if cond.op == "=" else (lhs != rhs)
+        lv, rv = _term_numeric(lhs), _term_numeric(rhs)
+        if lv is None or rv is None:
+            return False
+    elif isinstance(cond.rhs, algebra.NumLit):
+        lv, rv = _term_numeric(lhs), np.float32(cond.rhs.value)
+        if lv is None:
+            return False
+    else:  # TermLit: identity comparison
+        if cond.op == "=":
+            return lhs == cond.rhs.lexical
+        if cond.op == "!=":
+            return lhs != cond.rhs.lexical
+        return False
+    return {
+        "=": lv == rv, "!=": lv != rv, "<": lv < rv,
+        "<=": lv <= rv, ">": lv > rv, ">=": lv >= rv,
+    }[cond.op]
+
+
+def reference_rows(store, q) -> list[dict[str, str]]:
+    """Pure-python oracle for the logical algebra (everything but the
+    slice): projected rows as {var: term} dicts, unbound vars omitted."""
+    d = store.dictionary
+    triples = [tuple(d.decode(int(t)) for t in row) for row in store.triples]
+    bindings = [dict()]
+    for tp in q.patterns:
+        bindings = _extend(bindings, triples, tp)
+    for group in q.optionals:
+        joined = []
+        for b in bindings:
+            ext = [b]
+            for tp in group:
+                ext = _extend(ext, triples, tp)
+            joined.extend(ext if ext else [b])  # no match: keep b unextended
+        bindings = joined
+    for cond in q.filters:
+        bindings = [b for b in bindings if _filter_true(cond, b)]
+    proj = q.projection()
+    rows = [{v: b[v] for v in proj if v in b} for b in bindings]
+    if q.distinct:
+        seen, uniq = set(), []
+        for r in rows:
+            key = tuple(sorted(r.items()))
+            if key not in seen:
+                seen.add(key)
+                uniq.append(r)
+        rows = uniq
+    return rows
 
 
 def partitioned_hash_join(schema_l, rows_l, schema_r, rows_r,

@@ -1,4 +1,4 @@
-"""The MapSQ query engine (Figure 1 of the paper).
+"""The MapSQ query engine (Figure 1 of the paper) and its prepared-query API.
 
 Coprocessing split, exactly as the paper describes it:
   CPU  — parse, dictionary-encode, plan join order, size capacities,
@@ -6,44 +6,58 @@ Coprocessing split, exactly as the paper describes it:
   GPU→TPU — pattern range-scans feed the MapReduce join (Algorithm 1,
          core/mr_join.py, jitted).
 
+The public API is layered around prepared queries:
+
+  engine.prepare(text) -> PreparedQuery   parse + validate + plan once
+  pq.run()             -> ResultSet       typed rows + the run's ExecStats
+  pq.explain()         -> str             algebra tree, physical plan,
+                                          bucket capacities, cache state
+  engine.query(text)   -> list[dict]      thin wrapper: prepare().run().rows
+
 Two execution modes share one planner:
 
-  compiled (default) — parse → plan → plan-cache lookup → ONE device
-      dispatch. The whole join chain (plus projection and DISTINCT) is
-      lowered by core/executor.py into a single AOT-compiled program,
-      cached by (plan shape, bucket signature) in a PlanCache. A cache
-      miss first runs the eager chain once: its Mars count passes double
-      as the capacity *calibration* that picks the pow-2 join buckets the
-      program is compiled at. Warm queries then run with zero compiles,
+  compiled (default) — plan → plan-cache lookup → ONE device dispatch. The
+      whole operator tree (joins, OPTIONAL left joins, FILTER masks,
+      projection, DISTINCT, LIMIT/OFFSET) is lowered by core/executor.py
+      into a single AOT-compiled program, cached by (plan shape, bucket
+      signature) in a PlanCache. FILTER constants and LIMIT/OFFSET are
+      runtime inputs, so query variants share the executable. A cache miss
+      first runs the eager evaluator once: its Mars count passes double as
+      the capacity *calibration* that picks the pow-2 join buckets the
+      program is compiled at. Warm queries then run with zero compiles and
       no per-join host sync (the only sync reads the overflow flags that
-      ride back with the results), and upload-once device scans from
-      TripleStore.match_pattern_device. If a bucket overflows (a
-      same-shape query with a bigger result), the engine grows the bucket
-      from the exact totals returned by the dispatch and recompiles —
-      the double-on-overflow retry demoted to a host-level fallback.
+      ride back with the results). If a bucket overflows (a same-shape
+      query with a bigger result), the engine grows the bucket from the
+      exact totals returned by the dispatch and recompiles — the
+      double-on-overflow retry demoted to a host-level fallback.
 
-  eager (compiled=False) — the original loop, kept for differential
-      testing: per join, a jitted COUNT pass, host sync of the
-      cardinality, exactly-sized (next-pow2) buffer, jitted EXPAND pass;
-      or double-on-overflow when exact_count_pass=False.
+  eager (compiled=False) — the per-operator loop, kept for differential
+      testing: per join, a jitted COUNT pass, host sync of the cardinality,
+      exactly-sized (next-pow2) buffer, jitted EXPAND pass; or
+      double-on-overflow when exact_count_pass=False.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import executor as ex
 from repro.core import mr_join as mj
 from repro.core import plan_ir
-from repro.core.planner import JoinStep, plan_bgp
-from repro.core.relation import Relation
+from repro.core.planner import TriplePattern, plan_bgp
+from repro.core.relation import UNBOUND, Relation
+from repro.sparql import algebra
 from repro.sparql.parser import Query, parse
 from repro.sparql.store import TripleStore, _next_pow2
+
+# LIMIT stand-in when only OFFSET was given (far above max_capacity, safe
+# from int32 overflow in `offset + limit`).
+_NO_LIMIT = 1 << 30
 
 
 @dataclasses.dataclass
@@ -57,6 +71,16 @@ class ExecStats:
     cache_misses: int = 0
     n_compiles: int = 0  # XLA compilations triggered by this query
     n_dispatches: int = 0  # device program launches (warm target: 1)
+
+    def add(self, other: "ExecStats") -> None:
+        self.n_joins += other.n_joins
+        self.n_count_passes += other.n_count_passes
+        self.n_retries += other.n_retries
+        self.peak_capacity = max(self.peak_capacity, other.peak_capacity)
+        self.cache_hits += other.cache_hits
+        self.cache_misses += other.cache_misses
+        self.n_compiles += other.n_compiles
+        self.n_dispatches += other.n_dispatches
 
 
 @dataclasses.dataclass
@@ -105,6 +129,89 @@ class PlanCache:
 
 
 @dataclasses.dataclass
+class _Program:
+    """A planned query: scan order, join structure, runtime constants.
+
+    This is the engine-internal bridge from the logical algebra to a
+    PlanShape; a PreparedQuery owns one and reuses it across runs.
+    """
+
+    query: Query
+    patterns: list[TriplePattern]  # scan order: required chain, then groups
+    cross_flags: tuple[bool, ...]  # required chain
+    opt_groups: tuple[plan_ir.GroupSpec, ...]
+    conds: tuple[plan_ir.FilterCond, ...]  # original var names
+    consts_i: np.ndarray  # int32: filter term ids (+ offset, limit)
+    consts_f: np.ndarray  # float32: numeric filter constants
+    projection: tuple[str, ...]
+    distinct: bool
+    has_slice: bool
+
+
+class ResultSet:
+    """Typed, decoded query result: rows as {var: term} dicts (variables an
+    OPTIONAL group left unbound are omitted), plus the producing run's
+    ExecStats. Compares equal to a plain list of row dicts for convenience.
+    """
+
+    def __init__(self, vars: tuple[str, ...], rows: list[dict[str, str]],
+                 stats: ExecStats):
+        self.vars = tuple(vars)
+        self.rows = rows
+        self.stats = stats
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __getitem__(self, i):
+        return self.rows[i]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, ResultSet):
+            return self.rows == other.rows
+        if isinstance(other, list):
+            return self.rows == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"ResultSet(vars={self.vars}, n_rows={len(self.rows)})"
+
+
+class PreparedQuery:
+    """A parsed, validated and planned query, reusable across runs.
+
+    Holds per-handle accounting: `stats` accumulates ExecStats over every
+    run (peak_capacity as a running max), `last_stats` is the most recent
+    run's. The compiled executable itself lives in the engine's PlanCache,
+    shared by every handle (and every client) with the same plan shape.
+    """
+
+    def __init__(self, engine: "QueryEngine", text: str, query: Query):
+        self.engine = engine
+        self.text = text
+        self.query = query
+        self._program = engine._build_program(query)
+        self.stats = ExecStats()  # accumulated across runs
+        self.last_stats: ExecStats | None = None
+        self.n_runs = 0
+
+    def run(self) -> ResultSet:
+        stats = ExecStats()
+        rel = self.engine._execute_program(self._program, stats)
+        rows = self.engine._decode_rows(rel)
+        self.stats.add(stats)
+        self.last_stats = stats
+        self.n_runs += 1
+        return ResultSet(self._program.projection, rows, stats)
+
+    def explain(self) -> str:
+        return self.engine._explain_program(self, self._program)
+
+
+@dataclasses.dataclass
 class QueryEngine:
     store: TripleStore
     use_kernel: bool = False  # Pallas pair-expand in the join
@@ -117,65 +224,213 @@ class QueryEngine:
         self._jit_join = jax.jit(
             mj.mr_join, static_argnames=("capacity", "use_kernel")
         )
+        self._jit_left_join = jax.jit(
+            mj.left_join, static_argnames=("capacity", "use_kernel")
+        )
         self._jit_count = jax.jit(mj.mr_join_count)
         self._jit_cross = jax.jit(mj.cross_join, static_argnames=("capacity",))
         self.plan_cache = PlanCache(self.plan_cache_entries)
 
     # -- public API --------------------------------------------------------
+    def prepare(self, text: str) -> PreparedQuery:
+        """Parse, validate and plan once; run (and re-run) later."""
+        return PreparedQuery(self, text, parse(text))
+
     def query(self, text: str) -> list[dict[str, str]]:
-        """Parse, execute, decode: rows as {var: term} dicts."""
-        q = parse(text)
-        rel, _ = self.execute(q)
-        rows = rel.to_numpy()
-        d = self.store.dictionary
-        return [
-            {v: d.decode(int(t)) for v, t in zip(rel.schema, row)}
-            for row in rows
-        ]
+        """One-shot convenience: rows as {var: term} dicts."""
+        return self.prepare(text).run().rows
 
     def execute(self, q: Query) -> tuple[Relation, ExecStats]:
-        """Run the BGP; the result is projected (and DISTINCT-deduplicated,
-        device-side) per the query."""
+        """Run a parsed query; the result Relation carries the projected
+        (and DISTINCT-deduplicated, filtered, sliced) bindings."""
         stats = ExecStats()
-        steps = plan_bgp(q.patterns, self.store.estimate_cardinality)
-        if self.compiled:
-            rel = self._execute_compiled(q, steps, stats)
-        else:
-            rel = self._execute_eager(q, steps, stats)
+        rel = self._execute_program(self._build_program(q), stats)
         return rel, stats
+
+    def explain(self, text: str) -> str:
+        return self.prepare(text).explain()
 
     def cache_stats(self) -> dict:
         return self.plan_cache.stats()
 
-    # -- eager path --------------------------------------------------------
-    def _execute_eager(
-        self, q: Query, steps: list[JoinStep], stats: ExecStats
-    ) -> Relation:
-        partials = [
-            self.store.match_pattern(q.patterns[st.pattern_index])
-            for st in steps
-        ]
-        acc, _ = self._run_chain_eager(
-            partials, [st.is_cross for st in steps[1:]], stats
+    # -- planning ----------------------------------------------------------
+    def _build_program(self, q: Query) -> _Program:
+        est = self.store.estimate_cardinality
+        steps = plan_bgp(q.patterns, est)
+        patterns = [q.patterns[st.pattern_index] for st in steps]
+        cross_flags = tuple(st.is_cross for st in steps[1:])
+        required_bound = {v for tp in patterns for v in tp.variables()}
+        opt_bound: set[str] = set()  # vars that may end up UNBOUND
+        opt_groups: list[plan_ir.GroupSpec] = []
+        for group in q.optionals:
+            gsteps = plan_bgp(list(group), est)
+            gpats = [group[st.pattern_index] for st in gsteps]
+            gvars = {v for tp in gpats for v in tp.variables()}
+            # SPARQL's LeftJoin treats an unbound variable as compatible
+            # with anything; the device join treats UNBOUND as an ordinary
+            # (never-matching) key. Sound only when groups join exclusively
+            # through always-bound (required) variables — reject the rest.
+            overlap = gvars & opt_bound
+            if overlap:
+                raise ValueError(
+                    "unsupported: OPTIONAL group reuses variable(s) bound "
+                    f"by an earlier OPTIONAL group: {sorted(overlap)} "
+                    "(unbound-compatible chained-OPTIONAL semantics are "
+                    "not implemented)"
+                )
+            if not (gvars & required_bound):
+                raise ValueError(
+                    "OPTIONAL group shares no variable with the required "
+                    f"patterns: {sorted(gvars)}"
+                )
+            patterns += gpats
+            opt_groups.append(
+                plan_ir.GroupSpec(
+                    len(gpats), tuple(st.is_cross for st in gsteps[1:])
+                )
+            )
+            opt_bound |= gvars - required_bound
+        conds: list[plan_ir.FilterCond] = []
+        id_consts: list[int] = []
+        f_consts: list[float] = []
+        for c in q.filters:
+            if isinstance(c.rhs, algebra.Var):
+                conds.append((c.lhs, c.op, "var", c.rhs.name))
+            elif isinstance(c.rhs, algebra.NumLit):
+                conds.append((c.lhs, c.op, "num", len(f_consts)))
+                f_consts.append(c.rhs.value)
+            else:  # TermLit: identity comparison; unknown terms can never
+                # match a bound variable, -1 encodes that correctly
+                tid = self.store.dictionary.lookup(c.rhs.lexical)
+                conds.append((c.lhs, c.op, "id", len(id_consts)))
+                id_consts.append(-1 if tid is None else tid)
+        has_slice = q.has_slice()
+        if has_slice:
+            limit = q.limit if q.limit is not None else _NO_LIMIT
+            id_consts += [min(q.offset, _NO_LIMIT), min(limit, _NO_LIMIT)]
+        return _Program(
+            q,
+            patterns,
+            cross_flags,
+            tuple(opt_groups),
+            tuple(conds),
+            np.asarray(id_consts, np.int32),
+            np.asarray(f_consts, np.float32),
+            tuple(q.projection()),
+            q.distinct,
+            has_slice,
         )
-        acc = acc.project(q.projection())
-        if q.distinct:
-            acc = mj.distinct(acc)  # device-side dedup before decode
-        return acc
 
-    def _run_chain_eager(
+    def _shape_for(
         self,
-        partials: list[Relation],
-        cross_flags: list[bool],
+        prog: _Program,
+        schemas: tuple[tuple[str, ...], ...],
+        caps: tuple[int, ...],
+        rename: dict[str, str] | None = None,
+    ) -> plan_ir.PlanShape:
+        r = rename or {}
+
+        def rn(v: str) -> str:
+            return r.get(v, v)
+
+        conds = tuple(
+            (rn(lhs), op, kind, rn(ref) if kind == "var" else ref)
+            for lhs, op, kind, ref in prog.conds
+        )
+        return plan_ir.make_shape(
+            tuple(tuple(rn(v) for v in s) for s in schemas),
+            caps,
+            prog.cross_flags,
+            tuple(rn(v) for v in prog.projection),
+            prog.distinct,
+            opt_groups=prog.opt_groups,
+            filters=conds,
+            has_slice=prog.has_slice,
+        )
+
+    # -- execution ---------------------------------------------------------
+    def _execute_program(self, prog: _Program, stats: ExecStats) -> Relation:
+        if self.compiled:
+            return self._execute_compiled(prog, stats)
+        scans = tuple(self.store.match_pattern(tp) for tp in prog.patterns)
+        shape = self._shape_for(
+            prog,
+            tuple(s.schema for s in scans),
+            tuple(s.capacity for s in scans),
+        )
+        rel, _ = self._eval_shape_eager(shape, scans, prog, stats)
+        return rel
+
+    def _decode_rows(self, rel: Relation) -> list[dict[str, str]]:
+        d = self.store.dictionary
+        return [
+            {
+                v: d.decode(int(t))
+                for v, t in zip(rel.schema, row)
+                if int(t) != UNBOUND
+            }
+            for row in rel.to_numpy()
+        ]
+
+    # -- eager evaluator ---------------------------------------------------
+    def _eval_shape_eager(
+        self,
+        shape: plan_ir.PlanShape,
+        scans: tuple[Relation, ...],
+        prog: _Program,
         stats: ExecStats,
     ) -> tuple[Relation, list[int]]:
-        """The per-join loop. Returns the result and each join's exact total
-        (the totals are what the compiled path calibrates its buckets on)."""
-        acc = partials[0]
+        """Operator-at-a-time evaluation with exact (count-pass) bucket
+        sizing. Returns the result and each join's exact total in the same
+        order the compiled program reports them — the totals are what the
+        compiled path calibrates its buckets on."""
         totals: list[int] = []
-        for nxt, is_cross in zip(partials[1:], cross_flags):
-            acc, total = self._join_once(acc, nxt, is_cross, stats)
+        scan_iter = iter(scans)
+
+        def chain(n_scans: int, cross_flags: tuple[bool, ...]) -> Relation:
+            acc = next(scan_iter)
+            for is_cross in cross_flags:
+                acc, total = self._join_once(
+                    acc, next(scan_iter), is_cross, stats
+                )
+                totals.append(total)
+            return acc
+
+        acc = chain(shape.n_required, shape.cross_flags)
+        for g in shape.opt_groups:
+            grp = chain(g.n_scans, g.cross_flags)
+            stats.n_joins += 1
+            stats.n_dispatches += 1
+            total = int(self._jit_count(acc, grp))
+            stats.n_count_passes += 1
+            cap = max(1, _next_pow2(total))
+            stats.n_dispatches += 1
+            out, _, overflow = self._jit_left_join(
+                acc, grp, capacity=cap, use_kernel=self.use_kernel
+            )
+            assert not bool(overflow)
+            stats.peak_capacity = max(
+                stats.peak_capacity, cap + acc.capacity
+            )
             totals.append(total)
+            acc = out
+        if shape.filters:
+            keep = mj.filter_mask(
+                acc,
+                shape.filters,
+                jnp.asarray(prog.consts_i),
+                jnp.asarray(prog.consts_f),
+                self.store.numeric_values_device(),
+            )
+            acc = Relation(acc.schema, acc.cols, keep)
+        acc = acc.project(list(shape.projection))
+        if shape.distinct:
+            acc = mj.distinct(acc)  # device-side dedup before decode
+        if shape.has_slice:
+            oi, li = shape.slice_const_indices()
+            acc = mj.slice_valid(
+                acc, int(prog.consts_i[oi]), int(prog.consts_i[li])
+            )
         return acc, totals
 
     def _join_once(
@@ -216,15 +471,14 @@ class QueryEngine:
                 raise MemoryError(f"join result exceeds {self.max_capacity}")
 
     # -- compiled path -----------------------------------------------------
-    def _execute_compiled(
-        self, q: Query, steps: list[JoinStep], stats: ExecStats
-    ) -> Relation:
-        patterns = [q.patterns[st.pattern_index] for st in steps]
-        cross_flags = tuple(st.is_cross for st in steps[1:])
+    def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
         # upload-once device scans (bucketed pow-2 capacities)
-        scans = tuple(self.store.match_pattern_device(tp) for tp in patterns)
+        scans = tuple(
+            self.store.match_pattern_device(tp) for tp in prog.patterns
+        )
         # canonicalise variable names so structurally-equal queries share
-        # one compiled program (constants live in the scan data, not here)
+        # one compiled program (constants live in the scan data and the
+        # runtime-constant inputs, not here)
         schemas = tuple(s.schema for s in scans)
         rename = plan_ir.canonical_renaming(schemas)
         inverse = {c: o for o, c in rename.items()}
@@ -232,20 +486,21 @@ class QueryEngine:
             Relation(tuple(rename[v] for v in s.schema), s.cols, s.valid)
             for s in scans
         )
-        shape = plan_ir.make_shape(
-            tuple(s.schema for s in canon_scans),
-            tuple(s.capacity for s in canon_scans),
-            cross_flags,
-            tuple(rename[v] for v in q.projection()),
-            q.distinct,
+        shape = self._shape_for(
+            prog, schemas, tuple(s.capacity for s in scans), rename
         )
-        stats.n_joins = len(cross_flags)
+        stats.n_joins = shape.n_joins()
+        consts_i = jnp.asarray(prog.consts_i)
+        consts_f = jnp.asarray(prog.consts_f)
+        num_vals = self.store.numeric_values_device()
 
         entry = self.plan_cache.get(shape)
         if entry is None:
-            rel = self._compiled_cold(shape, canon_scans, cross_flags, stats)
+            rel = self._compiled_cold(shape, canon_scans, prog, stats)
         else:
-            rel = self._compiled_warm(shape, entry, canon_scans, stats)
+            rel = self._compiled_warm(
+                shape, entry, canon_scans, consts_i, consts_f, num_vals, stats
+            )
         # back to the query's own variable names
         return Relation(
             tuple(inverse[v] for v in rel.schema), rel.cols, rel.valid
@@ -255,40 +510,45 @@ class QueryEngine:
         self,
         shape: plan_ir.PlanShape,
         canon_scans: tuple[Relation, ...],
-        cross_flags: tuple[bool, ...],
+        prog: _Program,
         stats: ExecStats,
     ) -> Relation:
-        """Cache miss: the eager chain's count passes calibrate the join
+        """Cache miss: the eager evaluator's count passes calibrate the join
         buckets; compile at those shapes; serve this query from the eager
         result (the compiled program takes over from the next query on)."""
         stats.cache_misses += 1
         self.plan_cache.misses += 1
         eager_stats = ExecStats()
-        acc, totals = self._run_chain_eager(
-            list(canon_scans), list(cross_flags), eager_stats
+        rel, totals = self._eval_shape_eager(
+            shape, canon_scans, prog, eager_stats
         )
         stats.n_count_passes += eager_stats.n_count_passes
         stats.n_dispatches += eager_stats.n_dispatches
         stats.n_retries += eager_stats.n_retries
+        stats.peak_capacity = max(
+            stats.peak_capacity, eager_stats.peak_capacity
+        )
         join_caps = tuple(plan_ir.bucket_capacity(t) for t in totals)
-        self._compile_entry(shape, join_caps, canon_scans, stats)
-        acc = acc.project(list(shape.projection))
-        if shape.distinct:
-            acc = mj.distinct(acc)
-        return acc
+        self._compile_entry(shape, join_caps, canon_scans, prog, stats)
+        return rel
 
     def _compiled_warm(
         self,
         shape: plan_ir.PlanShape,
         entry: PlanCacheEntry,
         canon_scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
         stats: ExecStats,
     ) -> Relation:
         stats.cache_hits += 1
         self.plan_cache.hits += 1
         while True:
             stats.n_dispatches += 1
-            rel, totals, flags = entry.compiled(canon_scans)
+            rel, totals, flags = entry.compiled(
+                canon_scans, consts_i, consts_f, num_vals
+            )
             stats.peak_capacity = max(
                 stats.peak_capacity, entry.compiled.plan.max_capacity()
             )
@@ -306,18 +566,36 @@ class QueryEngine:
                 raise MemoryError(
                     f"join result exceeds {self.max_capacity}"
                 )
-            entry = self._compile_entry(shape, new_caps, canon_scans, stats)
+            entry = self._compile_entry(
+                shape, new_caps, canon_scans, None, stats
+            )
 
     def _compile_entry(
         self,
         shape: plan_ir.PlanShape,
         join_caps: tuple[int, ...],
         canon_scans: tuple[Relation, ...],
+        prog: _Program | None,
         stats: ExecStats,
     ) -> PlanCacheEntry:
         plan = plan_ir.build_plan(shape, join_caps)
+        # the consts are signature templates here — only shapes/dtypes
+        # matter to AOT lowering, and they are determined by the PlanShape
+        n_i = shape.n_id_consts() + (2 if shape.has_slice else 0)
+        n_f = sum(1 for c in shape.filters if c[2] == "num")
+        consts_i = jnp.asarray(
+            prog.consts_i if prog is not None else np.zeros(n_i, np.int32)
+        )
+        consts_f = jnp.asarray(
+            prog.consts_f if prog is not None else np.zeros(n_f, np.float32)
+        )
         compiled = ex.compile_plan(
-            plan, canon_scans, use_kernel=self.use_kernel
+            plan,
+            canon_scans,
+            consts_i,
+            consts_f,
+            self.store.numeric_values_device(),
+            use_kernel=self.use_kernel,
         )
         stats.n_compiles += 1
         self.plan_cache.compiles += 1
@@ -325,22 +603,68 @@ class QueryEngine:
         self.plan_cache.put(shape, entry)
         return entry
 
-    def explain(self, text: str) -> list[dict[str, Any]]:
-        q = parse(text)
-        steps = plan_bgp(q.patterns, self.store.estimate_cardinality)
-        return [
-            {
-                "pattern": dataclasses.astuple(q.patterns[st.pattern_index]),
-                "est_rows": self.store.estimate_cardinality(
-                    q.patterns[st.pattern_index]
-                ),
-                "bucket": plan_ir.bucket_capacity(
-                    self.store.estimate_cardinality(
-                        q.patterns[st.pattern_index]
-                    )
-                ),
-                "join_vars": st.key_vars,
-                "cross": st.is_cross,
-            }
-            for st in steps
-        ]
+    # -- explain -----------------------------------------------------------
+    def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:
+        """Human-readable plan report: the logical algebra, the physical
+        scan/join structure with estimated rows and pow-2 buckets, and the
+        plan-cache state for this shape — all host-side (no device work)."""
+        est = self.store.estimate_cardinality
+        lines = ["PreparedQuery", "logical algebra:"]
+        lines.append(algebra.format_algebra(pq.query.algebra(), 1))
+        lines.append("physical plan (scan order -> join chain):")
+        schemas: list[tuple[str, ...]] = []
+        caps: list[int] = []
+        for i, tp in enumerate(prog.patterns):
+            schema, n_rows = self.store.pattern_scan_info(tp)
+            schemas.append(schema)
+            caps.append(plan_ir.bucket_capacity(n_rows))
+            kind = (
+                "required" if i < len(prog.cross_flags) + 1 else "optional"
+            )
+            lines.append(
+                f"  scan[{i}] ({tp.s} {tp.p} {tp.o}) "
+                f"est_rows={est(tp)} bucket={caps[-1]} [{kind}]"
+            )
+        rename = plan_ir.canonical_renaming(tuple(schemas))
+        shape = self._shape_for(prog, tuple(schemas), tuple(caps), rename)
+        for i, is_cross in enumerate(shape.cross_flags):
+            lines.append(
+                f"  join[{i}] {'cross_join' if is_cross else 'mr_join'}"
+            )
+        for gi, g in enumerate(shape.opt_groups):
+            lines.append(
+                f"  left_join[{gi}] OPTIONAL group of {g.n_scans} "
+                f"pattern(s), unmatched rows padded UNBOUND"
+            )
+        if shape.filters:
+            conds = " && ".join(str(c) for c in pq.query.filters)
+            lines.append(f"  filter: {conds} (device-side mask)")
+        if shape.has_slice:
+            q = pq.query
+            limit = "-" if q.limit is None else q.limit
+            lines.append(f"  slice: offset={q.offset} limit={limit}")
+        entry = self.plan_cache.get(shape)
+        if entry is None:
+            lines.append(
+                "cache: shape not compiled yet (first run calibrates "
+                "buckets from exact counts, then compiles)"
+            )
+        else:
+            lines.append(
+                f"cache: compiled, join buckets={entry.join_caps}, "
+                f"max_capacity={entry.compiled.plan.max_capacity()}"
+            )
+        lines.append(
+            f"plan-cache: {len(self.plan_cache)} entries, "
+            f"hit_rate={self.plan_cache.hit_rate:.0%}"
+        )
+        lines.append(
+            f"handle: {pq.n_runs} run(s)"
+            + (
+                f", last run: {pq.last_stats.n_dispatches} dispatch(es), "
+                f"{pq.last_stats.n_compiles} compile(s)"
+                if pq.last_stats
+                else ""
+            )
+        )
+        return "\n".join(lines)

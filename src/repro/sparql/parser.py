@@ -1,9 +1,16 @@
-"""A small SPARQL parser: PREFIX / SELECT [DISTINCT] / WHERE { BGP }.
+"""SPARQL parser: PREFIX / SELECT [DISTINCT] / WHERE / LIMIT / OFFSET.
 
-Covers the query class the paper evaluates (basic graph patterns with
-variables, IRIs, prefixed names, literals, and `;` predicate-object lists
-as used in LUBM-style queries). Parsing is host-side — part of the CPU
-half of the coprocessing strategy.
+Covers the query class the paper (basic graph patterns with variables,
+IRIs, prefixed names, literals, `;` predicate-object lists) and its
+successors evaluate: FILTER comparisons (numeric and string literals,
+variable-variable), OPTIONAL groups, `#` line comments, integer/decimal
+literals, and LIMIT/OFFSET solution modifiers. Parsing is host-side — part
+of the CPU half of the coprocessing strategy.
+
+The result is a `Query`: the WHERE group decomposed into a required BGP,
+OPTIONAL groups and filter conditions, plus the solution modifiers.
+`Query.algebra()` assembles the logical-algebra tree (sparql/algebra.py)
+that the engine plans and compiles.
 """
 from __future__ import annotations
 
@@ -11,18 +18,25 @@ import dataclasses
 import re
 
 from repro.core.planner import TriplePattern
+from repro.sparql import algebra
 
 _TOKEN = re.compile(
     r"""\s*(?:
-        (?P<var>\?[A-Za-z_][\w]*)
-      | (?P<iri><[^>]*>)
+        (?P<comment>\#[^\n]*)
+      | (?P<var>\?[A-Za-z_][\w]*)
+      | (?P<iri><[^>\s]*>)
       | (?P<literal>"(?:[^"\\]|\\.)*")
+      | (?P<num>-?\d+(?:\.\d+)?)
       | (?P<pname>[A-Za-z_][\w\-]*:[A-Za-z_][\w\-]*)
       | (?P<pdecl>[A-Za-z_][\w\-]*:)
-      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|\{|\}|\.|;|\*|a\b)
+      | (?P<op><=|>=|!=|&&|[=<>()])
+      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|FILTER|OPTIONAL|LIMIT|OFFSET
+              |\{|\}|\.|;|\*|a\b)
     )""",
     re.VERBOSE | re.IGNORECASE,
 )
+
+_NUM = re.compile(r"-?\d+(?:\.\d+)?")
 
 _RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
 
@@ -31,7 +45,11 @@ _RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
 class Query:
     select_vars: list[str]  # empty => SELECT *
     distinct: bool
-    patterns: list[TriplePattern]
+    patterns: list[TriplePattern]  # the required BGP
+    optionals: tuple[tuple[TriplePattern, ...], ...] = ()
+    filters: tuple[algebra.Compare, ...] = ()
+    limit: int | None = None
+    offset: int = 0
 
     def all_vars(self) -> list[str]:
         out: list[str] = []
@@ -39,10 +57,33 @@ class Query:
             for v in tp.variables():
                 if v not in out:
                     out.append(v)
+        for group in self.optionals:
+            for tp in group:
+                for v in tp.variables():
+                    if v not in out:
+                        out.append(v)
         return out
 
     def projection(self) -> list[str]:
         return self.select_vars or self.all_vars()
+
+    def has_slice(self) -> bool:
+        return self.limit is not None or self.offset > 0
+
+    def algebra(self) -> algebra.AlgebraNode:
+        """Assemble the logical tree: BGP → LeftJoin* → Filter → Project
+        → Distinct → Slice (group filters apply after the group's joins)."""
+        node: algebra.AlgebraNode = algebra.BGP(tuple(self.patterns))
+        for group in self.optionals:
+            node = algebra.LeftJoin(node, algebra.BGP(group))
+        if self.filters:
+            node = algebra.Filter(node, self.filters)
+        node = algebra.Project(node, tuple(self.projection()))
+        if self.distinct:
+            node = algebra.Distinct(node)
+        if self.has_slice():
+            node = algebra.Slice(node, self.offset, self.limit)
+        return node
 
 
 class ParseError(ValueError):
@@ -57,7 +98,8 @@ def _tokenize(text: str) -> list[str]:
         m = _TOKEN.match(text, pos)
         if not m:
             raise ParseError(f"unexpected input at: {text[pos:pos + 30]!r}")
-        tokens.append(m.group(0).strip())
+        if m.lastgroup != "comment":  # `#` line comments are skipped
+            tokens.append(m.group(0).strip())
         pos = m.end()
     return tokens
 
@@ -111,29 +153,119 @@ def parse(text: str) -> Query:
             return tok
         if tok == "a":
             return _RDF_TYPE
-        if tok.startswith("<") or tok.startswith('"'):
+        if tok.startswith("<") or tok.startswith('"') or _NUM.fullmatch(tok):
             return tok
-        ns, _, local = tok.partition(":")
-        if ns not in prefixes:
+        ns, colon, local = tok.partition(":")
+        if not colon or ns not in prefixes:
             raise ParseError(f"unknown prefix {ns!r} in {tok!r}")
         return f"<{prefixes[ns]}{local}>"
 
-    patterns: list[TriplePattern] = []
-    while peek() != "}":
+    def parse_triples_into(dest: list[TriplePattern]) -> None:
         s = resolve(eat())
-        patterns.append(TriplePattern(s, resolve(eat()), resolve(eat())))
+        dest.append(TriplePattern(s, resolve(eat()), resolve(eat())))
         # `;` predicate-object lists: `?x a ub:Student ; ub:memberOf ?d .`
         while peek() == ";":
             eat()
             if peek() in (".", "}"):  # dangling `;` before a terminator
                 break
-            patterns.append(TriplePattern(s, resolve(eat()), resolve(eat())))
+            dest.append(TriplePattern(s, resolve(eat()), resolve(eat())))
+
+    def parse_operand() -> algebra.Operand:
+        tok = eat()
+        if tok.startswith("?"):
+            return algebra.Var(tok)
+        if _NUM.fullmatch(tok):
+            return algebra.NumLit(float(tok), tok)
+        return algebra.TermLit(resolve(tok))
+
+    def parse_compare() -> algebra.Compare:
+        lhs = parse_operand()
+        if not isinstance(lhs, algebra.Var):
+            raise ParseError(
+                "FILTER comparisons must have a variable on the left"
+            )
+        op = eat()
+        if op not in algebra.COMPARE_OPS:
+            raise ParseError(f"expected a comparison operator, got {op!r}")
+        rhs = parse_operand()
+        if op in algebra.ORDERING_OPS and isinstance(rhs, algebra.TermLit):
+            raise ParseError(
+                f"ordering comparison {op!r} needs a numeric literal or "
+                f"variable, got {rhs.lexical!r}"
+            )
+        return algebra.Compare(lhs.name, op, rhs)
+
+    patterns: list[TriplePattern] = []
+    optionals: list[tuple[TriplePattern, ...]] = []
+    filters: list[algebra.Compare] = []
+    while peek() != "}":
+        head = peek().upper()
+        if head == "OPTIONAL":
+            eat()
+            eat("{")
+            block: list[TriplePattern] = []
+            while peek() != "}":
+                if peek().upper() in ("OPTIONAL", "FILTER"):
+                    raise ParseError(
+                        "nested OPTIONAL/FILTER inside an OPTIONAL group "
+                        "is not supported"
+                    )
+                parse_triples_into(block)
+                if peek() == ".":
+                    eat()
+            eat("}")
+            if not block:
+                raise ParseError("empty OPTIONAL group")
+            optionals.append(tuple(block))
+        elif head == "FILTER":
+            eat()
+            eat("(")
+            filters.append(parse_compare())
+            while peek() == "&&":
+                eat()
+                filters.append(parse_compare())
+            eat(")")
+        else:
+            parse_triples_into(patterns)
         if peek() == ".":
             eat()
     eat("}")
+
+    limit: int | None = None
+    offset = 0
+    seen_mods: set[str] = set()
+    while peek().upper() in ("LIMIT", "OFFSET"):
+        kw = eat().upper()
+        if kw in seen_mods:
+            raise ParseError(f"duplicate {kw}")
+        seen_mods.add(kw)
+        val = eat()
+        if not re.fullmatch(r"\d+", val):
+            raise ParseError(f"{kw} needs a non-negative integer, got {val!r}")
+        if kw == "LIMIT":
+            limit = int(val)
+        else:
+            offset = int(val)
+    if peek():
+        raise ParseError(f"trailing input after query: {peek()!r}")
+
     if not patterns:
         raise ParseError("empty basic graph pattern")
-    unknown = [v for v in select_vars if all(v not in tp.variables() for tp in patterns)]
+    q = Query(
+        select_vars,
+        distinct,
+        patterns,
+        tuple(optionals),
+        tuple(filters),
+        limit,
+        offset,
+    )
+    bound = set(q.all_vars())
+    unknown = [v for v in select_vars if v not in bound]
     if unknown:
         raise ParseError(f"SELECT vars not in WHERE clause: {unknown}")
-    return Query(select_vars, distinct, patterns)
+    for cond in filters:
+        loose = [v for v in cond.variables() if v not in bound]
+        if loose:
+            raise ParseError(f"FILTER vars not in WHERE clause: {loose}")
+    return q

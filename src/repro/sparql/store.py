@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan_ir import bucket_capacity, next_pow2
@@ -66,6 +67,7 @@ class TripleStore:
         self._device_cache: OrderedDict[tuple, Relation] = OrderedDict()
         self._scan_hits = 0
         self._scan_misses = 0
+        self._num_vals = None  # device numeric-value table (FILTER support)
 
     def __len__(self) -> int:
         return len(self.triples)
@@ -195,6 +197,24 @@ class TripleStore:
             self._scan_hits += 1
             actual, _ = self._pattern_columns(tp, np.zeros((0, 3), np.int32))
         return Relation(tuple(actual), entry.cols, entry.valid)
+
+    def pattern_scan_info(self, tp: TriplePattern) -> tuple[tuple[str, ...], int]:
+        """Host-side (schema, matching-row count) for a pattern — exactly
+        what a device scan would contain, without uploading anything.
+        Used by PreparedQuery.explain() to probe the plan cache."""
+        vars_, mat = self._pattern_columns(tp, self.match_rows(tp))
+        return vars_, len(mat)
+
+    def numeric_values_device(self):
+        """Per-term-id numeric value table, uploaded once.
+
+        Gathered by term id inside compiled FILTER masks so numeric
+        literals compare by value. Assumes (like the scan caches) that the
+        triple set and dictionary are immutable after construction.
+        """
+        if self._num_vals is None:
+            self._num_vals = jnp.asarray(self.dictionary.numeric_values())
+        return self._num_vals
 
     def scan_cache_stats(self) -> dict:
         return {

@@ -1,0 +1,441 @@
+"""Prepared-query API: logical algebra, FILTER/OPTIONAL/LIMIT through the
+compiled pipeline, PreparedQuery handles, typed server results, plan-cache
+eviction and the overflow->regrow->recompile fallback."""
+import numpy as np
+import pytest
+
+from repro.sparql import algebra, lubm
+from repro.sparql.baseline import reference_rows
+from repro.sparql.engine import PreparedQuery, QueryEngine, ResultSet
+from repro.sparql.parser import ParseError, parse
+from repro.sparql.store import store_from_string_triples
+
+UB = "http://swat.cse.lehigh.edu/onto/univ-bench.owl#"
+RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
+PREFIX = f"PREFIX ub: <{UB}>\n"
+
+
+def rows_as_sets(rows):
+    return sorted(tuple(sorted(r.items())) for r in rows)
+
+
+def student_store(n_students=15, n_with_advisor=12):
+    """Students, most with advisors, all with a numeric age and a name."""
+    triples = []
+    for i in range(n_students):
+        s = f"<s{i}>"
+        triples.append((s, RDF_TYPE, f"<{UB}Student>"))
+        if i < n_with_advisor:
+            triples.append((s, f"<{UB}advisor>", f"<p{i % 4}>"))
+        triples.append((s, f"<{UB}age>", str(18 + i)))
+        triples.append((s, f"<{UB}name>", f'"student{i}"'))
+    return store_from_string_triples(triples)
+
+
+# ------------------------------------------------------------------ parser
+
+
+def test_parser_line_comments_and_numbers():
+    q = parse(
+        "# leading comment\n"
+        "SELECT ?x ?a WHERE {\n"
+        "  ?x <age> ?a .  # trailing comment\n"
+        "  FILTER (?a >= 21)\n"
+        "} LIMIT 5 OFFSET 2"
+    )
+    assert len(q.patterns) == 1
+    assert q.filters[0].op == ">="
+    assert isinstance(q.filters[0].rhs, algebra.NumLit)
+    assert q.filters[0].rhs.value == 21.0
+    assert q.limit == 5 and q.offset == 2
+
+
+def test_parser_numeric_literal_in_triple_object():
+    q = parse("SELECT ?x WHERE { ?x <age> 42 . }")
+    assert q.patterns[0].o == "42"
+    q = parse("SELECT ?x WHERE { ?x <temp> -3.5 . }")
+    assert q.patterns[0].o == "-3.5"
+
+
+def test_parser_optional_and_filter_kinds():
+    q = parse(PREFIX + """SELECT ?x ?y WHERE {
+        ?x a ub:Student .
+        OPTIONAL { ?x ub:advisor ?y }
+        FILTER (?x != ?y)
+        FILTER (?n = "bob" && ?n != ?x)
+        ?x ub:name ?n .
+    }""")
+    assert len(q.patterns) == 2  # required BGP gathers around the OPTIONAL
+    assert len(q.optionals) == 1 and len(q.optionals[0]) == 1
+    assert [c.op for c in q.filters] == ["!=", "=", "!="]
+    assert isinstance(q.filters[1].rhs, algebra.TermLit)
+    tree = q.algebra()
+    assert isinstance(tree, algebra.Project)
+    assert isinstance(tree.child, algebra.Filter)
+    assert isinstance(tree.child.child, algebra.LeftJoin)
+
+
+def test_parser_errors():
+    for bad in [
+        "SELECT ?x WHERE { ?x <p> ?y . } LIMIT -1",
+        "SELECT ?x WHERE { ?x <p> ?y . } LIMIT 2 LIMIT 3",
+        "SELECT ?x WHERE { ?x <p> ?y . FILTER (?z = 1) }",  # unbound ?z
+        "SELECT ?x WHERE { ?x <p> ?y . FILTER (3 < ?y) }",  # lhs not a var
+        'SELECT ?x WHERE { ?x <p> ?y . FILTER (?y < "s") }',  # ordered str
+        "SELECT ?x WHERE { OPTIONAL { ?x <p> ?y } }",  # no required BGP
+        "SELECT ?x WHERE { ?x <p> ?y . OPTIONAL { } }",
+        "SELECT ?x WHERE { ?x <p> ?y . OPTIONAL { OPTIONAL { ?x <q> ?z } } }",
+        "SELECT ?x WHERE { ?x <p> ?y . } garbage",
+    ]:
+        with pytest.raises(ParseError):
+            parse(bad)
+
+
+# ------------------------------------------------- acceptance (ISSUE 2)
+
+
+ACCEPTANCE = (
+    PREFIX
+    + "SELECT ?x ?y WHERE { ?x a ub:Student . "
+    "OPTIONAL { ?x ub:advisor ?y } FILTER (?x != ?y) } LIMIT 10"
+)
+
+
+def test_acceptance_query_compiled_and_cached():
+    """The ISSUE acceptance query: parses, compiles to one cached device
+    program, returns correct rows vs the NumPy reference; a warm repeat is
+    0 compiles / 1 dispatch."""
+    store = student_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(ACCEPTANCE)
+    cold = pq.run()
+    assert cold.stats.cache_misses == 1 and cold.stats.n_compiles == 1
+    warm = pq.run()
+    assert warm.stats.n_compiles == 0
+    assert warm.stats.n_dispatches == 1
+    assert warm.stats.cache_hits == 1
+
+    q = parse(ACCEPTANCE)
+    full = reference_rows(store, q)  # pre-slice oracle
+    # FILTER(?x != ?y) errors out unbound ?y rows: only advised students
+    assert len(full) == 12
+    for result in (cold, warm):
+        assert len(result) == min(10, len(full))
+        ref_set = set(rows_as_sets(full))
+        for row in result:
+            assert tuple(sorted(row.items())) in ref_set
+
+
+def test_acceptance_query_eager_matches_reference():
+    store = student_store()
+    eng = QueryEngine(store, compiled=False)
+    rows = eng.query(ACCEPTANCE)
+    full = reference_rows(store, parse(ACCEPTANCE))
+    assert len(rows) == min(10, len(full))
+    assert set(rows_as_sets(rows)) <= set(rows_as_sets(full))
+
+
+# ------------------------------------------------- FILTER differential
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+@pytest.mark.parametrize("cond", [
+    "?a >= 25", "?a < 21", "?a = 20", "?a != 20", "?a > 18.5",
+    '?n = "student3"', '?n != "student3"', "?x != ?n",
+])
+def test_filter_matches_reference(compiled, cond):
+    store = student_store()
+    eng = QueryEngine(store, compiled=compiled)
+    text = (PREFIX + "SELECT ?x ?a ?n WHERE { ?x ub:age ?a . "
+            f"?x ub:name ?n . FILTER ({cond}) }}")
+    got = eng.query(text)
+    want = reference_rows(store, parse(text))
+    assert rows_as_sets(got) == rows_as_sets(want), cond
+
+
+def test_filter_numeric_compares_by_value_not_identity():
+    triples = [("<a>", "<v>", "5"), ("<b>", "<v>", "5.0"),
+               ("<c>", "<v>", '"5"'), ("<d>", "<v>", "6")]
+    store = store_from_string_triples(triples)
+    for compiled in (True, False):
+        eng = QueryEngine(store, compiled=compiled)
+        rows = eng.query("SELECT ?x WHERE { ?x <v> ?v . FILTER (?v = 5) }")
+        # "5" and "5.0" compare equal by value; the string '"5"' errors out
+        assert sorted(r["?x"] for r in rows) == ["<a>", "<b>"]
+
+
+def test_filter_constants_share_one_compiled_program():
+    """Same filter structure, different constant -> plan-cache hit (the
+    constant rides in as a runtime input, not a compiled shape)."""
+    store = student_store()
+    eng = QueryEngine(store)
+    text = PREFIX + "SELECT ?x WHERE {{ ?x ub:age ?a . FILTER (?a > {c}) }}"
+    r1 = eng.prepare(text.format(c=20)).run()
+    assert r1.stats.cache_misses == 1 and r1.stats.n_compiles == 1
+    r2 = eng.prepare(text.format(c=28)).run()
+    assert r2.stats.cache_hits == 1 and r2.stats.n_compiles == 0
+    want = reference_rows(
+        store, parse(text.format(c=28)))
+    assert rows_as_sets(r2.rows) == rows_as_sets(want)
+
+
+# ------------------------------------------------ OPTIONAL differential
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+def test_optional_pads_unmatched_with_unbound(compiled):
+    store = student_store(n_students=8, n_with_advisor=5)
+    eng = QueryEngine(store, compiled=compiled)
+    text = PREFIX + """SELECT ?x ?y WHERE {
+        ?x a ub:Student . OPTIONAL { ?x ub:advisor ?y } }"""
+    got = eng.query(text)
+    want = reference_rows(store, parse(text))
+    assert rows_as_sets(got) == rows_as_sets(want)
+    assert len(got) == 8
+    assert sum(1 for r in got if "?y" not in r) == 3  # unbound omitted
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+def test_multi_pattern_optional_group(compiled):
+    store = student_store()
+    eng = QueryEngine(store, compiled=compiled)
+    text = PREFIX + """SELECT ?x ?y ?a WHERE {
+        ?x a ub:Student .
+        OPTIONAL { ?x ub:advisor ?y . ?x ub:age ?a }
+    }"""
+    got = eng.query(text)
+    want = reference_rows(store, parse(text))
+    assert rows_as_sets(got) == rows_as_sets(want)
+
+
+def test_optional_must_share_a_variable():
+    store = student_store()
+    eng = QueryEngine(store)
+    with pytest.raises(ValueError):
+        eng.prepare(PREFIX + """SELECT ?x WHERE {
+            ?x a ub:Student . OPTIONAL { ?z ub:name ?n } }""")
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+def test_chained_optionals_on_required_vars(compiled):
+    """Multiple OPTIONAL groups are fine when each joins through
+    always-bound (required) variables."""
+    store = student_store(n_students=8, n_with_advisor=5)
+    eng = QueryEngine(store, compiled=compiled)
+    text = PREFIX + """SELECT ?x ?y ?n WHERE {
+        ?x a ub:Student .
+        OPTIONAL { ?x ub:advisor ?y }
+        OPTIONAL { ?x ub:name ?n }
+    }"""
+    got = eng.query(text)
+    want = reference_rows(store, parse(text))
+    assert rows_as_sets(got) == rows_as_sets(want)
+
+
+def test_chained_optional_through_unbound_var_rejected():
+    """An OPTIONAL group joining on a variable a previous OPTIONAL may
+    have left UNBOUND is rejected: SPARQL's unbound-compatible left-join
+    semantics are not implemented, so answering would be silently wrong."""
+    triples = [("<s1>", "<p>", "<o1>"), ("<s2>", "<p>", "<o2>"),
+               ("<o1>", "<q>", "<z1>"), ("<z1>", "<r>", "<w1>"),
+               ("<z9>", "<r>", "<w9>")]
+    eng = QueryEngine(store_from_string_triples(triples))
+    with pytest.raises(ValueError, match="earlier OPTIONAL"):
+        eng.prepare("""SELECT * WHERE { ?x <p> ?y .
+            OPTIONAL { ?y <q> ?z } OPTIONAL { ?z <r> ?w } }""")
+
+
+# ------------------------------------------------------- LIMIT / OFFSET
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+def test_limit_offset_counts(compiled):
+    store = student_store()
+    eng = QueryEngine(store, compiled=compiled)
+    base = PREFIX + "SELECT ?x WHERE { ?x a ub:Student . }"
+    assert len(eng.query(base)) == 15
+    assert len(eng.query(base + " LIMIT 4")) == 4
+    assert len(eng.query(base + " LIMIT 4 OFFSET 13")) == 2  # tail clamp
+    assert len(eng.query(base + " OFFSET 6")) == 9
+    assert len(eng.query(base + " LIMIT 0")) == 0
+    # sliced rows are a subset of the full result
+    full = set(rows_as_sets(eng.query(base)))
+    assert set(rows_as_sets(eng.query(base + " LIMIT 7"))) <= full
+
+
+def test_limits_share_one_compiled_program():
+    store = student_store()
+    eng = QueryEngine(store)
+    base = PREFIX + "SELECT ?x WHERE { ?x a ub:Student . } LIMIT "
+    r1 = eng.prepare(base + "3").run()
+    r2 = eng.prepare(base + "9").run()
+    assert r1.stats.cache_misses == 1
+    assert r2.stats.cache_hits == 1 and r2.stats.n_compiles == 0
+    assert (len(r1), len(r2)) == (3, 9)
+
+
+# --------------------------------------------- PreparedQuery / ResultSet
+
+
+def test_prepare_run_returns_typed_result():
+    store = student_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(PREFIX + "SELECT ?x ?a WHERE { ?x ub:age ?a . }")
+    assert isinstance(pq, PreparedQuery)
+    rs = pq.run()
+    assert isinstance(rs, ResultSet)
+    assert rs.vars == ("?x", "?a")
+    assert len(rs) == 15 and rs[0].keys() == {"?x", "?a"}
+    assert rs == rs.rows  # list back-compat
+    assert pq.n_runs == 1 and pq.last_stats is rs.stats
+    pq.run()
+    assert pq.n_runs == 2
+    assert pq.stats.n_dispatches >= rs.stats.n_dispatches + 1
+
+
+def test_explain_reports_plan_and_cache_state():
+    store = student_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(ACCEPTANCE)
+    cold = pq.explain()
+    assert "LeftJoin" in cold and "Filter(?x != ?y)" in cold
+    assert "Slice(offset=0, limit=10)" in cold
+    assert "not compiled yet" in cold
+    assert "scan[0]" in cold and "bucket=" in cold
+    pq.run()
+    warm = pq.explain()
+    assert "cache: compiled, join buckets=" in warm
+    assert "1 run(s)" in warm
+
+
+def test_engine_query_is_thin_wrapper():
+    store = student_store()
+    eng = QueryEngine(store)
+    text = PREFIX + "SELECT ?x WHERE { ?x a ub:Student . } LIMIT 3"
+    assert eng.query(text) == eng.prepare(text).run().rows
+
+
+# --------------------------------- plan cache: FIFO eviction + overflow
+
+
+def test_plan_cache_fifo_eviction_at_max_entries():
+    store = student_store()
+    eng = QueryEngine(store, plan_cache_entries=2)
+    q1 = PREFIX + "SELECT ?x WHERE { ?x a ub:Student . }"
+    q2 = PREFIX + "SELECT ?x ?a WHERE { ?x ub:age ?a . ?x ub:name ?n . }"
+    q3 = PREFIX + """SELECT ?x ?a WHERE {
+        ?x a ub:Student . ?x ub:age ?a . ?x ub:name ?n . }"""
+    for q in (q1, q2, q3):  # third insert evicts the first (FIFO)
+        assert eng.prepare(q).run().stats.cache_misses == 1
+    assert len(eng.plan_cache) == 2
+    r2 = eng.prepare(q2).run()
+    assert r2.stats.cache_hits == 1  # survivor still cached
+    r1 = eng.prepare(q1).run()
+    assert r1.stats.cache_misses == 1  # evicted: recompiles
+    assert len(eng.plan_cache) == 2
+
+
+def test_overflow_regrow_recompile_with_optional_shape():
+    """Warm-cache bucket overflow on a FILTER+OPTIONAL shape: the engine
+    grows the flagged bucket from the exact totals and recompiles."""
+    triples = [("<z>", "<p0>", "<w>")]
+    triples += [("<h>", "<p0>", f"<v{i}>") for i in range(40)]
+    triples += [("<z>", "<p1>", "<c1>"), ("<h>", "<p1>", "<c2>")]
+    triples += [("<z>", "<opt>", "<o1>")]
+    store = store_from_string_triples(triples)
+    eng = QueryEngine(store)
+
+    def q(const):
+        return (f"SELECT ?x ?y ?o WHERE {{ ?x <p0> ?y . ?x <p1> <{const}> . "
+                "OPTIONAL { ?x <opt> ?o } FILTER (?x != ?y) }")
+
+    r1 = eng.prepare(q("c1")).run()  # cold: tiny calibrated buckets
+    assert len(r1) == 1 and r1.stats.n_compiles == 1
+    r2 = eng.prepare(q("c2")).run()  # warm hit, 40x the join size
+    assert r2.stats.cache_hits == 1
+    assert r2.stats.n_retries >= 1 and r2.stats.n_compiles >= 1
+    want = reference_rows(store, parse(q("c2")))
+    assert rows_as_sets(r2.rows) == rows_as_sets(want)
+    assert len(r2) == 40
+    r3 = eng.prepare(q("c2")).run()  # grown bucket now cached
+    assert r3.stats.n_retries == 0 and r3.stats.n_compiles == 0
+    assert r3.stats.n_dispatches == 1
+
+
+# ------------------------------------------------------- typed serving
+
+
+def test_server_returns_query_result_envelope():
+    from repro.serve.sparql_server import QueryResult, SPARQLServer
+
+    store = student_store()
+    srv = SPARQLServer(QueryEngine(store), max_batch=2)
+    try:
+        res = srv.query(PREFIX + "SELECT ?x WHERE { ?x a ub:Student . }")
+        assert isinstance(res, QueryResult)
+        assert res.vars == ("?x",)
+        assert len(res) == 15 and not res.from_cache
+        res2 = srv.query(PREFIX + "SELECT ?x WHERE { ?x a ub:Student . }")
+        assert res2.from_cache  # PreparedQuery handle reused
+        stats = srv.stats()
+        assert stats["prepared_cache"]["hits"] == 1
+        assert stats["prepared_cache"]["misses"] == 1
+    finally:
+        srv.close()
+
+
+def test_server_raises_typed_errors_on_caller_thread():
+    from repro.serve.sparql_server import (
+        ParseQueryError,
+        QueryError,
+        SPARQLServer,
+    )
+
+    store = student_store()
+    srv = SPARQLServer(QueryEngine(store), max_batch=2)
+    try:
+        with pytest.raises(ParseQueryError) as ei:
+            srv.query("SELECT garbage")
+        assert ei.value.kind == "parse"
+        assert isinstance(ei.value, ParseError)  # back-compat
+        with pytest.raises(QueryError) as ei:
+            srv.query(PREFIX + """SELECT ?x WHERE {
+                ?x a ub:Student . OPTIONAL { ?z ub:foo ?n } }""")
+        assert ei.value.kind == "plan"
+        # worker thread survived; later requests still serve
+        assert len(srv.query(
+            PREFIX + "SELECT ?x WHERE { ?x a ub:Student . }")) == 15
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------------- LUBM coverage
+
+
+def test_filter_optional_on_lubm_matches_eager():
+    store = lubm.generate(scale=1, seed=0)
+    compiled = QueryEngine(store)
+    eager = QueryEngine(store, compiled=False)
+    text = lubm.PREFIX + """SELECT ?p ?n ?d WHERE {
+        ?p a ub:FullProfessor .
+        ?p ub:name ?n .
+        OPTIONAL { ?p ub:worksFor ?d }
+        FILTER (?n != "prof_0_0_0")
+    }"""
+    for _ in range(2):  # cold then warm
+        assert rows_as_sets(compiled.query(text)) == rows_as_sets(
+            eager.query(text))
+
+
+def test_unbound_sentinel_never_collides_with_terms():
+    # dictionary ids are dense and non-negative; UNBOUND is -1
+    from repro.core.relation import UNBOUND
+
+    store = student_store()
+    assert UNBOUND == -1
+    assert all(
+        store.dictionary.lookup(t) >= 0
+        for t in ("<s0>", f"<{UB}Student>")
+    )
+    vals = store.dictionary.numeric_values()
+    assert np.isnan(vals).any() and np.isfinite(vals).any()
