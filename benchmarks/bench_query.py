@@ -8,10 +8,15 @@ with a single device dispatch from the plan/compile cache — the behaviour a
 query-serving deployment actually sees.
 
 Besides the 5 plain-BGP LUBM queries this also tracks the FILTER /
-OPTIONAL / LIMIT operator shapes (F1, O1, FO1) so the perf trajectory
-covers the full prepared-query algebra, not just join chains.
+OPTIONAL / LIMIT / UNION operator shapes (F1, O1, FO1, U1) and the
+bad-join-order shapes J1/J2, on which it additionally compares the
+statistics-driven join order against the legacy greedy order and FAILS
+(non-zero exit) if the optimizer stops producing strictly smaller maximum
+join buckets — so planner regressions that explode intermediate sizes
+fail the CI build (the bench-smoke job runs `--quick` on CPU).
 
     PYTHONPATH=src python -m benchmarks.bench_query [scale] [repeats]
+    PYTHONPATH=src python -m benchmarks.bench_query --quick
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ from repro.sparql import lubm
 from repro.sparql.engine import QueryEngine
 
 # operator-coverage shapes: device-side FILTER masks, OPTIONAL left joins
-# with UNBOUND padding, and a LIMIT slice on top of both
+# with UNBOUND padding, a LIMIT slice, and a UNION concat
 EXTRA_QUERIES: dict[str, str] = {
     # F1: star BGP + string-identity and numeric-free filter
     "F1": lubm.PREFIX + """SELECT ?p ?n WHERE {
@@ -41,6 +46,11 @@ EXTRA_QUERIES: dict[str, str] = {
         OPTIONAL { ?s ub:advisor ?a }
         FILTER (?s != ?a)
     } LIMIT 64""",
+    # U1: shared required scan, two union branches, one compiled dispatch
+    "U1": lubm.PREFIX + """SELECT ?s ?v WHERE {
+        ?s a ub:GraduateStudent .
+        { ?s ub:advisor ?v } UNION { ?s ub:memberOf ?v }
+    }""",
 }
 
 
@@ -51,12 +61,45 @@ def _time(fn, repeat: int) -> float:
     return (time.perf_counter() - t0) / repeat
 
 
+def bench_optimizer(store) -> list[dict]:
+    """Greedy vs statistics-driven join order on the J1/J2 shapes.
+
+    Asserts the optimizer win (strictly smaller max join bucket, same
+    rows) so a planner regression turns the benchmark red.
+    """
+    out = []
+    for name, text in lubm.J_QUERIES.items():
+        greedy = QueryEngine(store, optimize=False)
+        stats = QueryEngine(store)
+        pg = greedy.prepare(text)
+        rows_g = pg.run()
+        ps = stats.prepare(text)
+        rows_s = ps.run()
+        assert len(rows_g) == len(rows_s), name
+        assert rows_s.stats.peak_join_bucket < rows_g.stats.peak_join_bucket, (
+            f"{name}: optimizer no longer shrinks the max join bucket "
+            f"({rows_s.stats.peak_join_bucket} vs "
+            f"{rows_g.stats.peak_join_bucket})"
+        )
+        t_g = _time(lambda: pg.run(), 3)
+        t_s = _time(lambda: ps.run(), 3)
+        out.append({
+            "query": f"{name}-joinorder",
+            "rows": len(rows_s),
+            "greedy_max_bucket": rows_g.stats.peak_join_bucket,
+            "stats_max_bucket": rows_s.stats.peak_join_bucket,
+            "greedy_ms": t_g * 1e3,
+            "stats_ms": t_s * 1e3,
+        })
+    return out
+
+
 def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
-    store = lubm.generate(scale=scale, seed=seed)
+    store = lubm.generate(scale=scale, seed=seed, join_shapes=True)
     eager = QueryEngine(store, compiled=False)
     compiled = QueryEngine(store)
     out = []
-    queries = {**lubm.QUERIES, **EXTRA_QUERIES}
+    queries = {**lubm.QUERIES, **EXTRA_QUERIES, **lubm.J_QUERIES}
     for name, text in queries.items():
         # warm both: the eager jit cache and the compiled plan cache
         rows_e = eager.query(text)
@@ -71,22 +114,32 @@ def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
             "compiled_ms": t_compiled * 1e3,
             "speedup": t_eager / t_compiled,
         })
+    out.extend(bench_optimizer(store))
     out.append({"plan_cache": compiled.cache_stats(),
                 "scan_cache": store.scan_cache_stats()})
     return out
 
 
 def main() -> None:
-    scale = int(sys.argv[1]) if len(sys.argv) > 1 else 2
-    repeats = int(sys.argv[2]) if len(sys.argv) > 2 else 20
+    args = [a for a in sys.argv[1:]]
+    quick = "--quick" in args
+    pos = [a for a in args if not a.startswith("--")]
+    scale = int(pos[0]) if pos else (1 if quick else 2)
+    repeats = int(pos[1]) if len(pos) > 1 else (3 if quick else 20)
     print(f"# repeated (warm) LUBM queries, scale={scale}, "
           f"{repeats} repeats: eager vs compiled one-dispatch pipeline")
     print("query,rows,eager_ms,compiled_ms,speedup")
     rows = bench(scale=scale, repeats=repeats)
     for r in rows:
-        if "query" in r:
+        if "speedup" in r:
             print(f"{r['query']},{r['rows']},{r['eager_ms']:.2f},"
                   f"{r['compiled_ms']:.2f},{r['speedup']:.2f}")
+        elif "query" in r:
+            print(f"# {r['query']}: rows={r['rows']} "
+                  f"greedy_max_bucket={r['greedy_max_bucket']} "
+                  f"stats_max_bucket={r['stats_max_bucket']} "
+                  f"greedy_ms={r['greedy_ms']:.2f} "
+                  f"stats_ms={r['stats_ms']:.2f}")
         else:
             print(f"# {r}")
 

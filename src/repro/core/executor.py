@@ -44,6 +44,7 @@ from repro.core.plan_ir import (
     Project,
     Scan,
     Slice,
+    UnionAll,
 )
 from repro.core.relation import Relation
 
@@ -74,8 +75,21 @@ def lower(
     ) -> ChainResult:
         totals: list[jax.Array] = []
         flags: list[jax.Array] = []
+        # The plan may be a DAG: UNION branches share the required-chain
+        # subtree. Memoising by node identity evaluates the shared subtree
+        # once, so its join totals/overflows are reported exactly once (in
+        # first-visit order — the order the engine calibrates join_caps in).
+        memo: dict[int, Relation] = {}
 
         def eval_node(node: PlanNode) -> Relation:
+            hit = memo.get(id(node))
+            if hit is not None:
+                return hit
+            rel = _eval(node)
+            memo[id(node)] = rel
+            return rel
+
+        def _eval(node: PlanNode) -> Relation:
             if isinstance(node, Scan):
                 return scans[node.index]
             if isinstance(node, MRJoin):
@@ -111,6 +125,9 @@ def lower(
                     child, node.conds, consts_i, consts_f, num_vals
                 )
                 return Relation(child.schema, child.cols, keep)
+            if isinstance(node, UnionAll):
+                kids = [eval_node(c) for c in node.children]
+                return mj.union_all(kids, node.schema)
             if isinstance(node, Project):
                 return eval_node(node.child).project(list(node.schema))
             if isinstance(node, Distinct):

@@ -259,6 +259,70 @@ def _numeric_of(col: jax.Array, num_vals: jax.Array) -> jax.Array:
     return jnp.where(col >= 0, num_vals[safe], jnp.nan)
 
 
+def _compare_mask(
+    rel: Relation,
+    lhs: str,
+    op: str,
+    kind: str,
+    ref,
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
+) -> jax.Array:
+    """One comparison as a boolean mask (validity handled by the caller).
+
+      kind "var" — rhs is the variable named `ref`;
+      kind "id"  — rhs is the term id `consts_i[ref]` (= / != by identity);
+      kind "num" — rhs is the float `consts_f[ref]` (compared by value via
+                   the dictionary's numeric table).
+    SPARQL error semantics: an unbound operand, or a non-numeric term under
+    a numeric comparison, fails the comparison — even for `!=`. With only
+    `&&`/`||` above (no negation), error-as-false composes exactly like
+    three-valued logic would.
+    """
+    a = rel.column(lhs)
+    if kind == "num" or (kind == "var" and op in ("<", "<=", ">", ">=")):
+        va = _numeric_of(a, num_vals)
+        vb = (
+            _numeric_of(rel.column(ref), num_vals)
+            if kind == "var"
+            else consts_f[ref]
+        )
+        ok = ~jnp.isnan(va) & ~jnp.isnan(vb)
+        return ok & _NUMERIC_CMP[op](va, vb)
+    # term-identity comparison (= / != on ids)
+    b = rel.column(ref) if kind == "var" else consts_i[ref]
+    bound = a != UNBOUND
+    if kind == "var":
+        bound = bound & (b != UNBOUND)
+    eq = a == b
+    return bound & (eq if op == "=" else ~eq)
+
+
+def expr_mask(
+    rel: Relation,
+    expr: tuple,
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
+) -> jax.Array:
+    """A plan_ir.FilterExpr as a composed device mask: comparisons at the
+    leaves, `&`/`|` over ("and", ...) / ("or", ...) nodes."""
+    tag = expr[0]
+    if tag == "cmp":
+        _, lhs, op, kind, ref = expr
+        return _compare_mask(
+            rel, lhs, op, kind, ref, consts_i, consts_f, num_vals
+        )
+    masks = [
+        expr_mask(rel, c, consts_i, consts_f, num_vals) for c in expr[1]
+    ]
+    out = masks[0]
+    for m in masks[1:]:
+        out = (out & m) if tag == "and" else (out | m)
+    return out
+
+
 def filter_mask(
     rel: Relation,
     conds: tuple,
@@ -266,36 +330,38 @@ def filter_mask(
     consts_f: jax.Array,
     num_vals: jax.Array,
 ) -> jax.Array:
-    """Conjunction of comparison conditions as a validity mask.
-
-    Each cond is a plan_ir.FilterCond `(lhs_var, op, kind, ref)`:
-      kind "var" — rhs is the variable named `ref`;
-      kind "id"  — rhs is the term id `consts_i[ref]` (= / != by identity);
-      kind "num" — rhs is the float `consts_f[ref]` (compared by value via
-                   the dictionary's numeric table).
-    SPARQL error semantics: an unbound operand, or a non-numeric term under
-    a numeric comparison, fails the condition — even for `!=`.
-    """
+    """Conjunction of filter expressions as a validity mask."""
     keep = rel.valid
-    for lhs, op, kind, ref in conds:
-        a = rel.column(lhs)
-        if kind == "num" or (kind == "var" and op in ("<", "<=", ">", ">=")):
-            va = _numeric_of(a, num_vals)
-            vb = (
-                _numeric_of(rel.column(ref), num_vals)
-                if kind == "var"
-                else consts_f[ref]
-            )
-            ok = ~jnp.isnan(va) & ~jnp.isnan(vb)
-            keep = keep & ok & _NUMERIC_CMP[op](va, vb)
-        else:  # term-identity comparison (= / != on ids)
-            b = rel.column(ref) if kind == "var" else consts_i[ref]
-            bound = a != UNBOUND
-            if kind == "var":
-                bound = bound & (b != UNBOUND)
-            eq = a == b
-            keep = keep & bound & (eq if op == "=" else ~eq)
+    for expr in conds:
+        keep = keep & expr_mask(rel, expr, consts_i, consts_f, num_vals)
     return keep
+
+
+def union_all(rels: list[Relation], schema: tuple[str, ...]) -> Relation:
+    """SPARQL UNION: multiset concatenation over an aligned schema.
+
+    Columns a branch does not bind are filled with the UNBOUND sentinel
+    (the decoder omits them; FILTER masks treat them as errors). Output
+    capacity is the exact sum of branch capacities — never overflows.
+    Duplicate solutions are preserved (multiset semantics); SELECT
+    DISTINCT on top reuses the device `distinct` machinery to dedup.
+    """
+    cols_parts = []
+    valid_parts = []
+    for rel in rels:
+        cols = [
+            rel.column(v)
+            if v in rel.schema
+            else jnp.full((rel.capacity,), UNBOUND, jnp.int32)
+            for v in schema
+        ]
+        cols_parts.append(jnp.stack(cols, axis=1))
+        valid_parts.append(rel.valid)
+    return Relation(
+        tuple(schema),
+        jnp.concatenate(cols_parts, axis=0),
+        jnp.concatenate(valid_parts, axis=0),
+    )
 
 
 def slice_valid(rel: Relation, offset, limit) -> Relation:

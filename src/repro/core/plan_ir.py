@@ -1,10 +1,12 @@
 """Physical-plan IR for the MapSQ join chain.
 
-The planner (core/planner.py) decides the join ORDER; this module turns that
-order into a *physical* plan — a tree of frozen, hashable nodes (Scan /
-MRJoin / CrossJoin / LeftJoin / Filter / Project / Distinct / Slice) whose
-static capacities are the shapes a compiled executor is specialised on
-(core/executor.py lowers the tree to one jitted device program).
+The optimizer (sparql/optimizer.py) decides the join ORDER and the filter
+attachment stages; this module turns them into a *physical* plan — a tree
+(a DAG when UNION branches share the required chain) of frozen, hashable
+nodes (Scan / MRJoin / CrossJoin / LeftJoin / Filter / UnionAll / Project /
+Distinct / Slice) whose static capacities are the shapes a compiled
+executor is specialised on (core/executor.py lowers the tree to one jitted
+device program).
 
 Three properties make plans reusable across queries, which is the whole
 point of the plan/compile cache in sparql/engine.py:
@@ -18,9 +20,9 @@ point of the plan/compile cache in sparql/engine.py:
     live in the scan *data*, not the plan) share one compiled program;
   * runtime constants — FILTER comparison constants and LIMIT/OFFSET values
     are NOT part of the plan: they are passed to the compiled program as
-    int/float input arrays (FilterCond stores an *index* into them), so
-    queries differing only in a filter constant or a limit share one
-    executable too.
+    int/float input arrays (FilterExpr comparison leaves store an *index*
+    into them), so queries differing only in a filter constant or a limit
+    share one executable too.
 
 `PlanShape` is the hashable cache key: scan schemas + scan buckets + join
 structure (required chain plus OPTIONAL group specs) + filter structure +
@@ -36,11 +38,61 @@ from typing import Union
 # Pow-2 bucket floor: tiny relations all share the same smallest shape.
 MIN_BUCKET = 8
 
-# FILTER comparisons: (lhs_var, op, kind, ref) where kind is
-#   "var" — ref is the rhs variable name;
-#   "id"  — ref indexes the int runtime-constants array (term identity);
-#   "num" — ref indexes the float runtime-constants array (numeric value).
-FilterCond = tuple[str, str, str, Union[str, int]]
+# FILTER expressions are nested hashable tuples:
+#   ("cmp", lhs_var, op, kind, ref) — a comparison, where kind is
+#       "var" — ref is the rhs variable name;
+#       "id"  — ref indexes the int runtime-constants array (term identity);
+#       "num" — ref indexes the float runtime-constants array (numeric);
+#   ("and", (expr, ...)) / ("or", (expr, ...)) — boolean combination.
+FilterExpr = tuple
+
+# Where the optimizer attached a filter conjunct in the operator tree:
+#   ("scan", i)  — masks scan i before it joins anything;
+#   ("req", j)   — after required-chain join j (0-based);
+#   ("opt", g)   — after OPTIONAL group g's left join;
+#   ("bjoin", b) — after UNION branch b was joined with the required chain
+#                  (or after the branch's own chain when none exists);
+#   ("top",)     — after the whole tree, before projection (the unoptimized
+#                  position — always sound).
+FilterStage = tuple
+FilterSpec = tuple[FilterStage, FilterExpr]
+
+
+def expr_vars(expr: FilterExpr) -> tuple[str, ...]:
+    """Variables a plan-level filter expression reads, in first appearance
+    order."""
+    if expr[0] == "cmp":
+        _, lhs, _op, kind, ref = expr
+        return (lhs, ref) if kind == "var" else (lhs,)
+    out: list[str] = []
+    for child in expr[1]:
+        for v in expr_vars(child):
+            if v not in out:
+                out.append(v)
+    return tuple(out)
+
+
+def rename_expr(expr: FilterExpr, rn: dict[str, str]) -> FilterExpr:
+    """Apply a variable renaming to a filter expression."""
+    if expr[0] == "cmp":
+        _, lhs, op, kind, ref = expr
+        return (
+            "cmp",
+            rn.get(lhs, lhs),
+            op,
+            kind,
+            rn.get(ref, ref) if kind == "var" else ref,
+        )
+    return (expr[0], tuple(rename_expr(c, rn) for c in expr[1]))
+
+
+def format_expr(expr: FilterExpr) -> str:
+    if expr[0] == "cmp":
+        _, lhs, op, kind, ref = expr
+        rhs = ref if kind == "var" else f"{kind}[{ref}]"
+        return f"{lhs} {op} {rhs}"
+    sep = " && " if expr[0] == "and" else " || "
+    return "(" + sep.join(format_expr(c) for c in expr[1]) + ")"
 
 
 def next_pow2(n: int) -> int:
@@ -112,10 +164,10 @@ class LeftJoin:
 
 @dataclasses.dataclass(frozen=True)
 class Filter:
-    """Device-side validity mask from comparison conditions."""
+    """Device-side validity mask from filter expressions (conjunction)."""
 
     child: "PlanNode"
-    conds: tuple[FilterCond, ...]
+    conds: tuple[FilterExpr, ...]
 
     @property
     def schema(self) -> tuple[str, ...]:
@@ -124,6 +176,24 @@ class Filter:
     @property
     def capacity(self) -> int:
         return self.child.capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionAll:
+    """SPARQL UNION: device-side multiset concatenation of the branches.
+
+    The output schema is the first-appearance union of the child schemas;
+    columns a branch does not bind are padded with the UNBOUND sentinel.
+    Capacity is the exact sum of the children's capacities — concatenation
+    can never overflow, so UNION adds no calibrated bucket of its own.
+    """
+
+    children: tuple["PlanNode", ...]
+    schema: tuple[str, ...]
+
+    @property
+    def capacity(self) -> int:
+        return sum(c.capacity for c in self.children)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,8 +238,19 @@ class Slice:
 
 
 PlanNode = Union[
-    Scan, MRJoin, CrossJoin, LeftJoin, Filter, Project, Distinct, Slice
+    Scan, MRJoin, CrossJoin, LeftJoin, Filter, UnionAll, Project, Distinct,
+    Slice,
 ]
+
+
+def child_nodes(node: PlanNode) -> list[PlanNode]:
+    if isinstance(node, UnionAll):
+        return list(node.children)
+    return [
+        getattr(node, a)
+        for a in ("left", "right", "child")
+        if hasattr(node, a)
+    ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,13 +260,17 @@ class PhysicalPlan:
     join_caps: tuple[int, ...]  # per join step, evaluation order
 
     def max_capacity(self) -> int:
+        # the plan may be a DAG (union branches share the required chain);
+        # id-dedup keeps the walk linear
+        seen: set[int] = set()
+
         def walk(node: PlanNode) -> int:
-            kids = [
-                getattr(node, a)
-                for a in ("left", "right", "child")
-                if hasattr(node, a)
-            ]
-            return max([node.capacity] + [walk(k) for k in kids])
+            if id(node) in seen:
+                return 0
+            seen.add(id(node))
+            return max(
+                [node.capacity] + [walk(k) for k in child_nodes(node)]
+            )
 
         return walk(self.root)
 
@@ -209,35 +294,47 @@ class PlanShape:
     Pattern constants, filter constants and LIMIT/OFFSET values are
     deliberately absent: they only affect scan data / runtime inputs. Two
     queries with the same shape dispatch the same compiled executable.
+
+    Scan order: required chain, then each OPTIONAL group's scans, then
+    each UNION branch's scans. `filters` carry the optimizer's chosen
+    attachment stage; `prune` enables projection narrowing (dropping
+    variables nothing downstream reads) inside the compiled program.
     """
 
     scan_schemas: tuple[tuple[str, ...], ...]  # canonical names, plan order
     scan_caps: tuple[int, ...]
     cross_flags: tuple[bool, ...]  # required chain (len == n_required - 1)
     opt_groups: tuple[GroupSpec, ...] = ()
-    filters: tuple[FilterCond, ...] = ()
+    union_groups: tuple[GroupSpec, ...] = ()
+    has_required: bool = True  # False: UNION-only query, no required BGP
+    filters: tuple[FilterSpec, ...] = ()
+    n_consts: tuple[int, int] = (0, 0)  # (int, float) filter consts
     projection: tuple[str, ...] = ()  # canonical names
     distinct: bool = False
     has_slice: bool = False
+    prune: bool = False  # optimizer projection pruning enabled
 
     @property
     def n_required(self) -> int:
-        return len(self.cross_flags) + 1
+        return len(self.cross_flags) + 1 if self.has_required else 0
 
     def n_joins(self) -> int:
         """Join steps that carry a calibrated bucket, evaluation order:
-        required chain, then per group its inner joins + the left join."""
-        return len(self.cross_flags) + sum(
-            len(g.cross_flags) + 1 for g in self.opt_groups
+        required chain, per OPTIONAL group its inner joins + the left
+        join, then per UNION branch its inner joins + (when a required
+        chain exists) the branch-required join."""
+        req = len(self.cross_flags) if self.has_required else 0
+        opt = sum(len(g.cross_flags) + 1 for g in self.opt_groups)
+        uni = sum(
+            len(g.cross_flags) + (1 if self.has_required else 0)
+            for g in self.union_groups
         )
-
-    def n_id_consts(self) -> int:
-        return sum(1 for c in self.filters if c[2] == "id")
+        return req + opt + uni
 
     def slice_const_indices(self) -> tuple[int, int]:
         """(offset, limit) positions in the int runtime-constants array:
         appended right after the filter id constants."""
-        base = self.n_id_consts()
+        base = self.n_consts[0]
         return base, base + 1
 
 
@@ -260,63 +357,139 @@ def make_shape(
     projection: tuple[str, ...],
     distinct: bool,
     opt_groups: tuple[GroupSpec, ...] = (),
-    filters: tuple[FilterCond, ...] = (),
+    union_groups: tuple[GroupSpec, ...] = (),
+    has_required: bool = True,
+    filters: tuple[FilterSpec, ...] = (),
+    n_consts: tuple[int, int] = (0, 0),
     has_slice: bool = False,
+    prune: bool = False,
 ) -> PlanShape:
     n_group_scans = sum(g.n_scans for g in opt_groups)
+    n_union_scans = sum(g.n_scans for g in union_groups)
+    n_req = len(cross_flags) + 1 if has_required else 0
+    assert has_required or not cross_flags
+    assert has_required or not opt_groups
     assert len(scan_schemas) == len(scan_caps)
-    assert len(scan_schemas) == len(cross_flags) + 1 + n_group_scans
+    assert len(scan_schemas) == n_req + n_group_scans + n_union_scans
     return PlanShape(
         scan_schemas,
         scan_caps,
         cross_flags,
         opt_groups,
+        union_groups,
+        has_required,
         filters,
+        n_consts,
         projection,
         distinct,
         has_slice,
+        prune,
     )
+
+
+def narrowed_schema(
+    schema: tuple[str, ...], needed: set[str]
+) -> tuple[str, ...]:
+    return tuple(v for v in schema if v in needed)
 
 
 def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
     """Materialise the node tree for a shape at given join bucket capacities.
 
-    `join_caps` are consumed in evaluation order: required-chain joins,
-    then, per OPTIONAL group, its inner joins followed by the left join.
+    `join_caps` are consumed in evaluation order: required-chain joins;
+    per OPTIONAL group its inner joins then the left join; per UNION
+    branch its inner joins then (when a required chain exists) the
+    branch-required join. Filter conjuncts are interleaved at their
+    optimizer-chosen stages, and (with shape.prune) intermediate schemas
+    are narrowed to the variables something downstream still reads —
+    projection pruning, applied inside the one compiled program.
     """
     assert len(join_caps) == shape.n_joins(), (join_caps, shape)
     caps = iter(join_caps)
     effective: list[int] = []
     scan_idx = 0
+    by_stage: dict[tuple, list[FilterExpr]] = {}
+    for stage, expr in shape.filters:
+        by_stage.setdefault(stage, []).append(expr)
+    applied_stages: set[tuple] = set()
 
-    def next_scan() -> Scan:
-        nonlocal scan_idx
-        s = Scan(scan_idx, shape.scan_schemas[scan_idx],
-                 shape.scan_caps[scan_idx])
-        scan_idx += 1
-        return s
-
-    def chain(n_scans: int, cross_flags: tuple[bool, ...]) -> PlanNode:
-        node: PlanNode = next_scan()
-        for is_cross in cross_flags:
-            right = next_scan()
-            if is_cross:
-                cap = node.capacity * right.capacity  # exact: see CrossJoin
-                next(caps)  # consumes its slot, value is structural
-                node = CrossJoin(node, right, node.schema + right.schema, cap)
-            else:
-                cap = bucket_capacity(next(caps))
-                key = tuple(v for v in node.schema if v in right.schema)
-                extra = tuple(
-                    v for v in right.schema if v not in node.schema
-                )
-                node = MRJoin(node, right, key, node.schema + extra, cap)
-            effective.append(cap)
+    def apply_filters(node: PlanNode, stage: tuple) -> PlanNode:
+        applied_stages.add(stage)
+        exprs = by_stage.get(stage)
+        if exprs:
+            node = Filter(node, tuple(exprs))
         return node
 
-    node = chain(shape.n_required, shape.cross_flags)
-    for g in shape.opt_groups:
-        grp = chain(g.n_scans, g.cross_flags)
+    def narrow(node: PlanNode, keep_joinable=()) -> PlanNode:
+        """Project away variables nothing downstream reads: not in the
+        final projection, not in a still-pending filter, not in a
+        not-yet-consumed scan, and not in a schema we must stay joinable
+        with (`keep_joinable`). Row counts are unaffected, so the
+        calibration totals stay identical — only intermediate widths (and
+        therefore join buffer bytes) shrink."""
+        if not shape.prune:
+            return node
+        needed = set(shape.projection)
+        for stage, expr in shape.filters:
+            if stage not in applied_stages:
+                needed.update(expr_vars(expr))
+        for s in shape.scan_schemas[scan_idx:]:
+            needed.update(s)
+        for s in keep_joinable:
+            needed.update(s)
+        keep = narrowed_schema(node.schema, needed)
+        if keep != tuple(node.schema):
+            node = Project(node, keep)
+        return node
+
+    def next_scan() -> PlanNode:
+        nonlocal scan_idx
+        i = scan_idx
+        s = Scan(i, shape.scan_schemas[i], shape.scan_caps[i])
+        scan_idx += 1
+        return apply_filters(s, ("scan", i))
+
+    def join_pair(
+        node: PlanNode, right: PlanNode, is_cross: bool
+    ) -> PlanNode:
+        if is_cross:
+            cap = node.capacity * right.capacity  # exact: see CrossJoin
+            next(caps)  # consumes its slot, value is structural
+            node = CrossJoin(
+                node, right, tuple(node.schema) + tuple(right.schema), cap
+            )
+        else:
+            cap = bucket_capacity(next(caps))
+            key = tuple(v for v in node.schema if v in right.schema)
+            extra = tuple(v for v in right.schema if v not in node.schema)
+            node = MRJoin(
+                node, right, key, tuple(node.schema) + extra, cap
+            )
+        effective.append(cap)
+        return node
+
+    def chain(
+        n_scans: int,
+        cross_flags: tuple[bool, ...],
+        req_stages: bool = False,
+        keep_joinable=(),
+    ) -> PlanNode:
+        node = narrow(next_scan(), keep_joinable)
+        for j, is_cross in enumerate(cross_flags):
+            right = narrow(
+                next_scan(), tuple(keep_joinable) + (node.schema,)
+            )
+            node = join_pair(node, right, is_cross)
+            if req_stages:
+                node = apply_filters(node, ("req", j))
+            node = narrow(node, keep_joinable)
+        return node
+
+    node: PlanNode | None = None
+    if shape.has_required:
+        node = chain(shape.n_required, shape.cross_flags, req_stages=True)
+    for gi, g in enumerate(shape.opt_groups):
+        grp = chain(g.n_scans, g.cross_flags, keep_joinable=(node.schema,))
         key = tuple(v for v in node.schema if v in grp.schema)
         if not key:
             raise ValueError(
@@ -325,10 +498,29 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
             )
         join_cap = bucket_capacity(next(caps))
         extra = tuple(v for v in grp.schema if v not in node.schema)
-        node = LeftJoin(node, grp, key, node.schema + extra, join_cap)
+        node = LeftJoin(node, grp, key, tuple(node.schema) + extra, join_cap)
         effective.append(join_cap)
-    if shape.filters:
-        node = Filter(node, shape.filters)
+        node = apply_filters(node, ("opt", gi))
+        node = narrow(node)
+    if shape.union_groups:
+        req_node = node
+        children: list[PlanNode] = []
+        for bi, g in enumerate(shape.union_groups):
+            keep = (req_node.schema,) if req_node is not None else ()
+            bnode = chain(g.n_scans, g.cross_flags, keep_joinable=keep)
+            if req_node is not None:
+                shared = [v for v in req_node.schema if v in bnode.schema]
+                bnode = join_pair(req_node, bnode, is_cross=not shared)
+            bnode = apply_filters(bnode, ("bjoin", bi))
+            bnode = narrow(bnode)
+            children.append(bnode)
+        schema: list[str] = []
+        for c in children:
+            for v in c.schema:
+                if v not in schema:
+                    schema.append(v)
+        node = UnionAll(tuple(children), tuple(schema))
+    node = apply_filters(node, ("top",))
     node = Project(node, shape.projection)
     if shape.distinct:
         node = Distinct(node)
@@ -355,3 +547,61 @@ def grow_join_caps(
         if flag:
             new[i] = bucket_capacity(max(int(totals[i]), 2 * join_caps[i]))
     return tuple(new)
+
+
+# -- warmup persistence (plan-cache signatures as JSON) -----------------------
+
+
+def _expr_from_json(e) -> FilterExpr:
+    if e[0] == "cmp":
+        return ("cmp", e[1], e[2], e[3], e[4])
+    return (e[0], tuple(_expr_from_json(c) for c in e[1]))
+
+
+def shape_to_jsonable(shape: PlanShape) -> dict:
+    """A JSON-serialisable form of the cache key (tuples become lists; the
+    inverse is `shape_from_jsonable`, which must round-trip to an equal
+    PlanShape — that equality is what makes warmup hits possible)."""
+    return {
+        "scan_schemas": [list(s) for s in shape.scan_schemas],
+        "scan_caps": list(shape.scan_caps),
+        "cross_flags": list(shape.cross_flags),
+        "opt_groups": [
+            {"n_scans": g.n_scans, "cross_flags": list(g.cross_flags)}
+            for g in shape.opt_groups
+        ],
+        "union_groups": [
+            {"n_scans": g.n_scans, "cross_flags": list(g.cross_flags)}
+            for g in shape.union_groups
+        ],
+        "has_required": shape.has_required,
+        "filters": [[list(stage), expr] for stage, expr in shape.filters],
+        "n_consts": list(shape.n_consts),
+        "projection": list(shape.projection),
+        "distinct": shape.distinct,
+        "has_slice": shape.has_slice,
+        "prune": shape.prune,
+    }
+
+
+def shape_from_jsonable(obj: dict) -> PlanShape:
+    def group(d) -> GroupSpec:
+        return GroupSpec(int(d["n_scans"]), tuple(d["cross_flags"]))
+
+    return PlanShape(
+        scan_schemas=tuple(tuple(s) for s in obj["scan_schemas"]),
+        scan_caps=tuple(int(c) for c in obj["scan_caps"]),
+        cross_flags=tuple(bool(f) for f in obj["cross_flags"]),
+        opt_groups=tuple(group(g) for g in obj["opt_groups"]),
+        union_groups=tuple(group(g) for g in obj["union_groups"]),
+        has_required=bool(obj["has_required"]),
+        filters=tuple(
+            (tuple(stage), _expr_from_json(expr))
+            for stage, expr in obj["filters"]
+        ),
+        n_consts=tuple(int(c) for c in obj["n_consts"]),
+        projection=tuple(obj["projection"]),
+        distinct=bool(obj["distinct"]),
+        has_slice=bool(obj["has_slice"]),
+        prune=bool(obj["prune"]),
+    )

@@ -69,7 +69,10 @@ def plan_bgp(
             )
             steps.append(JoinStep(nxt, key_vars, False))
         else:
-            nxt = remaining[0]
+            # disconnected component: cross join. Pick the smallest pattern
+            # by estimated cardinality (not input order) so the product
+            # capacity of the cross-join intermediate stays minimal.
+            nxt = min(remaining, key=lambda i: cardinality(patterns[i]))
             steps.append(JoinStep(nxt, (), True))
         bound |= set(patterns[nxt].variables())
         remaining.remove(nxt)

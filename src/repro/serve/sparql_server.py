@@ -131,6 +131,18 @@ class SPARQLServer:
         failures) on this thread if the request failed."""
         return self._batcher.submit(text)
 
+    def explain(self, text: str) -> str:
+        """Host-side plan report (algebra, optimizer trace, physical plan,
+        cache state) for a query, through the prepared-handle cache."""
+        pq, _ = self._prepared_handle(text)
+        return pq.explain()
+
+    def save_cache(self, path: str) -> int:
+        """Persist the engine's learned bucket signatures (see
+        QueryEngine.save_cache); a restarted server constructed with
+        QueryEngine(warmup_path=...) skips calibration for these shapes."""
+        return self.engine.save_cache(path)
+
     def stats(self) -> dict:
         total = self._prepared_hits + self._prepared_misses
         return {

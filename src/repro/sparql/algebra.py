@@ -5,13 +5,14 @@ The prepared-query API layers the stack as
     text --parse--> logical algebra --plan--> physical plan --compile--> XLA
 
 This module is the middle layer: a small, frozen, hashable tree of SPARQL
-operators (BGP / LeftJoin / Filter / Project / Distinct / Slice) covering
-the query class the paper's successors evaluate (gSMat, gSmart: filtered
-and optional basic graph patterns). Every future planner feature targets
+operators (BGP / Join / Union / LeftJoin / Filter / Project / Distinct /
+Slice) covering the query class the paper's successors evaluate (gSMat,
+gSmart: filtered, optional and union basic graph patterns). Every planner
+feature — including the rewrite passes in sparql/optimizer.py — targets
 this tree instead of ad-hoc pattern lists.
 
-Supported FILTER expressions are conjunctions of comparisons whose left
-side is a variable:
+Supported FILTER expressions are boolean combinations (`&&`, `||`,
+parentheses) of comparisons whose left side is a variable:
 
     ?x != ?y          term (id) comparison, both sides must be bound
     ?age >= 21        numeric comparison against an integer/decimal literal
@@ -19,7 +20,10 @@ side is a variable:
 
 SPARQL's error semantics apply: a comparison involving an unbound variable
 or a non-numeric value under a numeric operator is an error, and an error
-removes the row (even for `!=`).
+fails that comparison (even for `!=`). With only `&&`/`||` and no negation
+operator, collapsing error to false at the leaves is observationally
+equivalent to full three-valued logic (err && x = false = removed;
+err || true = true either way), which is what the device masks do.
 """
 from __future__ import annotations
 
@@ -79,6 +83,59 @@ class Compare:
         return f"{self.lhs} {self.op} {rhs}"
 
 
+@dataclasses.dataclass(frozen=True)
+class And:
+    """Conjunction of filter expressions (FILTER `&&`)."""
+
+    children: tuple["FilterExpr", ...]
+
+    def variables(self) -> tuple[str, ...]:
+        return _expr_vars(self.children)
+
+    def __str__(self) -> str:
+        return " && ".join(_paren(c) for c in self.children)
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    """Disjunction of filter expressions (FILTER `||`)."""
+
+    children: tuple["FilterExpr", ...]
+
+    def variables(self) -> tuple[str, ...]:
+        return _expr_vars(self.children)
+
+    def __str__(self) -> str:
+        return " || ".join(_paren(c) for c in self.children)
+
+
+FilterExpr = Union[Compare, And, Or]
+
+
+def _expr_vars(children) -> tuple[str, ...]:
+    out: list[str] = []
+    for c in children:
+        for v in c.variables():
+            if v not in out:
+                out.append(v)
+    return tuple(out)
+
+
+def _paren(expr: "FilterExpr") -> str:
+    return f"({expr})" if isinstance(expr, (And, Or)) else str(expr)
+
+
+def flatten_conjuncts(expr: "FilterExpr") -> tuple["FilterExpr", ...]:
+    """Split top-level ANDs into the conjunct list the optimizer pushes
+    around independently (an Or conjunct stays one opaque unit)."""
+    if isinstance(expr, And):
+        out: list[FilterExpr] = []
+        for c in expr.children:
+            out.extend(flatten_conjuncts(c))
+        return tuple(out)
+    return (expr,)
+
+
 # -- algebra nodes ------------------------------------------------------------
 
 
@@ -90,6 +147,37 @@ class BGP:
         out: list[str] = []
         for tp in self.patterns:
             for v in tp.variables():
+                if v not in out:
+                    out.append(v)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    """Inner join of two subtrees (required BGP joined with a UNION block)."""
+
+    left: "AlgebraNode"
+    right: "AlgebraNode"
+
+    def variables(self) -> tuple[str, ...]:
+        out = list(self.left.variables())
+        for v in self.right.variables():
+            if v not in out:
+                out.append(v)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionNode:
+    """SPARQL UNION: multiset union of branch solutions. Branches may bind
+    different variables; a row leaves the other branches' variables unbound."""
+
+    branches: tuple["AlgebraNode", ...]
+
+    def variables(self) -> tuple[str, ...]:
+        out: list[str] = []
+        for b in self.branches:
+            for v in b.variables():
                 if v not in out:
                     out.append(v)
         return tuple(out)
@@ -114,7 +202,7 @@ class LeftJoin:
 @dataclasses.dataclass(frozen=True)
 class Filter:
     child: "AlgebraNode"
-    conditions: tuple[Compare, ...]  # conjunction
+    conditions: tuple[FilterExpr, ...]  # conjunction of expressions
 
     def variables(self) -> tuple[str, ...]:
         return self.child.variables()
@@ -147,7 +235,9 @@ class Slice:
         return self.child.variables()
 
 
-AlgebraNode = Union[BGP, LeftJoin, Filter, Project, Distinct, Slice]
+AlgebraNode = Union[
+    BGP, Join, UnionNode, LeftJoin, Filter, Project, Distinct, Slice
+]
 
 
 def format_algebra(node: AlgebraNode, indent: int = 0) -> str:
@@ -159,6 +249,17 @@ def format_algebra(node: AlgebraNode, indent: int = 0) -> str:
             f"{pad}  ({tp.s} {tp.p} {tp.o})" for tp in node.patterns
         ]
         return "\n".join(lines)
+    if isinstance(node, Join):
+        return (
+            f"{pad}Join\n"
+            + format_algebra(node.left, indent + 1)
+            + "\n"
+            + format_algebra(node.right, indent + 1)
+        )
+    if isinstance(node, UnionNode):
+        return f"{pad}Union\n" + "\n".join(
+            format_algebra(b, indent + 1) for b in node.branches
+        )
     if isinstance(node, LeftJoin):
         return (
             f"{pad}LeftJoin (OPTIONAL)\n"

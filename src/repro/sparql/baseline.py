@@ -15,9 +15,9 @@ All three consume/produce the same dictionary-encoded numpy rows as the
 device join, so benchmarks/bench_join.py can reproduce the Table 2 shape:
 same partial matches in, same result set out, join time compared.
 
-`reference_rows` additionally evaluates a full parsed Query — BGP,
-OPTIONAL, FILTER, projection, DISTINCT — by backtracking over decoded
-triples. It is the differential oracle the prepared-query tests compare
+`reference_rows` additionally evaluates a full parsed Query — BGP, UNION,
+OPTIONAL, FILTER (boolean combinations), projection, DISTINCT — by
+backtracking over decoded triples. It is the differential oracle the prepared-query tests compare
 the device algebra against (LIMIT/OFFSET are left to the caller, since
 any row subset of the right size is a correct slice).
 """
@@ -96,9 +96,14 @@ def _extend(bindings: list[dict], triples, tp) -> list[dict]:
 
 def _filter_true(cond, b: dict) -> bool:
     """SPARQL error semantics: unbound operands or non-numeric values under
-    numeric operators fail the condition (even for !=)."""
+    numeric operators fail the condition (even for !=). `cond` may be a
+    boolean combination (algebra.And / algebra.Or) of comparisons."""
     from repro.sparql import algebra
 
+    if isinstance(cond, algebra.And):
+        return all(_filter_true(c, b) for c in cond.children)
+    if isinstance(cond, algebra.Or):
+        return any(_filter_true(c, b) for c in cond.children)
     lhs = b.get(cond.lhs)
     if lhs is None:
         return False
@@ -135,6 +140,16 @@ def reference_rows(store, q) -> list[dict[str, str]]:
     bindings = [dict()]
     for tp in q.patterns:
         bindings = _extend(bindings, triples, tp)
+    if getattr(q, "unions", ()):
+        # multiset union: each branch extends the required bindings
+        # independently; rows keep other branches' variables unbound
+        unioned: list[dict] = []
+        for branch in q.unions:
+            ext = list(bindings)
+            for tp in branch:
+                ext = _extend(ext, triples, tp)
+            unioned.extend(ext)
+        bindings = unioned
     for group in q.optionals:
         joined = []
         for b in bindings:

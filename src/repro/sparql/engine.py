@@ -1,8 +1,10 @@
 """The MapSQ query engine (Figure 1 of the paper) and its prepared-query API.
 
 Coprocessing split, exactly as the paper describes it:
-  CPU  — parse, dictionary-encode, plan join order, size capacities,
-         dispatch subqueries (this file, host Python);
+  CPU  — parse, dictionary-encode, optimize (sparql/optimizer.py:
+         statistics-driven join order, filter pushdown, projection
+         pruning), size capacities, dispatch subqueries (this file,
+         host Python);
   GPU→TPU — pattern range-scans feed the MapReduce join (Algorithm 1,
          core/mr_join.py, jitted).
 
@@ -39,6 +41,8 @@ Two execution modes share one planner:
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 from collections import OrderedDict
 
 import numpy as np
@@ -49,9 +53,9 @@ import jax.numpy as jnp
 from repro.core import executor as ex
 from repro.core import mr_join as mj
 from repro.core import plan_ir
-from repro.core.planner import TriplePattern, plan_bgp
+from repro.core.planner import TriplePattern
 from repro.core.relation import UNBOUND, Relation
-from repro.sparql import algebra
+from repro.sparql import algebra, optimizer
 from repro.sparql.parser import Query, parse
 from repro.sparql.store import TripleStore, _next_pow2
 
@@ -66,6 +70,7 @@ class ExecStats:
     n_count_passes: int = 0
     n_retries: int = 0
     peak_capacity: int = 0
+    peak_join_bucket: int = 0  # largest intermediate join bucket this run
     # compiled-pipeline accounting
     cache_hits: int = 0
     cache_misses: int = 0
@@ -77,6 +82,9 @@ class ExecStats:
         self.n_count_passes += other.n_count_passes
         self.n_retries += other.n_retries
         self.peak_capacity = max(self.peak_capacity, other.peak_capacity)
+        self.peak_join_bucket = max(
+            self.peak_join_bucket, other.peak_join_bucket
+        )
         self.cache_hits += other.cache_hits
         self.cache_misses += other.cache_misses
         self.n_compiles += other.n_compiles
@@ -113,6 +121,9 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def entries(self) -> list[PlanCacheEntry]:
+        return list(self._entries.values())
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -132,15 +143,19 @@ class PlanCache:
 class _Program:
     """A planned query: scan order, join structure, runtime constants.
 
-    This is the engine-internal bridge from the logical algebra to a
+    This is the engine-internal bridge from the optimizer's output to a
     PlanShape; a PreparedQuery owns one and reuses it across runs.
     """
 
     query: Query
-    patterns: list[TriplePattern]  # scan order: required chain, then groups
+    plan: optimizer.OptimizedProgram  # optimizer output incl. trace/ests
+    patterns: list[TriplePattern]  # scan order: required, groups, branches
     cross_flags: tuple[bool, ...]  # required chain
     opt_groups: tuple[plan_ir.GroupSpec, ...]
-    conds: tuple[plan_ir.FilterCond, ...]  # original var names
+    union_groups: tuple[plan_ir.GroupSpec, ...]
+    has_required: bool
+    filters: tuple[plan_ir.FilterSpec, ...]  # staged, original var names
+    n_consts: tuple[int, int]  # (int, float) filter consts (sans slice)
     consts_i: np.ndarray  # int32: filter term ids (+ offset, limit)
     consts_f: np.ndarray  # float32: numeric filter constants
     projection: tuple[str, ...]
@@ -219,6 +234,8 @@ class QueryEngine:
     max_capacity: int = 1 << 24
     compiled: bool = True  # one-dispatch compiled pipeline vs eager loop
     plan_cache_entries: int = 256
+    optimize: bool = True  # cost-based optimizer (False: legacy greedy)
+    warmup_path: str | None = None  # saved bucket signatures (save_cache)
 
     def __post_init__(self):
         self._jit_join = jax.jit(
@@ -230,6 +247,38 @@ class QueryEngine:
         self._jit_count = jax.jit(mj.mr_join_count)
         self._jit_cross = jax.jit(mj.cross_join, static_argnames=("capacity",))
         self.plan_cache = PlanCache(self.plan_cache_entries)
+        # learned bucket signatures from a previous process: a shape found
+        # here compiles directly at the saved capacities, skipping the
+        # eager calibration run entirely
+        self._warm_caps: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
+        if self.warmup_path is not None:
+            p = pathlib.Path(self.warmup_path)
+            if p.exists():
+                data = json.loads(p.read_text())
+                for e in data["entries"]:
+                    shape = plan_ir.shape_from_jsonable(e["shape"])
+                    self._warm_caps[shape] = tuple(
+                        int(c) for c in e["join_caps"]
+                    )
+
+    def save_cache(self, path: str) -> int:
+        """Serialize the plan cache's learned bucket signatures to JSON.
+
+        A `QueryEngine(warmup_path=...)` in a restarted process compiles
+        known shapes straight at these capacities — no calibration run.
+        Returns the number of signatures written.
+        """
+        entries = [
+            {
+                "shape": plan_ir.shape_to_jsonable(e.shape),
+                "join_caps": list(e.join_caps),
+            }
+            for e in self.plan_cache.entries()
+        ]
+        pathlib.Path(path).write_text(
+            json.dumps({"version": 1, "entries": entries})
+        )
+        return len(entries)
 
     # -- public API --------------------------------------------------------
     def prepare(self, text: str) -> PreparedQuery:
@@ -254,66 +303,73 @@ class QueryEngine:
         return self.plan_cache.stats()
 
     # -- planning ----------------------------------------------------------
+    def _lower_expr(
+        self,
+        expr: algebra.FilterExpr,
+        id_consts: list[int],
+        f_consts: list[float],
+    ) -> plan_ir.FilterExpr:
+        """Algebra filter expression -> plan expression, allocating the
+        runtime-constant slots its literal leaves reference."""
+        if isinstance(expr, algebra.Compare):
+            if isinstance(expr.rhs, algebra.Var):
+                return ("cmp", expr.lhs, expr.op, "var", expr.rhs.name)
+            if isinstance(expr.rhs, algebra.NumLit):
+                idx = len(f_consts)
+                f_consts.append(expr.rhs.value)
+                return ("cmp", expr.lhs, expr.op, "num", idx)
+            # TermLit: identity comparison; unknown terms can never match
+            # a bound variable, -1 encodes that correctly
+            tid = self.store.dictionary.lookup(expr.rhs.lexical)
+            idx = len(id_consts)
+            id_consts.append(-1 if tid is None else tid)
+            return ("cmp", expr.lhs, expr.op, "id", idx)
+        tag = "and" if isinstance(expr, algebra.And) else "or"
+        return (
+            tag,
+            tuple(
+                self._lower_expr(c, id_consts, f_consts)
+                for c in expr.children
+            ),
+        )
+
     def _build_program(self, q: Query) -> _Program:
-        est = self.store.estimate_cardinality
-        steps = plan_bgp(q.patterns, est)
-        patterns = [q.patterns[st.pattern_index] for st in steps]
-        cross_flags = tuple(st.is_cross for st in steps[1:])
-        required_bound = {v for tp in patterns for v in tp.variables()}
-        opt_bound: set[str] = set()  # vars that may end up UNBOUND
-        opt_groups: list[plan_ir.GroupSpec] = []
-        for group in q.optionals:
-            gsteps = plan_bgp(list(group), est)
-            gpats = [group[st.pattern_index] for st in gsteps]
-            gvars = {v for tp in gpats for v in tp.variables()}
-            # SPARQL's LeftJoin treats an unbound variable as compatible
-            # with anything; the device join treats UNBOUND as an ordinary
-            # (never-matching) key. Sound only when groups join exclusively
-            # through always-bound (required) variables — reject the rest.
-            overlap = gvars & opt_bound
-            if overlap:
-                raise ValueError(
-                    "unsupported: OPTIONAL group reuses variable(s) bound "
-                    f"by an earlier OPTIONAL group: {sorted(overlap)} "
-                    "(unbound-compatible chained-OPTIONAL semantics are "
-                    "not implemented)"
-                )
-            if not (gvars & required_bound):
-                raise ValueError(
-                    "OPTIONAL group shares no variable with the required "
-                    f"patterns: {sorted(gvars)}"
-                )
-            patterns += gpats
-            opt_groups.append(
-                plan_ir.GroupSpec(
-                    len(gpats), tuple(st.is_cross for st in gsteps[1:])
-                )
-            )
-            opt_bound |= gvars - required_bound
-        conds: list[plan_ir.FilterCond] = []
+        plan = optimizer.optimize(q, self.store, enabled=self.optimize)
+        patterns = list(plan.all_patterns())
+        opt_groups = tuple(
+            plan_ir.GroupSpec(len(g), plan.opt_cross_flags[i])
+            for i, g in enumerate(plan.opt_groups)
+        )
+        union_groups = tuple(
+            plan_ir.GroupSpec(len(b), plan.branch_cross_flags[i])
+            for i, b in enumerate(plan.branches)
+        )
         id_consts: list[int] = []
         f_consts: list[float] = []
-        for c in q.filters:
-            if isinstance(c.rhs, algebra.Var):
-                conds.append((c.lhs, c.op, "var", c.rhs.name))
-            elif isinstance(c.rhs, algebra.NumLit):
-                conds.append((c.lhs, c.op, "num", len(f_consts)))
-                f_consts.append(c.rhs.value)
-            else:  # TermLit: identity comparison; unknown terms can never
-                # match a bound variable, -1 encodes that correctly
-                tid = self.store.dictionary.lookup(c.rhs.lexical)
-                conds.append((c.lhs, c.op, "id", len(id_consts)))
-                id_consts.append(-1 if tid is None else tid)
+        # a conjunct the optimizer distributed into several UNION branches
+        # is lowered once and shares its constant slots across the copies
+        lowered: dict[int, plan_ir.FilterExpr] = {}
+        specs: list[plan_ir.FilterSpec] = []
+        for stage, expr in plan.filters:
+            key = id(expr)
+            if key not in lowered:
+                lowered[key] = self._lower_expr(expr, id_consts, f_consts)
+            specs.append((stage, lowered[key]))
+        n_consts = (len(id_consts), len(f_consts))
         has_slice = q.has_slice()
         if has_slice:
             limit = q.limit if q.limit is not None else _NO_LIMIT
             id_consts += [min(q.offset, _NO_LIMIT), min(limit, _NO_LIMIT)]
         return _Program(
             q,
+            plan,
             patterns,
-            cross_flags,
-            tuple(opt_groups),
-            tuple(conds),
+            plan.cross_flags,
+            opt_groups,
+            union_groups,
+            plan.has_required,
+            tuple(specs),
+            n_consts,
             np.asarray(id_consts, np.int32),
             np.asarray(f_consts, np.float32),
             tuple(q.projection()),
@@ -333,9 +389,9 @@ class QueryEngine:
         def rn(v: str) -> str:
             return r.get(v, v)
 
-        conds = tuple(
-            (rn(lhs), op, kind, rn(ref) if kind == "var" else ref)
-            for lhs, op, kind, ref in prog.conds
+        specs = tuple(
+            (stage, plan_ir.rename_expr(expr, r))
+            for stage, expr in prog.filters
         )
         return plan_ir.make_shape(
             tuple(tuple(rn(v) for v in s) for s in schemas),
@@ -344,8 +400,12 @@ class QueryEngine:
             tuple(rn(v) for v in prog.projection),
             prog.distinct,
             opt_groups=prog.opt_groups,
-            filters=conds,
+            union_groups=prog.union_groups,
+            has_required=prog.has_required,
+            filters=specs,
+            n_consts=prog.n_consts,
             has_slice=prog.has_slice,
+            prune=prog.plan.prune,
         )
 
     # -- execution ---------------------------------------------------------
@@ -383,21 +443,54 @@ class QueryEngine:
         """Operator-at-a-time evaluation with exact (count-pass) bucket
         sizing. Returns the result and each join's exact total in the same
         order the compiled program reports them — the totals are what the
-        compiled path calibrates its buckets on."""
+        compiled path calibrates its buckets on, so filter stages must be
+        applied at exactly the positions build_plan interleaves them."""
         totals: list[int] = []
-        scan_iter = iter(scans)
+        consts_i = jnp.asarray(prog.consts_i)
+        consts_f = jnp.asarray(prog.consts_f)
+        num_vals = self.store.numeric_values_device()
+        by_stage: dict[tuple, list[plan_ir.FilterExpr]] = {}
+        for stage, expr in shape.filters:
+            by_stage.setdefault(stage, []).append(expr)
 
-        def chain(n_scans: int, cross_flags: tuple[bool, ...]) -> Relation:
-            acc = next(scan_iter)
-            for is_cross in cross_flags:
+        def apply_stage(rel: Relation, stage: tuple) -> Relation:
+            exprs = by_stage.get(stage)
+            if not exprs:
+                return rel
+            keep = mj.filter_mask(
+                rel, tuple(exprs), consts_i, consts_f, num_vals
+            )
+            return Relation(rel.schema, rel.cols, keep)
+
+        scan_idx = 0
+
+        def next_scan() -> Relation:
+            nonlocal scan_idx
+            rel = apply_stage(scans[scan_idx], ("scan", scan_idx))
+            scan_idx += 1
+            return rel
+
+        def chain(
+            n_scans: int,
+            cross_flags: tuple[bool, ...],
+            req_stages: bool = False,
+        ) -> Relation:
+            acc = next_scan()
+            for j, is_cross in enumerate(cross_flags):
                 acc, total = self._join_once(
-                    acc, next(scan_iter), is_cross, stats
+                    acc, next_scan(), is_cross, stats
                 )
                 totals.append(total)
+                if req_stages:
+                    acc = apply_stage(acc, ("req", j))
             return acc
 
-        acc = chain(shape.n_required, shape.cross_flags)
-        for g in shape.opt_groups:
+        acc: Relation | None = None
+        if shape.has_required:
+            acc = chain(
+                shape.n_required, shape.cross_flags, req_stages=True
+            )
+        for gi, g in enumerate(shape.opt_groups):
             grp = chain(g.n_scans, g.cross_flags)
             stats.n_joins += 1
             stats.n_dispatches += 1
@@ -412,17 +505,27 @@ class QueryEngine:
             stats.peak_capacity = max(
                 stats.peak_capacity, cap + acc.capacity
             )
+            stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
             totals.append(total)
-            acc = out
-        if shape.filters:
-            keep = mj.filter_mask(
-                acc,
-                shape.filters,
-                jnp.asarray(prog.consts_i),
-                jnp.asarray(prog.consts_f),
-                self.store.numeric_values_device(),
-            )
-            acc = Relation(acc.schema, acc.cols, keep)
+            acc = apply_stage(out, ("opt", gi))
+        if shape.union_groups:
+            children: list[Relation] = []
+            for bi, g in enumerate(shape.union_groups):
+                branch = chain(g.n_scans, g.cross_flags)
+                if acc is not None:
+                    shared = [v for v in acc.schema if v in branch.schema]
+                    branch, total = self._join_once(
+                        acc, branch, not shared, stats
+                    )
+                    totals.append(total)
+                children.append(apply_stage(branch, ("bjoin", bi)))
+            schema: list[str] = []
+            for c in children:
+                for v in c.schema:
+                    if v not in schema:
+                        schema.append(v)
+            acc = mj.union_all(children, tuple(schema))
+        acc = apply_stage(acc, ("top",))
         acc = acc.project(list(shape.projection))
         if shape.distinct:
             acc = mj.distinct(acc)  # device-side dedup before decode
@@ -443,6 +546,7 @@ class QueryEngine:
             out, total, overflow = self._jit_cross(left, right, capacity=cap)
             assert not bool(overflow)
             stats.peak_capacity = max(stats.peak_capacity, cap)
+            stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
             return mj.compact(out), int(total)
         if self.exact_count_pass:
             stats.n_dispatches += 1
@@ -455,6 +559,7 @@ class QueryEngine:
             )
             assert not bool(overflow)
             stats.peak_capacity = max(stats.peak_capacity, cap)
+            stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
             return out, total
         cap = max(left.capacity, right.capacity)
         while True:
@@ -463,6 +568,7 @@ class QueryEngine:
                 left, right, capacity=cap, use_kernel=self.use_kernel
             )
             stats.peak_capacity = max(stats.peak_capacity, cap)
+            stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
             if not bool(overflow):
                 return out, int(total)
             stats.n_retries += 1
@@ -515,9 +621,25 @@ class QueryEngine:
     ) -> Relation:
         """Cache miss: the eager evaluator's count passes calibrate the join
         buckets; compile at those shapes; serve this query from the eager
-        result (the compiled program takes over from the next query on)."""
+        result (the compiled program takes over from the next query on).
+        A shape with a saved warmup signature skips the calibration run and
+        compiles straight at the persisted capacities."""
         stats.cache_misses += 1
         self.plan_cache.misses += 1
+        warm_caps = self._warm_caps.get(shape)
+        if warm_caps is not None and len(warm_caps) == shape.n_joins():
+            entry = self._compile_entry(
+                shape, warm_caps, canon_scans, prog, stats
+            )
+            return self._dispatch_entry(
+                shape,
+                entry,
+                canon_scans,
+                jnp.asarray(prog.consts_i),
+                jnp.asarray(prog.consts_f),
+                self.store.numeric_values_device(),
+                stats,
+            )
         eager_stats = ExecStats()
         rel, totals = self._eval_shape_eager(
             shape, canon_scans, prog, eager_stats
@@ -527,6 +649,9 @@ class QueryEngine:
         stats.n_retries += eager_stats.n_retries
         stats.peak_capacity = max(
             stats.peak_capacity, eager_stats.peak_capacity
+        )
+        stats.peak_join_bucket = max(
+            stats.peak_join_bucket, eager_stats.peak_join_bucket
         )
         join_caps = tuple(plan_ir.bucket_capacity(t) for t in totals)
         self._compile_entry(shape, join_caps, canon_scans, prog, stats)
@@ -544,6 +669,20 @@ class QueryEngine:
     ) -> Relation:
         stats.cache_hits += 1
         self.plan_cache.hits += 1
+        return self._dispatch_entry(
+            shape, entry, canon_scans, consts_i, consts_f, num_vals, stats
+        )
+
+    def _dispatch_entry(
+        self,
+        shape: plan_ir.PlanShape,
+        entry: PlanCacheEntry,
+        canon_scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+        stats: ExecStats,
+    ) -> Relation:
         while True:
             stats.n_dispatches += 1
             rel, totals, flags = entry.compiled(
@@ -551,6 +690,10 @@ class QueryEngine:
             )
             stats.peak_capacity = max(
                 stats.peak_capacity, entry.compiled.plan.max_capacity()
+            )
+            caps = entry.compiled.plan.join_caps
+            stats.peak_join_bucket = max(
+                stats.peak_join_bucket, max(caps) if caps else 0
             )
             flags_np = np.asarray(flags)  # the single host sync
             if not flags_np.any():
@@ -581,8 +724,8 @@ class QueryEngine:
         plan = plan_ir.build_plan(shape, join_caps)
         # the consts are signature templates here — only shapes/dtypes
         # matter to AOT lowering, and they are determined by the PlanShape
-        n_i = shape.n_id_consts() + (2 if shape.has_slice else 0)
-        n_f = sum(1 for c in shape.filters if c[2] == "num")
+        n_i = shape.n_consts[0] + (2 if shape.has_slice else 0)
+        n_f = shape.n_consts[1]
         consts_i = jnp.asarray(
             prog.consts_i if prog is not None else np.zeros(n_i, np.int32)
         )
@@ -605,40 +748,79 @@ class QueryEngine:
 
     # -- explain -----------------------------------------------------------
     def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:
-        """Human-readable plan report: the logical algebra, the physical
-        scan/join structure with estimated rows and pow-2 buckets, and the
-        plan-cache state for this shape — all host-side (no device work)."""
+        """Human-readable plan report: the logical algebra, the optimizer's
+        pass-by-pass rewrite trace, the physical scan/join structure with
+        estimated rows and pow-2 buckets, and the plan-cache state for
+        this shape — all host-side (no device work)."""
         est = self.store.estimate_cardinality
         lines = ["PreparedQuery", "logical algebra:"]
         lines.append(algebra.format_algebra(pq.query.algebra(), 1))
-        lines.append("physical plan (scan order -> join chain):")
+        lines.append(
+            "optimizer trace (parse -> algebra -> optimize -> plan):"
+        )
+        for t in prog.plan.trace:
+            lines.append(f"  {t}")
+        lines.append("physical plan (scan order -> operator tree):")
         schemas: list[tuple[str, ...]] = []
         caps: list[int] = []
+        n_req = len(prog.cross_flags) + 1 if prog.has_required else 0
+        n_opt = sum(g.n_scans for g in prog.opt_groups)
         for i, tp in enumerate(prog.patterns):
             schema, n_rows = self.store.pattern_scan_info(tp)
             schemas.append(schema)
             caps.append(plan_ir.bucket_capacity(n_rows))
-            kind = (
-                "required" if i < len(prog.cross_flags) + 1 else "optional"
-            )
+            if i < n_req:
+                kind = "required"
+            elif i < n_req + n_opt:
+                kind = "optional"
+            else:
+                kind = "union"
             lines.append(
                 f"  scan[{i}] ({tp.s} {tp.p} {tp.o}) "
                 f"est_rows={est(tp)} bucket={caps[-1]} [{kind}]"
             )
         rename = plan_ir.canonical_renaming(tuple(schemas))
         shape = self._shape_for(prog, tuple(schemas), tuple(caps), rename)
-        for i, is_cross in enumerate(shape.cross_flags):
-            lines.append(
-                f"  join[{i}] {'cross_join' if is_cross else 'mr_join'}"
+        ests = prog.plan.join_ests
+        ji = 0
+
+        def est_str() -> str:
+            nonlocal ji
+            out = (
+                f" est_rows={int(ests[ji])}" if ji < len(ests) else ""
             )
+            ji += 1
+            return out
+
+        for i, is_cross in enumerate(shape.cross_flags):
+            kind = "cross_join" if is_cross else "mr_join"
+            lines.append(f"  join[{i}] {kind}{est_str()}")
         for gi, g in enumerate(shape.opt_groups):
+            for _ in g.cross_flags:
+                est_str()  # group-internal joins ride in the group line
             lines.append(
                 f"  left_join[{gi}] OPTIONAL group of {g.n_scans} "
-                f"pattern(s), unmatched rows padded UNBOUND"
+                f"pattern(s), unmatched rows padded UNBOUND,"
+                f" inner{est_str()}"
             )
-        if shape.filters:
-            conds = " && ".join(str(c) for c in pq.query.filters)
-            lines.append(f"  filter: {conds} (device-side mask)")
+        for bi, g in enumerate(shape.union_groups):
+            for _ in g.cross_flags:
+                est_str()
+            tail = est_str() if prog.has_required else ""
+            lines.append(
+                f"  union_branch[{bi}] {g.n_scans} pattern(s)"
+                + (f", joined with required chain,{tail}" if tail else "")
+            )
+        if shape.union_groups:
+            lines.append(
+                f"  union: concat {len(shape.union_groups)} branch(es), "
+                "unbound columns padded UNBOUND"
+            )
+        for stage, expr in prog.plan.filters:
+            lines.append(
+                f"  filter: {expr} @ {optimizer._fmt_stage(stage)} "
+                "(device-side mask)"
+            )
         if shape.has_slice:
             q = pq.query
             limit = "-" if q.limit is None else q.limit

@@ -29,11 +29,48 @@ def _u(name: str) -> str:  # ontology IRI
     return f"<{UB}{name}>"
 
 
-def generate(scale: int = 1, seed: int = 0):
-    """~scale × (15 departments × ~70 people) university graph."""
+def join_shape_triples() -> list[tuple[str, str, str]]:
+    """The J1/J2 bad-join-order subgraphs (deterministic).
+
+    Both are chains whose *smallest* pattern is the wrong place to start:
+    the greedy planner (leaf cardinality only) begins at the 10-row type
+    scan, whose only connection is a 1:50/1:60 fan-out edge — a 500/600 row
+    intermediate — while the statistics-driven order starts from the
+    selective tail and keeps every intermediate at ~a dozen rows. The gap
+    between the two orders' maximum join buckets is what
+    benchmarks/bench_query.py and tests/test_optimizer.py measure.
+    """
+    out: list[tuple[str, str, str]] = []
+    t = out.append
+    # J1: jtype (10) -- j1 fan-out (500) -- j2 selective tail (12)
+    for i in range(10):
+        t((_e(f"J/x{i}"), _e("J/jtype"), _e("J/JT")))
+        for k in range(50):
+            t((_e(f"J/x{i}"), _e("J/j1"), _e(f"J/y{i * 50 + k}")))
+    for n, yi in enumerate([i * 50 for i in range(10)] + [1, 2]):
+        t((_e(f"J/y{yi}"), _e("J/j2"), _e(f"J/z{n}")))
+    # J2: ktype (10) -- k1 fan-out (600) -- k2 (20) -- k3 tail (15)
+    for i in range(10):
+        t((_e(f"J/a{i}"), _e("J/ktype"), _e("J/KT")))
+        for k in range(60):
+            t((_e(f"J/a{i}"), _e("J/k1"), _e(f"J/b{i * 60 + k}")))
+    for n, bi in enumerate([i * 60 for i in range(10)] + list(range(1, 11))):
+        t((_e(f"J/b{bi}"), _e("J/k2"), _e(f"J/c{n}")))
+    for n in range(15):
+        t((_e(f"J/c{n}"), _e("J/k3"), _e(f"J/d{n}")))
+    return out
+
+
+def generate(scale: int = 1, seed: int = 0, join_shapes: bool = False):
+    """~scale × (15 departments × ~70 people) university graph.
+
+    `join_shapes=True` additionally embeds the J1/J2 bad-join-order
+    subgraphs (`join_shape_triples`) used to benchmark the optimizer."""
     rng = np.random.default_rng(seed)
     triples: list[tuple[str, str, str]] = []
     t = triples.append
+    if join_shapes:
+        triples.extend(join_shape_triples())
     for ui in range(scale):
         uni = _e(f"University{ui}")
         t((uni, RDF_TYPE, _u("University")))
@@ -108,5 +145,22 @@ QUERIES: dict[str, str] = {
         ?s ub:takesCourse ?c .
         ?s rdf:type ub:GraduateStudent .
         ?t rdf:type ub:FullProfessor .
+    }""",
+}
+
+# Bad-join-order shapes over the join_shape_triples() subgraphs: the greedy
+# order explodes the first intermediate (500/600 rows), the statistics
+# order stays ~12/15 rows. Only valid on generate(..., join_shapes=True).
+J_QUERIES: dict[str, str] = {
+    "J1": """SELECT ?x ?y ?z WHERE {
+        ?x <http://example.org/J/jtype> <http://example.org/J/JT> .
+        ?x <http://example.org/J/j1> ?y .
+        ?y <http://example.org/J/j2> ?z .
+    }""",
+    "J2": """SELECT ?a ?b ?c ?d WHERE {
+        ?a <http://example.org/J/ktype> <http://example.org/J/KT> .
+        ?a <http://example.org/J/k1> ?b .
+        ?b <http://example.org/J/k2> ?c .
+        ?c <http://example.org/J/k3> ?d .
     }""",
 }

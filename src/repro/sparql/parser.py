@@ -2,15 +2,16 @@
 
 Covers the query class the paper (basic graph patterns with variables,
 IRIs, prefixed names, literals, `;` predicate-object lists) and its
-successors evaluate: FILTER comparisons (numeric and string literals,
-variable-variable), OPTIONAL groups, `#` line comments, integer/decimal
-literals, and LIMIT/OFFSET solution modifiers. Parsing is host-side — part
-of the CPU half of the coprocessing strategy.
+successors evaluate: FILTER expressions (comparisons over numeric and
+string literals or variables, combined with `&&`, `||` and parentheses),
+OPTIONAL groups, `{ .. } UNION { .. }` blocks, `#` line comments,
+integer/decimal literals, and LIMIT/OFFSET solution modifiers. Parsing is
+host-side — part of the CPU half of the coprocessing strategy.
 
 The result is a `Query`: the WHERE group decomposed into a required BGP,
-OPTIONAL groups and filter conditions, plus the solution modifiers.
-`Query.algebra()` assembles the logical-algebra tree (sparql/algebra.py)
-that the engine plans and compiles.
+OPTIONAL groups, UNION branches and filter conjuncts, plus the solution
+modifiers. `Query.algebra()` assembles the logical-algebra tree
+(sparql/algebra.py) that the optimizer rewrites and the engine compiles.
 """
 from __future__ import annotations
 
@@ -29,9 +30,9 @@ _TOKEN = re.compile(
       | (?P<num>-?\d+(?:\.\d+)?)
       | (?P<pname>[A-Za-z_][\w\-]*:[A-Za-z_][\w\-]*)
       | (?P<pdecl>[A-Za-z_][\w\-]*:)
-      | (?P<op><=|>=|!=|&&|[=<>()])
-      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|FILTER|OPTIONAL|LIMIT|OFFSET
-              |\{|\}|\.|;|\*|a\b)
+      | (?P<op><=|>=|!=|&&|\|\||[=<>()])
+      | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|FILTER|OPTIONAL|UNION|LIMIT
+              |OFFSET|\{|\}|\.|;|\*|a\b)
     )""",
     re.VERBOSE | re.IGNORECASE,
 )
@@ -45,23 +46,27 @@ _RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
 class Query:
     select_vars: list[str]  # empty => SELECT *
     distinct: bool
-    patterns: list[TriplePattern]  # the required BGP
+    patterns: list[TriplePattern]  # the required BGP (may be empty if unions)
     optionals: tuple[tuple[TriplePattern, ...], ...] = ()
-    filters: tuple[algebra.Compare, ...] = ()
+    filters: tuple[algebra.FilterExpr, ...] = ()  # conjunct list
     limit: int | None = None
     offset: int = 0
+    unions: tuple[tuple[TriplePattern, ...], ...] = ()  # UNION branches
 
     def all_vars(self) -> list[str]:
         out: list[str] = []
-        for tp in self.patterns:
-            for v in tp.variables():
-                if v not in out:
-                    out.append(v)
-        for group in self.optionals:
+
+        def add(group) -> None:
             for tp in group:
                 for v in tp.variables():
                     if v not in out:
                         out.append(v)
+
+        add(self.patterns)
+        for branch in self.unions:
+            add(branch)
+        for group in self.optionals:
+            add(group)
         return out
 
     def projection(self) -> list[str]:
@@ -71,9 +76,17 @@ class Query:
         return self.limit is not None or self.offset > 0
 
     def algebra(self) -> algebra.AlgebraNode:
-        """Assemble the logical tree: BGP → LeftJoin* → Filter → Project
-        → Distinct → Slice (group filters apply after the group's joins)."""
-        node: algebra.AlgebraNode = algebra.BGP(tuple(self.patterns))
+        """Assemble the logical tree: BGP [⋈ Union] → LeftJoin* → Filter
+        → Project → Distinct → Slice."""
+        node: algebra.AlgebraNode | None = (
+            algebra.BGP(tuple(self.patterns)) if self.patterns else None
+        )
+        if self.unions:
+            u = algebra.UnionNode(
+                tuple(algebra.BGP(b) for b in self.unions)
+            )
+            node = algebra.Join(node, u) if node is not None else u
+        assert node is not None  # parser guarantees patterns or unions
         for group in self.optionals:
             node = algebra.LeftJoin(node, algebra.BGP(group))
         if self.filters:
@@ -195,36 +208,83 @@ def parse(text: str) -> Query:
             )
         return algebra.Compare(lhs.name, op, rhs)
 
+    # FILTER expression grammar (|| binds loosest, && tighter, parens):
+    #   expr    := and_exp ("||" and_exp)*
+    #   and_exp := primary ("&&" primary)*
+    #   primary := "(" expr ")" | comparison
+    def parse_filter_expr() -> algebra.FilterExpr:
+        terms = [parse_and_expr()]
+        while peek() == "||":
+            eat()
+            terms.append(parse_and_expr())
+        return algebra.Or(tuple(terms)) if len(terms) > 1 else terms[0]
+
+    def parse_and_expr() -> algebra.FilterExpr:
+        factors = [parse_primary()]
+        while peek() == "&&":
+            eat()
+            factors.append(parse_primary())
+        return algebra.And(tuple(factors)) if len(factors) > 1 else factors[0]
+
+    def parse_primary() -> algebra.FilterExpr:
+        if peek() == "(":
+            eat()
+            inner = parse_filter_expr()
+            eat(")")
+            return inner
+        return parse_compare()
+
+    def parse_group(dest: list[TriplePattern], what: str) -> None:
+        """A braced block of plain triples (OPTIONAL / UNION bodies)."""
+        eat("{")
+        while peek() != "}":
+            if peek().upper() in ("OPTIONAL", "FILTER", "UNION", "{"):
+                raise ParseError(
+                    f"nested OPTIONAL/FILTER/UNION inside {what} "
+                    "is not supported"
+                )
+            parse_triples_into(dest)
+            if peek() == ".":
+                eat()
+        eat("}")
+        if not dest:
+            raise ParseError(f"empty {what}")
+
     patterns: list[TriplePattern] = []
     optionals: list[tuple[TriplePattern, ...]] = []
-    filters: list[algebra.Compare] = []
+    unions: list[tuple[TriplePattern, ...]] = []
+    filters: list[algebra.FilterExpr] = []
     while peek() != "}":
         head = peek().upper()
         if head == "OPTIONAL":
             eat()
-            eat("{")
             block: list[TriplePattern] = []
-            while peek() != "}":
-                if peek().upper() in ("OPTIONAL", "FILTER"):
-                    raise ParseError(
-                        "nested OPTIONAL/FILTER inside an OPTIONAL group "
-                        "is not supported"
-                    )
-                parse_triples_into(block)
-                if peek() == ".":
-                    eat()
-            eat("}")
-            if not block:
-                raise ParseError("empty OPTIONAL group")
+            parse_group(block, "an OPTIONAL group")
             optionals.append(tuple(block))
         elif head == "FILTER":
             eat()
             eat("(")
-            filters.append(parse_compare())
-            while peek() == "&&":
-                eat()
-                filters.append(parse_compare())
+            expr = parse_filter_expr()
             eat(")")
+            # top-level conjunctions split into independently pushable
+            # conjuncts (keeps the historical flat `filters` shape)
+            filters.extend(algebra.flatten_conjuncts(expr))
+        elif head == "{":
+            # { branch } UNION { branch } [UNION { branch }]*
+            if unions:
+                raise ParseError(
+                    "only one UNION block per query is supported"
+                )
+            branch: list[TriplePattern] = []
+            parse_group(branch, "a UNION branch")
+            unions.append(tuple(branch))
+            if peek().upper() != "UNION":
+                raise ParseError("a braced group must be part of a UNION")
+            while peek().upper() == "UNION":
+                eat()
+                branch = []
+                parse_group(branch, "a UNION branch")
+                unions.append(tuple(branch))
         else:
             parse_triples_into(patterns)
         if peek() == ".":
@@ -249,8 +309,12 @@ def parse(text: str) -> Query:
     if peek():
         raise ParseError(f"trailing input after query: {peek()!r}")
 
-    if not patterns:
+    if not patterns and not unions:
         raise ParseError("empty basic graph pattern")
+    if unions and optionals:
+        raise ParseError(
+            "OPTIONAL together with UNION in one query is not supported"
+        )
     q = Query(
         select_vars,
         distinct,
@@ -259,6 +323,7 @@ def parse(text: str) -> Query:
         tuple(filters),
         limit,
         offset,
+        tuple(unions),
     )
     bound = set(q.all_vars())
     unknown = [v for v in select_vars if v not in bound]

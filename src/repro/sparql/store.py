@@ -49,6 +49,115 @@ _CHOICE = {
 }
 
 
+@dataclasses.dataclass(frozen=True)
+class PredicateStats:
+    """Per-predicate catalog row: triple count and distinct-term counts."""
+
+    count: int
+    n_subjects: int
+    n_objects: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStatistics:
+    """The statistics catalog the cost-based optimizer plans against.
+
+    Computed once at load time (host numpy over the encoded triples):
+    global triple/subject/object counts plus, per predicate id, the triple
+    count and the distinct subject/object counts. These drive two
+    estimators: `pattern_cardinality` (formula-based match-count estimate
+    for a triple pattern without scanning) and `distinct_values` (estimated
+    number of distinct bindings a variable takes among a pattern's matches
+    — the denominator of the System-R style join selectivity
+    |L ⋈ R| ≈ |L|·|R| / max(d_L(v), d_R(v)) the optimizer uses).
+    """
+
+    n_triples: int
+    n_subjects: int
+    n_objects: int
+    n_predicates: int
+    predicates: dict[int, PredicateStats]
+
+    @classmethod
+    def from_triples(cls, triples: np.ndarray) -> "StoreStatistics":
+        t = np.asarray(triples, np.int32).reshape(-1, 3)
+        n = len(t)
+        if n == 0:
+            return cls(0, 0, 0, 0, {})
+        preds: dict[int, PredicateStats] = {}
+        order = np.argsort(t[:, 1], kind="stable")
+        ts = t[order]
+        pids, starts = np.unique(ts[:, 1], return_index=True)
+        bounds = list(starts) + [n]
+        for k, pid in enumerate(pids):
+            seg = ts[bounds[k]:bounds[k + 1]]
+            preds[int(pid)] = PredicateStats(
+                count=len(seg),
+                n_subjects=int(np.unique(seg[:, 0]).size),
+                n_objects=int(np.unique(seg[:, 2]).size),
+            )
+        return cls(
+            n_triples=n,
+            n_subjects=int(np.unique(t[:, 0]).size),
+            n_objects=int(np.unique(t[:, 2]).size),
+            n_predicates=len(pids),
+            predicates=preds,
+        )
+
+    def _bound_ids(self, tp: TriplePattern, lookup) -> dict[str, int] | None:
+        """Term ids of the pattern's constants; None if any is unknown
+        (an unknown constant can never match — cardinality 0)."""
+        out: dict[str, int] = {}
+        for pos, term in zip("spo", (tp.s, tp.p, tp.o)):
+            if not term.startswith("?"):
+                tid = lookup(term)
+                if tid is None:
+                    return None
+                out[pos] = tid
+        return out
+
+    def pattern_cardinality(self, tp: TriplePattern, lookup) -> float:
+        """Estimated match count for a triple pattern, by uniformity
+        assumptions over the catalog (no scan)."""
+        bound = self._bound_ids(tp, lookup)
+        if bound is None:
+            return 0.0
+        if "p" in bound:
+            ps = self.predicates.get(bound["p"])
+            if ps is None:
+                return 0.0
+            card = float(ps.count)
+            if "s" in bound:
+                card /= max(1, ps.n_subjects)
+            if "o" in bound:
+                card /= max(1, ps.n_objects)
+            return card
+        card = float(self.n_triples)
+        if "s" in bound:
+            card /= max(1, self.n_subjects)
+        if "o" in bound:
+            card /= max(1, self.n_objects)
+        return card
+
+    def distinct_values(self, tp: TriplePattern, var: str, lookup) -> float:
+        """Estimated distinct bindings of `var` among `tp`'s matches."""
+        ps = None
+        if not tp.p.startswith("?"):
+            pid = lookup(tp.p)
+            if pid is None:
+                return 0.0
+            ps = self.predicates.get(pid)
+            if ps is None:
+                return 0.0
+        if var == tp.s:
+            return float(ps.n_subjects if ps else self.n_subjects)
+        if var == tp.p:
+            return float(self.n_predicates)
+        if var == tp.o:
+            return float(ps.n_objects if ps else self.n_objects)
+        return 1.0
+
+
 @dataclasses.dataclass
 class TripleStore:
     triples: np.ndarray  # (n, 3) int32 dictionary-encoded
@@ -68,6 +177,15 @@ class TripleStore:
         self._scan_hits = 0
         self._scan_misses = 0
         self._num_vals = None  # device numeric-value table (FILTER support)
+        self._statistics: StoreStatistics | None = None
+
+    @property
+    def statistics(self) -> StoreStatistics:
+        """The statistics catalog the cost-based optimizer plans against,
+        computed once on first use (the triple set is immutable)."""
+        if self._statistics is None:
+            self._statistics = StoreStatistics.from_triples(self.triples)
+        return self._statistics
 
     def __len__(self) -> int:
         return len(self.triples)
