@@ -15,11 +15,19 @@ statistics-driven join order against the legacy greedy order and FAILS
 join buckets — so planner regressions that explode intermediate sizes
 fail the CI build (the bench-smoke job runs `--quick` on CPU).
 
+B1/B2 measure batched same-shape execution: 16 / 64 warm queries of one
+plan shape (differing only in a FILTER constant), run sequentially (N
+dispatches) vs through engine.run_batch (ceil(N / width) stacked
+dispatches). The dispatch count is asserted — it is the structural win and
+is deterministic — and the timing ratio is reported; the batched records
+are also written to the BENCH_4.json artifact.
+
     PYTHONPATH=src python -m benchmarks.bench_query [scale] [repeats]
     PYTHONPATH=src python -m benchmarks.bench_query --quick
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -59,6 +67,57 @@ def _time(fn, repeat: int) -> float:
     for _ in range(repeat):
         fn()
     return (time.perf_counter() - t0) / repeat
+
+
+# batched same-shape serving shapes: N queries of ONE plan shape, differing
+# only in a FILTER constant (a runtime input — all share the compiled plan)
+B_SHAPES = {"B1": 16, "B2": 64}
+
+
+def _b_queries(n: int) -> list[str]:
+    return [
+        lubm.PREFIX + f"""SELECT ?p ?n WHERE {{
+            ?p a ub:FullProfessor .
+            ?p ub:name ?n .
+            FILTER (?n != "prof_0_{k % 8}_{k // 8}")
+        }}"""
+        for k in range(n)
+    ]
+
+
+def bench_batched(store, repeats: int) -> list[dict]:
+    """Sequential vs stacked execution of N warm same-shape queries.
+
+    Asserts the dispatch count (ceil(N / width) — the deterministic
+    structural win) and reports the wall-clock throughput ratio.
+    """
+    out = []
+    for name, n in B_SHAPES.items():
+        eng = QueryEngine(store)
+        prepared = [eng.prepare(t) for t in _b_queries(n)]
+        seq = [pq.run() for pq in prepared]  # warm plan cache (1 calib)
+        stacked = eng.run_batch(prepared)  # warm stacked width
+        assert [r.rows for r in stacked] == [r.rows for r in seq], name
+        t_seq = _time(lambda: [pq.run() for pq in prepared], repeats)
+        t_bat = _time(lambda: eng.run_batch(prepared), repeats)
+        group = eng.last_batch[0]
+        width = max(group.widths)
+        want = -(-n // width)  # ceil
+        assert group.n_dispatches == want, (
+            f"{name}: {n} warm same-shape queries took "
+            f"{group.n_dispatches} stacked dispatches, want {want}"
+        )
+        out.append({
+            "query": name,
+            "n_queries": n,
+            "rows": len(seq[0]),
+            "batch_width": width,
+            "stacked_dispatches": group.n_dispatches,
+            "sequential_ms": t_seq * 1e3,
+            "stacked_ms": t_bat * 1e3,
+            "throughput_x": t_seq / t_bat,
+        })
+    return out
 
 
 def bench_optimizer(store) -> list[dict]:
@@ -115,6 +174,7 @@ def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
             "speedup": t_eager / t_compiled,
         })
     out.extend(bench_optimizer(store))
+    out.extend(bench_batched(store, repeats))
     out.append({"plan_cache": compiled.cache_stats(),
                 "scan_cache": store.scan_cache_stats()})
     return out
@@ -130,8 +190,17 @@ def main() -> None:
           f"{repeats} repeats: eager vs compiled one-dispatch pipeline")
     print("query,rows,eager_ms,compiled_ms,speedup")
     rows = bench(scale=scale, repeats=repeats)
+    batched_records = []
     for r in rows:
-        if "speedup" in r:
+        if "throughput_x" in r:
+            batched_records.append(r)
+            print(f"# {r['query']}: {r['n_queries']} same-shape warm "
+                  f"queries, width={r['batch_width']}, "
+                  f"stacked_dispatches={r['stacked_dispatches']}, "
+                  f"sequential_ms={r['sequential_ms']:.2f} "
+                  f"stacked_ms={r['stacked_ms']:.2f} "
+                  f"throughput={r['throughput_x']:.2f}x")
+        elif "speedup" in r:
             print(f"{r['query']},{r['rows']},{r['eager_ms']:.2f},"
                   f"{r['compiled_ms']:.2f},{r['speedup']:.2f}")
         elif "query" in r:
@@ -142,6 +211,11 @@ def main() -> None:
                   f"stats_ms={r['stats_ms']:.2f}")
         else:
             print(f"# {r}")
+    # batched-throughput artifact (CI uploads it; see .github/workflows)
+    with open("BENCH_4.json", "w") as f:
+        json.dump({"scale": scale, "repeats": repeats,
+                   "batched": batched_records}, f, indent=2)
+    print("# wrote BENCH_4.json")
 
 
 if __name__ == "__main__":

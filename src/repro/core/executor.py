@@ -20,9 +20,14 @@ the store's per-term numeric table — all plain inputs, none baked into the
 executable.
 
 AOT compilation (rather than relying on jit's implicit cache) keeps the
-compile count observable: `compile_plan` is the only place XLA compilation
-happens, so ExecStats.n_compiles is exact and tests can assert a warm
-cache compiles nothing.
+compile count observable: `compile_plan` / `compile_plan_batched` are the
+only places XLA compilation happens, so ExecStats.n_compiles is exact and
+tests can assert a warm cache compiles nothing.
+
+`lower_batched` / `compile_plan_batched` stack W same-shape queries into
+ONE device dispatch: the plan program is vmapped over the scan relations
+and runtime constants (leading batch axis), with a lane-validity mask so
+padded lanes contribute no rows and no overflow flags.
 """
 from __future__ import annotations
 
@@ -185,6 +190,82 @@ def compile_plan(
     fn = jax.jit(lower(plan, use_kernel=use_kernel))
     executable = fn.lower(scans, consts_i, consts_f, num_vals).compile()
     return CompiledPlan(plan, executable, len(plan.join_caps))
+
+
+# -- batched (stacked same-shape) execution -----------------------------------
+
+
+def lower_batched(
+    plan: PhysicalPlan, use_kernel: bool = False
+) -> Callable[..., ChainResult]:
+    """Stacked variant of `lower`: one dispatch executes a whole lane batch
+    of same-shape queries.
+
+    Every per-query runtime input — the scan relations, `consts_i`,
+    `consts_f` — gains a leading batch axis; the store-wide `num_vals`
+    table stays shared. A `(width,)` bool `lane_active` mask marks which
+    lanes carry real queries: an inactive (padding) lane has its scan
+    validity zeroed before anything else runs, so no operator downstream —
+    join expansion, OPTIONAL unmatched-left padding, UNION concatenation —
+    can emit a valid row for it, and its overflow flags are suppressed so
+    padding can never trigger a bucket regrow.
+    """
+    base = lower(plan, use_kernel=use_kernel)
+
+    def run_lane(
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+        active: jax.Array,
+    ) -> ChainResult:
+        masked = tuple(
+            Relation(s.schema, s.cols, s.valid & active) for s in scans
+        )
+        rel, totals, flags = base(masked, consts_i, consts_f, num_vals)
+        return ChainResult(rel, totals, flags & active)
+
+    return jax.vmap(run_lane, in_axes=(0, 0, 0, None, 0))
+
+
+@dataclasses.dataclass
+class CompiledBatch:
+    """A width-W stacked executable for one (shape, join-caps) point.
+
+    Same specialisation as CompiledPlan plus the batch width: any group of
+    <= W same-shape queries dispatches through it (trailing lanes padded,
+    masked inactive)."""
+
+    plan: PhysicalPlan
+    width: int
+    executable: Any  # jax.stages.Compiled
+
+    def __call__(
+        self,
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+        lane_active: jax.Array,
+    ) -> ChainResult:
+        return self.executable(scans, consts_i, consts_f, num_vals, lane_active)
+
+
+def compile_plan_batched(
+    plan: PhysicalPlan,
+    scans: tuple[Relation, ...],
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
+    lane_active: jax.Array,
+    use_kernel: bool = False,
+) -> CompiledBatch:
+    """AOT-compile the stacked variant at the inputs' batch width."""
+    fn = jax.jit(lower_batched(plan, use_kernel=use_kernel))
+    executable = fn.lower(
+        scans, consts_i, consts_f, num_vals, lane_active
+    ).compile()
+    return CompiledBatch(plan, int(lane_active.shape[0]), executable)
 
 
 def execute_plan(

@@ -104,6 +104,25 @@ def bucket_capacity(n: int, floor: int = MIN_BUCKET) -> int:
     return max(floor, next_pow2(int(n)))
 
 
+def floor_pow2(n: int) -> int:
+    return 1 << (max(1, int(n)).bit_length() - 1)
+
+
+def bucket_width(n: int, max_width: int) -> int:
+    """Pow-2 batch-width bucket for a stacked same-shape dispatch.
+
+    Groups of nearby sizes land on the same width, so a warm (shape, caps,
+    width) executable is reused across micro-batches instead of
+    recompiling per exact group size; the lanes past the real group are
+    padding, masked out by the executor's per-lane validity mask
+    (executor.lower_batched) so they never contribute rows or overflow
+    flags. `max_width` is a lane CAP (it bounds device memory per
+    dispatch), so a non-pow-2 value clamps DOWN to its floor bucket —
+    callers must chunk groups at `floor_pow2(max_width)` lanes.
+    """
+    return min(next_pow2(int(n)), floor_pow2(max_width))
+
+
 # -- plan nodes --------------------------------------------------------------
 
 

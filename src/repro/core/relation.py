@@ -32,7 +32,9 @@ class Relation:
 
     Attributes:
       schema: variable name per column (aux data, static under jit).
-      cols:   (capacity, n_cols) int32 term ids.
+      cols:   (capacity, n_cols) int32 term ids. A leading batch axis —
+              (width, capacity, n_cols) — is allowed so stacked same-shape
+              queries travel as one pytree through the vmapped executor.
       valid:  (capacity,) bool — rows beyond the real result are padding.
     """
 
@@ -42,8 +44,8 @@ class Relation:
 
     def __post_init__(self):
         if isinstance(self.cols, (np.ndarray, jnp.ndarray)):
-            assert self.cols.ndim == 2, self.cols.shape
-            assert len(self.schema) == self.cols.shape[1], (
+            assert self.cols.ndim >= 2, self.cols.shape
+            assert len(self.schema) == self.cols.shape[-1], (
                 self.schema,
                 self.cols.shape,
             )
@@ -60,11 +62,11 @@ class Relation:
     # -- convenience ---------------------------------------------------------
     @property
     def capacity(self) -> int:
-        return self.cols.shape[0]
+        return self.cols.shape[-2]  # row axis (batch axis, if any, leads)
 
     @property
     def n_cols(self) -> int:
-        return self.cols.shape[1]
+        return self.cols.shape[-1]
 
     def count(self) -> jax.Array:
         return jnp.sum(self.valid.astype(jnp.int32))

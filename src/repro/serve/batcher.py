@@ -41,6 +41,9 @@ class MicroBatcher:
         self.t.start()
         self.n_batches = 0
         self.n_requests = 0
+        # arrival-size histogram: batch size -> number of batches formed
+        # (how much same-dispatch coalescing the traffic actually offers)
+        self.batch_size_hist: dict[int, int] = {}
 
     def submit(self, payload: Any, timeout: float = 30.0) -> Any:
         r = Request(payload)
@@ -75,6 +78,9 @@ class MicroBatcher:
                 results = [_safe_copy(e) for _ in batch]
             self.n_batches += 1
             self.n_requests += len(batch)
+            self.batch_size_hist[len(batch)] = (
+                self.batch_size_hist.get(len(batch), 0) + 1
+            )
             for r, res in zip(batch, results):
                 r.result = res
                 r.event.set()

@@ -3,7 +3,13 @@
 Requests (query strings) flow through the MicroBatcher; the engine executes
 each batch — partial matching per pattern, then the operator tree on
 device. Batching amortizes dispatch overhead exactly like the paper's
-CPU-assigns / GPU-computes split.
+CPU-assigns / GPU-computes split — and with `batch_execution` (default on)
+the batch is routed through `engine.run_batch`, which coalesces same-shape
+batchmates into single stacked (vmapped) device dispatches: N warm
+identical-shape requests cost ceil(N / width) launches, not N. Mixed
+batches fall back per plan group; `stats()["batched"]` reports the
+batch-width histogram and queries-per-dispatch so operators can watch the
+coalescing win.
 
 Responses are typed: a successful request yields a `QueryResult` (which
 still compares/iterates like the plain row list for back-compat), a failed
@@ -87,6 +93,7 @@ class SPARQLServer:
     max_batch: int = 8
     max_wait_s: float = 0.002
     prepared_cache_entries: int = 256
+    batch_execution: bool = True  # stack same-shape batchmates per dispatch
 
     def __post_init__(self):
         self._batcher = MicroBatcher(self._run_batch, self.max_batch,
@@ -108,23 +115,44 @@ class SPARQLServer:
             self._prepared.popitem(last=False)
         return pq, False
 
-    def _run_one(self, text: str) -> QueryResult | QueryError:
-        # per-request isolation: one bad query (parse error, overflow) fails
-        # that request only, never its batchmates or the worker thread
-        try:
-            pq, cached = self._prepared_handle(text)
-        except ParseError as e:
-            return ParseQueryError(str(e), query=text)
-        except Exception as e:
-            return QueryError("plan", str(e), query=text)
-        try:
-            rs = pq.run()
-        except Exception as e:
-            return QueryError("execution", str(e), query=text)
-        return QueryResult(rows=rs.rows, vars=rs.vars, from_cache=cached)
-
     def _run_batch(self, queries: list[str]) -> list[QueryResult | QueryError]:
-        return [self._run_one(q) for q in queries]
+        """Execute one micro-batch through engine.run_batch: same-shape
+        queries coalesce into stacked device dispatches, mixed batches fall
+        back per plan group, and every failure (parse, plan, execution)
+        stays isolated to its own slot — one bad query never fails its
+        batchmates or the worker thread."""
+        outs: list[QueryResult | QueryError | None] = [None] * len(queries)
+        pending: list[tuple[int, "PreparedQuery", bool]] = []
+        for i, text in enumerate(queries):
+            try:
+                pq, cached = self._prepared_handle(text)
+            except ParseError as e:
+                outs[i] = ParseQueryError(str(e), query=text)
+            except Exception as e:
+                outs[i] = QueryError("plan", str(e), query=text)
+            else:
+                pending.append((i, pq, cached))
+        if not pending:
+            return outs
+        if self.batch_execution and len(pending) > 1:
+            outcomes = self.engine.run_batch_outcomes(
+                [pq for _, pq, _ in pending]
+            )
+        else:
+            outcomes = []
+            for _, pq, _ in pending:
+                try:
+                    outcomes.append(pq.run())
+                except Exception as e:
+                    outcomes.append(e)
+        for (i, pq, cached), oc in zip(pending, outcomes):
+            if isinstance(oc, Exception):
+                outs[i] = QueryError("execution", str(oc), query=queries[i])
+            else:
+                outs[i] = QueryResult(
+                    rows=oc.rows, vars=oc.vars, from_cache=cached
+                )
+        return outs
 
     def query(self, text: str) -> QueryResult:
         """Submit one query; raises QueryError (a ParseQueryError for parse
@@ -145,6 +173,12 @@ class SPARQLServer:
 
     def stats(self) -> dict:
         total = self._prepared_hits + self._prepared_misses
+        eng = self.engine
+        sd, sq = eng.stacked_dispatches, eng.stacked_queries
+        # snapshot before sorting: the worker thread inserts new histogram
+        # keys concurrently with a client thread reading stats
+        width_hist = dict(eng.batch_width_hist)
+        arrival_hist = dict(self._batcher.batch_size_hist)
         return {
             "batches": self._batcher.n_batches,
             "requests": self._batcher.n_requests,
@@ -155,6 +189,15 @@ class SPARQLServer:
                 "hits": self._prepared_hits,
                 "misses": self._prepared_misses,
                 "hit_rate": self._prepared_hits / total if total else 0.0,
+            },
+            # the coalescing win: how many device dispatches were stacked,
+            # how many queries each one carried, and at which lane widths
+            "batched": {
+                "stacked_dispatches": sd,
+                "stacked_queries": sq,
+                "queries_per_dispatch": sq / sd if sd else 0.0,
+                "batch_width_hist": dict(sorted(width_hist.items())),
+                "arrival_batch_hist": dict(sorted(arrival_hist.items())),
             },
         }
 

@@ -15,6 +15,11 @@ The public API is layered around prepared queries:
   pq.explain()         -> str             algebra tree, physical plan,
                                           bucket capacities, cache state
   engine.query(text)   -> list[dict]      thin wrapper: prepare().run().rows
+  engine.run_batch(ps) -> list[ResultSet] micro-batch execution: same-shape
+                                          queries coalesce into stacked
+                                          (vmapped) device dispatches —
+                                          N warm same-shape queries cost
+                                          ceil(N / width) launches
 
 Two execution modes share one planner:
 
@@ -76,6 +81,10 @@ class ExecStats:
     cache_misses: int = 0
     n_compiles: int = 0  # XLA compilations triggered by this query
     n_dispatches: int = 0  # device program launches (warm target: 1)
+    # stacked-batch accounting: width of the vmapped dispatch that served
+    # this run (0 = solo). Batchmates share one dispatch, so their
+    # n_dispatches/n_compiles report the chunk's shared counts.
+    batch_width: int = 0
 
     def add(self, other: "ExecStats") -> None:
         self.n_joins += other.n_joins
@@ -89,6 +98,7 @@ class ExecStats:
         self.cache_misses += other.cache_misses
         self.n_compiles += other.n_compiles
         self.n_dispatches += other.n_dispatches
+        self.batch_width = max(self.batch_width, other.batch_width)
 
 
 @dataclasses.dataclass
@@ -96,6 +106,19 @@ class PlanCacheEntry:
     shape: plan_ir.PlanShape
     join_caps: tuple[int, ...]
     compiled: ex.CompiledPlan
+    # width -> stacked executable at THESE join caps (compiled on demand by
+    # run_batch; reset when an overflow regrow replaces the entry)
+    batched: dict[int, ex.CompiledBatch] = dataclasses.field(
+        default_factory=dict
+    )
+    # widths persisted by a previous process (save_cache round-trips them
+    # even before this process serves its first stacked batch)
+    warm_widths: tuple[int, ...] = ()
+
+    def widths(self) -> tuple[int, ...]:
+        """Known stacked widths for this signature: compiled this process
+        plus persisted from the warmup file."""
+        return tuple(sorted(set(self.batched) | set(self.warm_widths)))
 
 
 class PlanCache:
@@ -140,6 +163,23 @@ class PlanCache:
 
 
 @dataclasses.dataclass
+class BatchGroupStats:
+    """run_batch accounting for one plan group (shared PlanShape).
+
+    `n_dispatches` counts every device launch the group made — stacked
+    chunks, overflow retries, and the sequential calibration run of a cold
+    group — so ceil(N/width) is directly assertable. `widths` lists the
+    bucketed lane width of each stacked chunk, in dispatch order."""
+
+    n_queries: int
+    widths: tuple[int, ...] = ()
+    n_dispatches: int = 0
+    n_compiles: int = 0
+    cold: bool = False  # group paid calibration/compilation this batch
+    fallback: bool = False  # stacked dispatch failed; ran sequentially
+
+
+@dataclasses.dataclass
 class _Program:
     """A planned query: scan order, join structure, runtime constants.
 
@@ -161,6 +201,19 @@ class _Program:
     projection: tuple[str, ...]
     distinct: bool
     has_slice: bool
+
+
+@dataclasses.dataclass
+class _BatchCtx:
+    """Per-query HOST staging for run_batch: the program, its plan-cache
+    key and the canonical->original name mapping. Deliberately holds no
+    device arrays — scans are re-fetched from the store's bounded caches
+    per batch, so a cached PreparedQuery handle never pins device buffers
+    past the scan cache's eviction policy."""
+
+    prog: _Program
+    shape: plan_ir.PlanShape
+    inverse: dict[str, str]
 
 
 class ResultSet:
@@ -209,6 +262,7 @@ class PreparedQuery:
         self.text = text
         self.query = query
         self._program = engine._build_program(query)
+        self._batch_ctx: _BatchCtx | None = None  # run_batch staging cache
         self.stats = ExecStats()  # accumulated across runs
         self.last_stats: ExecStats | None = None
         self.n_runs = 0
@@ -236,6 +290,7 @@ class QueryEngine:
     plan_cache_entries: int = 256
     optimize: bool = True  # cost-based optimizer (False: legacy greedy)
     warmup_path: str | None = None  # saved bucket signatures (save_cache)
+    max_batch_width: int = 64  # lane cap per stacked run_batch dispatch
 
     def __post_init__(self):
         self._jit_join = jax.jit(
@@ -251,6 +306,9 @@ class QueryEngine:
         # here compiles directly at the saved capacities, skipping the
         # eager calibration run entirely
         self._warm_caps: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
+        # persisted stacked batch widths per shape; files written before
+        # run_batch existed simply have none (the key is optional)
+        self._warm_widths: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
         if self.warmup_path is not None:
             p = pathlib.Path(self.warmup_path)
             if p.exists():
@@ -260,23 +318,36 @@ class QueryEngine:
                     self._warm_caps[shape] = tuple(
                         int(c) for c in e["join_caps"]
                     )
+                    widths = tuple(int(w) for w in e.get("widths", ()))
+                    if widths:
+                        self._warm_widths[shape] = widths
+        # stacked-batch counters (cumulative; server stats report them)
+        self.batch_width_hist: dict[int, int] = {}
+        self.stacked_dispatches = 0
+        self.stacked_queries = 0
+        self.last_batch: list[BatchGroupStats] = []
 
     def save_cache(self, path: str) -> int:
         """Serialize the plan cache's learned bucket signatures to JSON.
 
         A `QueryEngine(warmup_path=...)` in a restarted process compiles
         known shapes straight at these capacities — no calibration run.
-        Returns the number of signatures written.
+        Each entry carries the stacked batch widths seen for the shape
+        (compiled this process or inherited from a previous warmup file),
+        so (shape, caps, width) signatures round-trip across restarts;
+        files written before batching existed load unchanged (the widths
+        key is optional). Returns the number of signatures written.
         """
         entries = [
             {
                 "shape": plan_ir.shape_to_jsonable(e.shape),
                 "join_caps": list(e.join_caps),
+                "widths": list(e.widths()),
             }
             for e in self.plan_cache.entries()
         ]
         pathlib.Path(path).write_text(
-            json.dumps({"version": 1, "entries": entries})
+            json.dumps({"version": 2, "entries": entries})
         )
         return len(entries)
 
@@ -301,6 +372,219 @@ class QueryEngine:
 
     def cache_stats(self) -> dict:
         return self.plan_cache.stats()
+
+    def run_batch(self, prepared: list[PreparedQuery]) -> list[ResultSet]:
+        """Execute a micro-batch, coalescing same-shape queries.
+
+        Queries are grouped by compiled plan signature (PlanShape); each
+        warm group runs as ONE stacked device dispatch per pow-2 width
+        chunk (vmap over scan tuples and runtime constants), so N warm
+        same-shape queries cost ceil(N / width) dispatches instead of N.
+        Mixed batches fall back per-group; a cold group calibrates on its
+        first query and stacks the rest. Results are positionally aligned
+        with `prepared`. Per-group accounting lands in `self.last_batch`;
+        the first failing query's exception is re-raised (use
+        `run_batch_outcomes` for per-query error isolation).
+        """
+        outcomes = self.run_batch_outcomes(prepared)
+        for oc in outcomes:
+            if isinstance(oc, Exception):
+                raise oc
+        return outcomes
+
+    def run_batch_outcomes(
+        self, prepared: list[PreparedQuery]
+    ) -> list["ResultSet | Exception"]:
+        """run_batch with per-query error isolation: each slot is either a
+        ResultSet or the exception that query raised (the server's batch
+        path relies on one bad query never failing its batchmates)."""
+        self.last_batch = []
+        out: list[ResultSet | Exception] = [None] * len(prepared)  # type: ignore[list-item]
+        if not self.compiled:
+            group = BatchGroupStats(n_queries=len(prepared), fallback=True)
+            self.last_batch.append(group)
+            for i, pq in enumerate(prepared):
+                out[i] = self._run_single(pq, group)
+            return out
+        # group by compiled plan signature (the PlanShape cache key)
+        ctxs: list[_BatchCtx | None] = [None] * len(prepared)
+        groups: OrderedDict[plan_ir.PlanShape, list[int]] = OrderedDict()
+        for i, pq in enumerate(prepared):
+            try:
+                # staging is immutable per handle (program, device scans,
+                # cache key) — compute once, reuse across micro-batches
+                if pq._batch_ctx is None:
+                    pq._batch_ctx = self._batch_context(pq._program)
+                ctxs[i] = pq._batch_ctx
+            except Exception as e:
+                out[i] = e
+                continue
+            groups.setdefault(ctxs[i].shape, []).append(i)
+        for shape, idxs in groups.items():
+            self._run_group(shape, idxs, ctxs, prepared, out)
+        return out
+
+    # -- batched execution internals ---------------------------------------
+    def _batch_context(self, prog: _Program) -> "_BatchCtx":
+        _, shape, inverse = self._canonicalize(prog)
+        return _BatchCtx(prog=prog, shape=shape, inverse=inverse)
+
+    def _run_single(
+        self, pq: PreparedQuery, group: BatchGroupStats
+    ) -> "ResultSet | Exception":
+        """Sequential fallback inside run_batch: the normal per-query path,
+        with its dispatch/compile counts folded into the group's."""
+        try:
+            rs = pq.run()
+        except Exception as e:
+            return e
+        group.n_dispatches += rs.stats.n_dispatches
+        group.n_compiles += rs.stats.n_compiles
+        return rs
+
+    def _run_group(
+        self,
+        shape: plan_ir.PlanShape,
+        idxs: list[int],
+        ctxs: list["_BatchCtx | None"],
+        prepared: list[PreparedQuery],
+        out: list,
+    ) -> None:
+        group = BatchGroupStats(n_queries=len(idxs))
+        self.last_batch.append(group)
+        pos = 0
+        if self.plan_cache.get(shape) is None:
+            # cold shape: the first query runs the normal path (calibration
+            # or warmup compile), populating the cache the rest stack on
+            group.cold = True
+            out[idxs[0]] = self._run_single(prepared[idxs[0]], group)
+            pos = 1
+        # chunk at the pow-2 floor of the lane cap: max_batch_width bounds
+        # device memory per dispatch, so it must never round UP
+        width_cap = plan_ir.floor_pow2(self.max_batch_width)
+        while pos < len(idxs):
+            chunk = idxs[pos:pos + width_cap]
+            pos += len(chunk)
+            if len(chunk) < 2 or self.plan_cache.get(shape) is None:
+                for i in chunk:
+                    out[i] = self._run_single(prepared[i], group)
+                continue
+            try:
+                self._run_chunk_stacked(
+                    shape, chunk, ctxs, prepared, out, group
+                )
+            except Exception:
+                # stacked dispatch failed (e.g. bucket growth past
+                # max_capacity): isolate errors by re-running the chunk's
+                # queries sequentially so only the culprit raises
+                group.fallback = True
+                for i in chunk:
+                    out[i] = self._run_single(prepared[i], group)
+
+    def _run_chunk_stacked(
+        self,
+        shape: plan_ir.PlanShape,
+        chunk: list[int],
+        ctxs: list["_BatchCtx | None"],
+        prepared: list[PreparedQuery],
+        out: list,
+        group: BatchGroupStats,
+    ) -> None:
+        """ONE stacked dispatch for a chunk of warm same-shape queries."""
+        entry = self.plan_cache.get(shape)
+        n = len(chunk)
+        width = plan_ir.bucket_width(n, self.max_batch_width)
+        # pad trailing lanes with lane 0's inputs; lane_active masks them
+        lanes = [ctxs[i] for i in chunk] + [ctxs[chunk[0]]] * (width - n)
+        scans_b = tuple(
+            Relation(
+                shape.scan_schemas[j],
+                *self.store.stacked_scan_device(
+                    tuple(c.prog.patterns[j] for c in lanes)
+                ),
+            )
+            for j in range(len(shape.scan_schemas))
+        )
+        consts_i = jnp.asarray(np.stack([c.prog.consts_i for c in lanes]))
+        consts_f = jnp.asarray(np.stack([c.prog.consts_f for c in lanes]))
+        active = jnp.asarray(np.arange(width) < n)
+        num_vals = self.store.numeric_values_device()
+        stats = ExecStats(
+            n_joins=shape.n_joins(), cache_hits=1, batch_width=width
+        )
+        self.plan_cache.hits += n
+        try:
+            while True:
+                bexec = entry.batched.get(width)
+                if bexec is None:
+                    bexec = ex.compile_plan_batched(
+                        entry.compiled.plan,
+                        scans_b,
+                        consts_i,
+                        consts_f,
+                        num_vals,
+                        active,
+                        use_kernel=self.use_kernel,
+                    )
+                    entry.batched[width] = bexec
+                    stats.n_compiles += 1
+                    self.plan_cache.compiles += 1
+                stats.n_dispatches += 1
+                rel_b, totals_b, flags_b = bexec(
+                    scans_b, consts_i, consts_f, num_vals, active
+                )
+                flags_np = np.asarray(flags_b)  # the single host sync
+                if not flags_np.any():
+                    break
+                # some lane overflowed a bucket: grow each flagged join to
+                # the worst lane's exact total, recompile, retry the chunk
+                stats.n_retries += 1
+                totals_np = np.asarray(totals_b)
+                new_caps = plan_ir.grow_join_caps(
+                    entry.join_caps,
+                    [int(totals_np[:, j].max())
+                     for j in range(totals_np.shape[1])],
+                    [bool(flags_np[:, j].any())
+                     for j in range(flags_np.shape[1])],
+                )
+                if max(new_caps) > self.max_capacity:
+                    raise MemoryError(
+                        f"join result exceeds {self.max_capacity}"
+                    )
+                template_scans, _, _ = self._canonicalize(lanes[0].prog)
+                entry = self._compile_entry(
+                    shape, new_caps, template_scans, None, stats
+                )
+        finally:
+            # the group ledger counts every launch and compile, including
+            # those of a chunk that then failed over to the sequential path
+            group.n_dispatches += stats.n_dispatches
+            group.n_compiles += stats.n_compiles
+        # the serving counters only describe *successful* stacked service,
+        # so queries_per_dispatch can never be skewed by a failed chunk
+        group.widths = group.widths + (width,)
+        self.stacked_dispatches += stats.n_dispatches
+        self.batch_width_hist[width] = (
+            self.batch_width_hist.get(width, 0) + stats.n_dispatches
+        )
+        self.stacked_queries += n
+        caps = entry.compiled.plan.join_caps
+        stats.peak_join_bucket = max(caps) if caps else 0
+        stats.peak_capacity = entry.compiled.plan.max_capacity()
+        # unstack: one device->host transfer for the whole chunk, then
+        # per-lane decode under each query's own variable names
+        cols_np = np.asarray(rel_b.cols)
+        valid_np = np.asarray(rel_b.valid)
+        schema = rel_b.schema
+        for k, i in enumerate(chunk):
+            names = tuple(ctxs[i].inverse[v] for v in schema)
+            rows = self._decode_numpy(names, cols_np[k][valid_np[k]])
+            q_stats = dataclasses.replace(stats)
+            pq = prepared[i]
+            pq.stats.add(q_stats)
+            pq.last_stats = q_stats
+            pq.n_runs += 1
+            out[i] = ResultSet(names, rows, q_stats)
 
     # -- planning ----------------------------------------------------------
     def _lower_expr(
@@ -422,14 +706,19 @@ class QueryEngine:
         return rel
 
     def _decode_rows(self, rel: Relation) -> list[dict[str, str]]:
+        return self._decode_numpy(rel.schema, rel.to_numpy())
+
+    def _decode_numpy(
+        self, schema: tuple[str, ...], rows: np.ndarray
+    ) -> list[dict[str, str]]:
         d = self.store.dictionary
         return [
             {
                 v: d.decode(int(t))
-                for v, t in zip(rel.schema, row)
+                for v, t in zip(schema, row)
                 if int(t) != UNBOUND
             }
-            for row in rel.to_numpy()
+            for row in rows
         ]
 
     # -- eager evaluator ---------------------------------------------------
@@ -577,14 +866,17 @@ class QueryEngine:
                 raise MemoryError(f"join result exceeds {self.max_capacity}")
 
     # -- compiled path -----------------------------------------------------
-    def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
-        # upload-once device scans (bucketed pow-2 capacities)
+    def _canonicalize(
+        self, prog: _Program
+    ) -> tuple[tuple[Relation, ...], plan_ir.PlanShape, dict[str, str]]:
+        """Device scans + cache key for a program: upload-once scans
+        (bucketed pow-2 capacities), variable names canonicalised so
+        structurally-equal queries share one compiled program (constants
+        live in the scan data and the runtime-constant inputs, not here).
+        Returns (canonical scans, shape, canonical -> original names)."""
         scans = tuple(
             self.store.match_pattern_device(tp) for tp in prog.patterns
         )
-        # canonicalise variable names so structurally-equal queries share
-        # one compiled program (constants live in the scan data and the
-        # runtime-constant inputs, not here)
         schemas = tuple(s.schema for s in scans)
         rename = plan_ir.canonical_renaming(schemas)
         inverse = {c: o for o, c in rename.items()}
@@ -595,6 +887,10 @@ class QueryEngine:
         shape = self._shape_for(
             prog, schemas, tuple(s.capacity for s in scans), rename
         )
+        return canon_scans, shape, inverse
+
+    def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
+        canon_scans, shape, inverse = self._canonicalize(prog)
         stats.n_joins = shape.n_joins()
         consts_i = jnp.asarray(prog.consts_i)
         consts_f = jnp.asarray(prog.consts_f)
@@ -742,9 +1038,61 @@ class QueryEngine:
         )
         stats.n_compiles += 1
         self.plan_cache.compiles += 1
-        entry = PlanCacheEntry(shape, join_caps, compiled)
+        entry = PlanCacheEntry(
+            shape,
+            join_caps,
+            compiled,
+            warm_widths=self._warm_widths.get(shape, ()),
+        )
+        if prog is not None:
+            # cold-compile path only: a regrow retry (prog=None) must not
+            # pay vmap compiles for widths the next regrow would discard
+            self._precompile_batched(entry, canon_scans, stats)
         self.plan_cache.put(shape, entry)
         return entry
+
+    def _precompile_batched(
+        self,
+        entry: PlanCacheEntry,
+        canon_scans: tuple[Relation, ...],
+        stats: ExecStats,
+    ) -> None:
+        """Compile stacked executables for the widths a previous process
+        persisted (save_cache / warmup_path), so a restarted server's first
+        micro-batch dispatches warm instead of paying the vmap compile.
+        Abstract (shape/dtype) templates stand in for the batched inputs —
+        no device data is staged here."""
+        width_cap = plan_ir.floor_pow2(self.max_batch_width)
+        sds = jax.ShapeDtypeStruct
+        for w in entry.warm_widths:
+            if w in entry.batched or w < 2 or w > width_cap:
+                continue
+            scans_b = tuple(
+                Relation(
+                    s.schema,
+                    sds((w,) + s.cols.shape, s.cols.dtype),
+                    sds((w,) + s.valid.shape, s.valid.dtype),
+                )
+                for s in canon_scans
+            )
+            n_i = entry.shape.n_consts[0] + (
+                2 if entry.shape.has_slice else 0
+            )
+            n_f = entry.shape.n_consts[1]
+            try:
+                entry.batched[w] = ex.compile_plan_batched(
+                    entry.compiled.plan,
+                    scans_b,
+                    sds((w, n_i), jnp.int32),
+                    sds((w, n_f), jnp.float32),
+                    self.store.numeric_values_device(),
+                    sds((w,), jnp.bool_),
+                    use_kernel=self.use_kernel,
+                )
+            except Exception:
+                continue  # a stale width must never fail a live query
+            stats.n_compiles += 1
+            self.plan_cache.compiles += 1
 
     # -- explain -----------------------------------------------------------
     def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:

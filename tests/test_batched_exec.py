@@ -1,0 +1,601 @@
+"""Batched same-shape query execution: plan-group coalescing, pow-2 width
+bucketing with masked padding lanes, ceil(N/width) stacked dispatches,
+overflow regrow inside a stacked dispatch, server routing with per-query
+error isolation, batch-width serving stats, the Pallas pair-expand kernel
+in the compiled + stacked paths, and (shape, caps, width) warmup
+round-trips."""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    from _hypothesis_compat import given, settings, st  # noqa: F401
+    HAVE_HYPOTHESIS = False
+
+from repro.core import plan_ir
+from repro.sparql.baseline import reference_rows
+from repro.sparql.engine import QueryEngine
+from repro.sparql.parser import parse
+from repro.sparql.store import store_from_string_triples
+
+
+def rows_as_sets(rows):
+    return sorted(tuple(sorted(r.items())) for r in rows)
+
+
+def chain_store(n_src=12, fan=3):
+    """?x <p> ?y . ?y <q> ?z chains plus numeric attributes for FILTER."""
+    triples = []
+    for i in range(n_src):
+        triples.append((f"<s{i}>", "<p>", f"<m{i % fan}>"))
+        triples.append((f"<s{i}>", "<age>", str(20 + i)))
+    for j in range(fan):
+        triples.append((f"<m{j}>", "<q>", f"<z{j}>"))
+        triples.append((f"<m{j}>", "<q>", f"<z{j + fan}>"))
+    return store_from_string_triples(triples)
+
+
+def same_shape_queries(n):
+    """n queries of ONE plan shape: only the FILTER constant differs (a
+    runtime input), so they all group on one compiled plan signature."""
+    return [
+        "SELECT ?x ?z WHERE { ?x <p> ?y . ?y <q> ?z . "
+        f"FILTER (?x != <s{k}>) }}"
+        for k in range(n)
+    ]
+
+
+def run_sequential(prepared):
+    return [pq.run() for pq in prepared]
+
+
+# ------------------------------------------------------- width bucketing
+
+
+def test_bucket_width_pow2_and_clamp():
+    assert plan_ir.bucket_width(1, 64) == 1
+    assert plan_ir.bucket_width(3, 64) == 4
+    assert plan_ir.bucket_width(16, 64) == 16
+    assert plan_ir.bucket_width(17, 64) == 32
+    assert plan_ir.bucket_width(200, 64) == 64
+    assert plan_ir.bucket_width(5, 4) == 4
+    # max_width is a lane CAP: a non-pow-2 value clamps DOWN, never up
+    assert plan_ir.bucket_width(48, 48) == 32
+    assert plan_ir.floor_pow2(48) == 32
+
+
+def test_non_pow2_width_cap_never_exceeded():
+    """max_batch_width bounds device memory per dispatch — a non-pow-2
+    cap chunks at its pow-2 floor instead of rounding lanes up past it."""
+    store = chain_store()
+    eng = QueryEngine(store, max_batch_width=6)
+    prepared = [eng.prepare(t) for t in same_shape_queries(6)]
+    seq = run_sequential(prepared)
+    res = eng.run_batch(prepared)
+    assert eng.last_batch[0].widths == (4, 2)  # chunks of 4 + 2, never 8
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+
+
+# ------------------------------------------------- stacked dispatch core
+
+
+def test_warm_same_shape_batch_is_one_dispatch():
+    """Acceptance: N warm same-shape queries execute in ceil(N/width)
+    device dispatches, with results identical to sequential execution."""
+    store = chain_store()
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in same_shape_queries(8)]
+    seq = run_sequential(prepared)  # warms the plan cache
+    res = eng.run_batch(prepared)
+    assert len(eng.last_batch) == 1
+    group = eng.last_batch[0]
+    assert group.n_queries == 8
+    assert group.widths == (8,)
+    assert group.n_dispatches == 1  # ceil(8/8)
+    assert group.n_compiles == 1  # the width-8 stacked executable
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+        assert r.vars == s.vars
+    # per-query stats report the shared stacked dispatch
+    assert all(r.stats.n_dispatches == 1 for r in res)
+    assert all(r.stats.batch_width == 8 for r in res)
+    assert all(r.stats.cache_hits == 1 for r in res)
+    # second batch: stacked executable is warm too — zero compiles
+    res2 = eng.run_batch(prepared)
+    assert eng.last_batch[0].n_dispatches == 1
+    assert eng.last_batch[0].n_compiles == 0
+    for r, s in zip(res2, seq):
+        assert r.rows == s.rows
+
+
+def test_ceil_n_over_width_chunking():
+    store = chain_store()
+    eng = QueryEngine(store, max_batch_width=4)
+    prepared = [eng.prepare(t) for t in same_shape_queries(10)]
+    seq = run_sequential(prepared)
+    eng.run_batch(prepared)  # compiles width-4 and width-2 variants
+    res = eng.run_batch(prepared)
+    group = eng.last_batch[0]
+    # 10 queries at width cap 4: chunks of 4 + 4 + 2 -> 3 dispatches
+    assert group.widths == (4, 4, 2)
+    assert group.n_dispatches == 3
+    assert group.n_compiles == 0
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+
+
+def test_padding_lanes_contribute_nothing():
+    """A 5-query batch pads to width 8: the 3 masked lanes (copies of lane
+    0's inputs) must not leak rows into any result."""
+    store = chain_store()
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in same_shape_queries(5)]
+    seq = run_sequential(prepared)
+    res = eng.run_batch(prepared)
+    assert eng.last_batch[0].widths == (8,)
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+    # pow-2 bucketing: a later 6-query batch reuses the width-8 executable
+    res6 = eng.run_batch([eng.prepare(t) for t in same_shape_queries(6)])
+    assert eng.last_batch[0].widths == (8,)
+    assert eng.last_batch[0].n_compiles == 0
+    for r, s in zip(res6, seq[:6]):
+        assert r.rows == s.rows
+
+
+def test_cold_group_calibrates_first_then_stacks_rest():
+    store = chain_store()
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in same_shape_queries(7)]
+    res = eng.run_batch(prepared)
+    group = eng.last_batch[0]
+    assert group.cold
+    # first query: eager calibration (count + expand dispatches) + base
+    # compile; remaining 6 stack into one width-8 dispatch + its compile
+    assert group.widths == (8,)
+    assert group.n_compiles == 2
+    seq = run_sequential(prepared)
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+
+
+def test_mixed_batch_falls_back_per_group():
+    store = chain_store()
+    eng = QueryEngine(store)
+    a = [eng.prepare(t) for t in same_shape_queries(4)]
+    b = [
+        eng.prepare("SELECT ?x ?a WHERE { ?x <p> ?y . ?x <age> ?a . }")
+        for _ in range(3)
+    ]
+    run_sequential(a + b)
+    # interleaved arrival order; grouping reassembles the plan groups
+    mixed = [a[0], b[0], a[1], b[1], a[2], b[2], a[3]]
+    res = eng.run_batch(mixed)
+    assert len(eng.last_batch) == 2
+    assert {g.n_queries for g in eng.last_batch} == {4, 3}
+    assert all(g.n_dispatches == 1 for g in eng.last_batch)
+    seq = run_sequential(mixed)
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+
+
+def test_single_query_group_uses_solo_path():
+    store = chain_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(same_shape_queries(1)[0])
+    pq.run()
+    res = eng.run_batch([pq])
+    assert res[0].stats.batch_width == 0  # no stacked dispatch
+    assert eng.last_batch[0].widths == ()
+    assert eng.stacked_dispatches == 0
+
+
+def test_overflow_in_one_lane_regrows_and_retries():
+    """A warm-calibrated bucket that a batchmate overflows: the chunk
+    regrows from the worst lane's exact totals and retries."""
+    triples = []
+    for i in range(8):
+        triples.append((f"<s{i}>", "<p1>", "<m1>"))
+    triples.append(("<m1>", "<qq>", "<z0>"))  # join total 8
+    for i in range(8):
+        triples.append((f"<t{i}>", "<p2>", "<m2>"))
+    for j in range(7):
+        triples.append(("<m2>", "<qq>", f"<w{j}>"))  # join total 56
+    store = store_from_string_triples(triples)
+    eng = QueryEngine(store)
+    q_small = "SELECT ?x ?z WHERE { ?x <p1> ?y . ?y <qq> ?z . }"
+    q_big = "SELECT ?x ?z WHERE { ?x <p2> ?y . ?y <qq> ?z . }"
+    ps, pb = eng.prepare(q_small), eng.prepare(q_big)
+    ps.run()  # calibrates the shared shape at the small join bucket
+    res = eng.run_batch([ps, pb])
+    assert res[0].stats.n_retries == 1
+    assert len(res[0].rows) == 8
+    assert len(res[1].rows) == 56
+    assert rows_as_sets(res[1].rows) == rows_as_sets(pb.run().rows)
+    # regrown caps are cached: the next batch is retry-free
+    res2 = eng.run_batch([ps, pb])
+    assert res2[0].stats.n_retries == 0
+    assert eng.last_batch[0].n_dispatches == 1
+
+
+def test_eager_engine_run_batch_falls_back_sequential():
+    store = chain_store()
+    eng = QueryEngine(store, compiled=False)
+    prepared = [eng.prepare(t) for t in same_shape_queries(4)]
+    res = eng.run_batch(prepared)
+    assert eng.last_batch[0].fallback
+    seq = run_sequential(prepared)
+    for r, s in zip(res, seq):
+        assert r.rows == s.rows
+
+
+def test_run_batch_outcomes_isolates_execution_errors():
+    """A batchmate whose bucket regrow exceeds max_capacity fails alone:
+    the chunk's stacked dispatch raises, the sequential fallback isolates
+    the culprit, and its same-shape neighbours still return rows."""
+    triples = []
+    for i in range(8):
+        triples.append((f"<s{i}>", "<p1>", "<m1>"))
+    triples.append(("<m1>", "<qq>", "<z0>"))  # join total 8
+    for i in range(8):
+        triples.append((f"<t{i}>", "<p2>", "<m2>"))
+    for j in range(7):
+        triples.append(("<m2>", "<qq>", f"<w{j}>"))  # join total 56 > 16
+    store = store_from_string_triples(triples)
+    eng = QueryEngine(store, max_capacity=16)
+    ok = eng.prepare("SELECT ?x ?z WHERE { ?x <p1> ?y . ?y <qq> ?z . }")
+    boom = eng.prepare("SELECT ?x ?z WHERE { ?x <p2> ?y . ?y <qq> ?z . }")
+    ok.run()  # calibrates the shared shape at the small bucket
+    outcomes = eng.run_batch_outcomes([ok, boom, ok])
+    assert isinstance(outcomes[1], MemoryError)
+    assert eng.last_batch[0].fallback
+    want = ok.run().rows
+    assert outcomes[0].rows == want
+    assert outcomes[2].rows == want
+    with pytest.raises(MemoryError):
+        eng.run_batch([ok, boom])
+
+
+# ----------------------------------------------- engine counters / stats
+
+
+def test_engine_batch_counters_accumulate():
+    store = chain_store()
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in same_shape_queries(8)]
+    run_sequential(prepared)
+    eng.run_batch(prepared)
+    eng.run_batch(prepared[:3])
+    assert eng.stacked_dispatches == 2
+    assert eng.stacked_queries == 11
+    assert eng.batch_width_hist == {8: 1, 4: 1}
+
+
+# ------------------------------------------------------------ server path
+
+
+def _server(store, **kw):
+    from repro.serve.sparql_server import SPARQLServer
+
+    return SPARQLServer(QueryEngine(store), max_batch=8, **kw)
+
+
+def test_server_batch_coalesces_and_isolates_errors():
+    from repro.serve.sparql_server import ParseQueryError, QueryResult
+
+    store = chain_store()
+    srv = _server(store)
+    try:
+        texts = same_shape_queries(4)
+        srv._run_batch(texts)  # cold pass warms plan + stacked caches
+        outs = srv._run_batch([texts[0], "SELECT NONSENSE", *texts[1:]])
+        assert isinstance(outs[1], ParseQueryError)
+        good = [o for i, o in enumerate(outs) if i != 1]
+        assert all(isinstance(o, QueryResult) for o in good)
+        engine = srv.engine
+        assert engine.last_batch[0].n_dispatches == 1
+        want = [engine.prepare(t).run().rows for t in texts]
+        assert [o.rows for o in good] == want
+    finally:
+        srv.close()
+
+
+def test_server_stats_report_batch_width_histogram():
+    store = chain_store()
+    srv = _server(store)
+    try:
+        texts = same_shape_queries(8)
+        srv._run_batch(texts)
+        srv._run_batch(texts)
+        s = srv.stats()["batched"]
+        assert s["stacked_dispatches"] >= 2
+        assert s["stacked_queries"] >= 15  # 7 stacked cold + 8 warm
+        assert s["queries_per_dispatch"] > 1
+        assert 8 in s["batch_width_hist"]
+        assert isinstance(s["arrival_batch_hist"], dict)
+    finally:
+        srv.close()
+
+
+def test_server_concurrent_same_query_batches(tmp_path):
+    """End-to-end through the MicroBatcher worker with real threads."""
+    import threading
+
+    store = chain_store()
+    srv = _server(store, max_wait_s=0.05)
+    try:
+        text = same_shape_queries(2)[0]
+        want = srv.query(text).rows  # warm
+        results = [None] * 6
+        errors = []
+
+        def worker(i):
+            try:
+                results[i] = srv.query(text).rows
+            except Exception as e:  # pragma: no cover - fail loudly below
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(6)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert all(r == want for r in results)
+        hist = srv.stats()["batched"]["arrival_batch_hist"]
+        assert hist  # the batcher recorded its arrival sizes
+    finally:
+        srv.close()
+
+
+def test_server_batch_execution_flag_off():
+    store = chain_store()
+    srv = _server(store, batch_execution=False)
+    try:
+        texts = same_shape_queries(4)
+        srv._run_batch(texts)
+        srv._run_batch(texts)
+        assert srv.engine.stacked_dispatches == 0
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------- pair-expand kernel wiring
+
+
+def test_use_kernel_parity_compiled_and_batched(monkeypatch):
+    """QueryEngine(use_kernel=True) routes the compiled AND stacked paths
+    through the Pallas pair-expand kernel and matches the jnp results."""
+    from repro.kernels.pair_expand import ops as pe_ops
+
+    calls = {"n": 0}
+    real = pe_ops.pair_expand
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pe_ops, "pair_expand", counting)
+    # route expand_pairs through the patched symbol (it imports lazily)
+    store = chain_store()
+    ref = QueryEngine(store)
+    kern = QueryEngine(store, use_kernel=True)
+    texts = same_shape_queries(4)
+    want = [ref.prepare(t).run().rows for t in texts]
+    prepared = [kern.prepare(t) for t in texts]
+    got_seq = run_sequential(prepared)
+    assert calls["n"] > 0  # kernel hit during compiled lowering
+    assert [r.rows for r in got_seq] == want
+    calls["n"] = 0
+    got_batch = kern.run_batch(prepared)
+    assert calls["n"] > 0  # kernel hit during stacked (vmapped) lowering
+    assert [r.rows for r in got_batch] == want
+    assert kern.last_batch[0].n_dispatches == 1
+
+
+def test_expand_pairs_kernel_matches_jnp_reference():
+    import jax.numpy as jnp
+
+    from repro.core import mr_join as mj
+    from repro.core.relation import Relation
+
+    left = Relation.from_numpy(
+        ("?a", "?k"), np.array([[1, 7], [2, 8], [3, 7], [4, 9]]), capacity=8
+    )
+    right = Relation.from_numpy(
+        ("?k", "?b"), np.array([[7, 11], [7, 12], [9, 13]]), capacity=4
+    )
+    plan, _ = mj.mr_join_plan(left, right)
+    li_r, rj_r, v_r = mj.expand_pairs_jnp(plan, 16)
+    li_k, rj_k, v_k = mj.expand_pairs(plan, 16, use_kernel=True)
+    assert jnp.array_equal(v_r, v_k)
+    assert jnp.array_equal(jnp.where(v_r, li_r, -1), jnp.where(v_k, li_k, -1))
+    assert jnp.array_equal(jnp.where(v_r, rj_r, -1), jnp.where(v_k, rj_k, -1))
+
+
+# ------------------------------------- warmup persistence across widths
+
+
+def test_save_cache_roundtrips_widths(tmp_path):
+    store = chain_store()
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in same_shape_queries(6)]
+    run_sequential(prepared)
+    eng.run_batch(prepared)  # compiles the width-8 stacked variant
+    path = tmp_path / "warm.json"
+    assert eng.save_cache(str(path)) == 1
+    data = json.loads(path.read_text())
+    assert data["entries"][0]["widths"] == [8]
+    # restart: caps warm (no calibration), the persisted width precompiles
+    # with the entry, and widths survive a re-save even though this
+    # process never ran a batch
+    eng2 = QueryEngine(store, warmup_path=str(path))
+    prepared2 = [eng2.prepare(t) for t in same_shape_queries(6)]
+    rs = prepared2[0].run()
+    assert rs.stats.n_count_passes == 0
+    assert rs.stats.n_compiles == 2  # base executable + warm width 8
+    eng2.run_batch(prepared2)
+    assert eng2.last_batch[0].n_compiles == 0  # first batch is fully warm
+    assert eng2.last_batch[0].widths == (8,)
+    assert eng2.save_cache(str(path)) == 1
+    assert json.loads(path.read_text())["entries"][0]["widths"] == [8]
+
+
+def test_warmup_accepts_pre_batching_files(tmp_path):
+    """Files saved before stacked execution existed (no widths key) still
+    warm the cache — the signature extension is backward compatible."""
+    store = chain_store()
+    eng = QueryEngine(store)
+    eng.prepare(same_shape_queries(1)[0]).run()
+    path = tmp_path / "warm.json"
+    eng.save_cache(str(path))
+    data = json.loads(path.read_text())
+    for e in data["entries"]:
+        del e["widths"]
+    path.write_text(json.dumps({"version": 1, "entries": data["entries"]}))
+    eng2 = QueryEngine(store, warmup_path=str(path))
+    rs = eng2.prepare(same_shape_queries(2)[1]).run()
+    assert rs.stats.n_count_passes == 0  # caps still warm
+    assert json.loads(path.read_text())["entries"][0].get("widths", []) == []
+
+
+def test_widths_reset_after_overflow_regrow(tmp_path):
+    """An overflow regrow replaces the cache entry; the re-saved signature
+    carries the widths recompiled at the NEW caps."""
+    triples = []
+    for i in range(8):
+        triples.append((f"<s{i}>", "<p1>", "<m1>"))
+    triples.append(("<m1>", "<qq>", "<z0>"))
+    for i in range(8):
+        triples.append((f"<t{i}>", "<p2>", "<m2>"))
+    for j in range(7):
+        triples.append(("<m2>", "<qq>", f"<w{j}>"))
+    store = store_from_string_triples(triples)
+    eng = QueryEngine(store)
+    ps = eng.prepare("SELECT ?x ?z WHERE { ?x <p1> ?y . ?y <qq> ?z . }")
+    pb = eng.prepare("SELECT ?x ?z WHERE { ?x <p2> ?y . ?y <qq> ?z . }")
+    ps.run()
+    eng.run_batch([ps, pb])  # overflow -> regrow -> width-2 at new caps
+    path = tmp_path / "warm.json"
+    eng.save_cache(str(path))
+    entry = json.loads(path.read_text())["entries"][0]
+    assert entry["widths"] == [2]
+    assert max(entry["join_caps"]) >= 56
+
+
+# --------------------------------------------- property-based differential
+
+
+def _batch_store(seed: int):
+    rng = np.random.default_rng(seed)
+    ents = [f"<e{i}>" for i in range(6)]
+    triples = set()
+    for _ in range(40):
+        triples.add((
+            ents[rng.integers(6)],
+            f"<p{rng.integers(3)}>",
+            ents[rng.integers(6)],
+        ))
+    for i in range(6):
+        triples.add((ents[i], "<age>", str(15 + 3 * i)))
+    return store_from_string_triples(sorted(triples))
+
+
+def _query_text(shape: str, p1: int, p2: int, cut: int) -> str:
+    base = f"?x <p{p1}> ?y"
+    if shape == "bgp":
+        return f"SELECT ?x ?y ?z WHERE {{ {base} . ?y <p{p2}> ?z . }}"
+    if shape == "filter":
+        return (f"SELECT ?x ?y ?a WHERE {{ {base} . ?x <age> ?a . "
+                f"FILTER (?a < {cut} || ?x = <e1>) }}")
+    if shape == "optional":
+        return (f"SELECT ?x ?y ?z WHERE {{ {base} . "
+                f"OPTIONAL {{ ?x <p{p2}> ?z }} }}")
+    assert shape == "union"
+    return (f"SELECT ?x ?v WHERE {{ {{ ?x <p{p1}> ?v }} UNION "
+            f"{{ ?x <p{p2}> ?v }} }}")
+
+
+def _assert_batch_matches_sequential_and_oracle(store, texts):
+    eng = QueryEngine(store)
+    prepared = [eng.prepare(t) for t in texts]
+    want_each = [
+        rows_as_sets(reference_rows(store, parse(t))) for t in texts
+    ]
+    res = eng.run_batch(prepared)
+    seq = run_sequential(prepared)
+    for r, s, w, t in zip(res, seq, want_each, texts):
+        assert r.rows == s.rows, t
+        assert rows_as_sets(r.rows) == w, t
+    # batches straddle plan groups: every group still ran
+    assert sum(g.n_queries for g in eng.last_batch) == len(texts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=7),
+    picks=st.lists(
+        st.tuples(
+            st.sampled_from(["bgp", "filter", "optional", "union"]),
+            st.integers(min_value=0, max_value=2),
+            st.integers(min_value=0, max_value=2),
+            st.integers(min_value=14, max_value=32),
+        ),
+        min_size=2,
+        max_size=8,
+    ),
+)
+def test_run_batch_matches_sequential_and_oracle(seed, picks):
+    """Property (acceptance): run_batch over a random mix of BGP / FILTER /
+    OPTIONAL / UNION queries — including batches straddling several plan
+    groups — returns exactly what per-query run() and the NumPy oracle
+    return."""
+    store = _batch_store(seed)
+    texts = [_query_text(s, p1, p2, cut) for s, p1, p2, cut in picks]
+    _assert_batch_matches_sequential_and_oracle(store, texts)
+
+
+@pytest.mark.parametrize("seed", [0, 2, 5])
+def test_run_batch_differential_sweep_without_hypothesis(seed):
+    """Deterministic slice of the property space (runs without
+    hypothesis): one query of each operator shape in a single batch."""
+    store = _batch_store(seed)
+    texts = [
+        _query_text(s, seed % 3, (seed + 1) % 3, 18 + seed)
+        for s in ("bgp", "filter", "optional", "union")
+    ] * 2  # duplicates: same-shape pairs actually stack
+    _assert_batch_matches_sequential_and_oracle(store, texts)
+
+
+def test_server_mixed_batch_with_parse_error_matches_oracle():
+    """The server path: a straddling batch with a parse error keeps every
+    other slot correct (per-request isolation end to end)."""
+    from repro.serve.sparql_server import ParseQueryError
+
+    store = _batch_store(1)
+    texts = [
+        _query_text("bgp", 0, 1, 20),
+        _query_text("union", 0, 1, 20),
+        "SELECT WHERE BROKEN {",
+        _query_text("bgp", 0, 1, 20),
+        _query_text("filter", 1, 2, 24),
+    ]
+    srv = _server(store)
+    try:
+        srv._run_batch(texts)  # warm
+        outs = srv._run_batch(texts)
+        assert isinstance(outs[2], ParseQueryError)
+        for i, text in enumerate(texts):
+            if i == 2:
+                continue
+            want = rows_as_sets(reference_rows(store, parse(text)))
+            assert rows_as_sets(outs[i].rows) == want, text
+    finally:
+        srv.close()
