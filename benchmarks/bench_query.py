@@ -28,6 +28,8 @@ are also written to the BENCH_4.json artifact.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -120,6 +122,63 @@ def bench_batched(store, repeats: int) -> list[dict]:
     return out
 
 
+# sharded-vs-single device counts for the D1 shape (1 = the no-sharding
+# baseline, 4 = the scaling point — both forced host devices, CPU-safe)
+D1_DEVICE_COUNTS = (1, 4)
+
+
+def bench_sharded(scale: int, repeats: int) -> list[dict]:
+    """D1: the sharded engine vs the single-device engine on the LUBM
+    join-heavy queries, at forced host device counts 1 and 4.
+
+    Each device count runs in a SUBPROCESS (bench_sharded_prog.py) so XLA
+    can be told the device count before jax initialises. Asserts the
+    structural win at 4 devices — per-shard max join bucket strictly
+    below the single-device bucket — so a sharding regression fails the
+    bench (and the distributed-smoke CI job running it).
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    by_dev: dict[int, list[dict]] = {}
+    for n_dev in D1_DEVICE_COUNTS:
+        proc = subprocess.run(
+            [sys.executable,
+             os.path.join(root, "benchmarks", "bench_sharded_prog.py"),
+             str(n_dev), str(scale), str(repeats)],
+            capture_output=True, text=True, timeout=1200, env=env,
+        )
+        assert proc.returncode == 0, (
+            f"D1 prog failed at n_dev={n_dev}:\n{proc.stdout}\n"
+            f"{proc.stderr}"
+        )
+        payload = next(
+            line for line in proc.stdout.splitlines()
+            if line.startswith("BENCH_JSON: ")
+        )
+        by_dev[n_dev] = json.loads(payload[len("BENCH_JSON: "):])["records"]
+    out = []
+    for rec1, rec4 in zip(*(by_dev[d] for d in D1_DEVICE_COUNTS)):
+        assert rec1["query"] == rec4["query"]
+        assert (
+            rec4["per_shard_max_bucket"] < rec4["single_max_bucket"]
+        ), (
+            f"D1 {rec4['query']}: per-shard bucket "
+            f"{rec4['per_shard_max_bucket']} not below single-device "
+            f"{rec4['single_max_bucket']}"
+        )
+        out.append({
+            "query": f"D1-{rec4['query']}",
+            "rows": rec4["rows"],
+            "sharded_1dev_ms": rec1["sharded_ms"],
+            "sharded_4dev_ms": rec4["sharded_ms"],
+            "single_ms": rec4["single_ms"],
+            "single_max_bucket": rec4["single_max_bucket"],
+            "per_shard_max_bucket": rec4["per_shard_max_bucket"],
+        })
+    return out
+
+
 def bench_optimizer(store) -> list[dict]:
     """Greedy vs statistics-driven join order on the J1/J2 shapes.
 
@@ -183,39 +242,60 @@ def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
 def main() -> None:
     args = [a for a in sys.argv[1:]]
     quick = "--quick" in args
+    sharded_only = "--sharded-only" in args
     pos = [a for a in args if not a.startswith("--")]
-    scale = int(pos[0]) if pos else (1 if quick else 2)
-    repeats = int(pos[1]) if len(pos) > 1 else (3 if quick else 20)
-    print(f"# repeated (warm) LUBM queries, scale={scale}, "
-          f"{repeats} repeats: eager vs compiled one-dispatch pipeline")
-    print("query,rows,eager_ms,compiled_ms,speedup")
-    rows = bench(scale=scale, repeats=repeats)
-    batched_records = []
-    for r in rows:
-        if "throughput_x" in r:
-            batched_records.append(r)
-            print(f"# {r['query']}: {r['n_queries']} same-shape warm "
-                  f"queries, width={r['batch_width']}, "
-                  f"stacked_dispatches={r['stacked_dispatches']}, "
-                  f"sequential_ms={r['sequential_ms']:.2f} "
-                  f"stacked_ms={r['stacked_ms']:.2f} "
-                  f"throughput={r['throughput_x']:.2f}x")
-        elif "speedup" in r:
-            print(f"{r['query']},{r['rows']},{r['eager_ms']:.2f},"
-                  f"{r['compiled_ms']:.2f},{r['speedup']:.2f}")
-        elif "query" in r:
-            print(f"# {r['query']}: rows={r['rows']} "
-                  f"greedy_max_bucket={r['greedy_max_bucket']} "
-                  f"stats_max_bucket={r['stats_max_bucket']} "
-                  f"greedy_ms={r['greedy_ms']:.2f} "
-                  f"stats_ms={r['stats_ms']:.2f}")
-        else:
-            print(f"# {r}")
-    # batched-throughput artifact (CI uploads it; see .github/workflows)
-    with open("BENCH_4.json", "w") as f:
+    scale = int(pos[0]) if pos else (1 if quick or sharded_only else 2)
+    repeats = int(pos[1]) if len(pos) > 1 else (
+        3 if quick or sharded_only else 20
+    )
+    sharded_records = []
+    if not sharded_only:
+        print(f"# repeated (warm) LUBM queries, scale={scale}, "
+              f"{repeats} repeats: eager vs compiled one-dispatch pipeline")
+        print("query,rows,eager_ms,compiled_ms,speedup")
+        rows = bench(scale=scale, repeats=repeats)
+        batched_records = []
+        for r in rows:
+            if "throughput_x" in r:
+                batched_records.append(r)
+                print(f"# {r['query']}: {r['n_queries']} same-shape warm "
+                      f"queries, width={r['batch_width']}, "
+                      f"stacked_dispatches={r['stacked_dispatches']}, "
+                      f"sequential_ms={r['sequential_ms']:.2f} "
+                      f"stacked_ms={r['stacked_ms']:.2f} "
+                      f"throughput={r['throughput_x']:.2f}x")
+            elif "speedup" in r:
+                print(f"{r['query']},{r['rows']},{r['eager_ms']:.2f},"
+                      f"{r['compiled_ms']:.2f},{r['speedup']:.2f}")
+            elif "query" in r:
+                print(f"# {r['query']}: rows={r['rows']} "
+                      f"greedy_max_bucket={r['greedy_max_bucket']} "
+                      f"stats_max_bucket={r['stats_max_bucket']} "
+                      f"greedy_ms={r['greedy_ms']:.2f} "
+                      f"stats_ms={r['stats_ms']:.2f}")
+            else:
+                print(f"# {r}")
+        # batched-throughput artifact (CI uploads it; see .github/workflows)
+        with open("BENCH_4.json", "w") as f:
+            json.dump({"scale": scale, "repeats": repeats,
+                       "batched": batched_records}, f, indent=2)
+        print("# wrote BENCH_4.json")
+    # D1: sharded vs single-device execution, 1 vs 4 forced host devices.
+    # Runs on CPU too (subprocesses force the device count); prints the
+    # shard-count scaling and asserts the per-shard bucket win.
+    sharded_records = bench_sharded(scale, repeats)
+    for r in sharded_records:
+        print(f"# {r['query']}: rows={r['rows']} "
+              f"single_ms={r['single_ms']:.2f} "
+              f"sharded_1dev_ms={r['sharded_1dev_ms']:.2f} "
+              f"sharded_4dev_ms={r['sharded_4dev_ms']:.2f} "
+              f"per_shard_max_bucket={r['per_shard_max_bucket']} "
+              f"single_max_bucket={r['single_max_bucket']}")
+    with open("BENCH_5.json", "w") as f:
         json.dump({"scale": scale, "repeats": repeats,
-                   "batched": batched_records}, f, indent=2)
-    print("# wrote BENCH_4.json")
+                   "device_counts": list(D1_DEVICE_COUNTS),
+                   "sharded": sharded_records}, f, indent=2)
+    print("# wrote BENCH_5.json")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,78 @@
+"""Subprocess body for the D1 bench shape: sharded vs single-device LUBM.
+
+Runs in its own process so the host device count can be forced before jax
+imports (bench_query.py spawns it at n_dev=1 and n_dev=4 and reports the
+shard-count scaling). For every join-heavy bench query it measures the
+warm per-query latency of both engines and records the max join bucket
+each one compiled — the structural claim (asserted by the caller at
+n_dev > 1) is that the PER-SHARD bucket sits strictly below the
+single-device bucket, i.e. per-device join memory shrinks with the mesh.
+
+Usage: bench_sharded_prog.py [n_devices] [scale] [repeats]
+Emits one `BENCH_JSON: {...}` line on stdout.
+"""
+import json
+import os
+import sys
+import time
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+SCALE = int(sys.argv[2]) if len(sys.argv) > 2 else 1
+REPEATS = int(sys.argv[3]) if len(sys.argv) > 3 else 3
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+from repro.sparql import lubm  # noqa: E402
+from repro.sparql.engine import QueryEngine, ShardedQueryEngine  # noqa: E402
+from repro.sparql.sharded_store import shard_store  # noqa: E402
+
+D1_QUERIES = ("Q2", "Q7", "Q9", "J1")
+
+
+def _time(fn, repeat):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+def main() -> None:
+    assert jax.device_count() == N_DEV, (jax.device_count(), N_DEV)
+    store = lubm.generate(scale=SCALE, seed=0, join_shapes=True)
+    single = QueryEngine(store)
+    sharded = ShardedQueryEngine(shard_store(store, N_DEV))
+    queries = {**lubm.QUERIES, **lubm.J_QUERIES}
+    records = []
+    for name in D1_QUERIES:
+        text = queries[name]
+        pq_si = single.prepare(text)
+        pq_sh = sharded.prepare(text)
+        rows_si = pq_si.run()
+        rows_sh = pq_sh.run()
+        assert len(rows_si) == len(rows_sh), (name, len(rows_si),
+                                              len(rows_sh))
+        warm_si = pq_si.run()
+        warm_sh = pq_sh.run()
+        assert warm_sh.stats.n_dispatches == 1 and (
+            warm_sh.stats.n_compiles == 0
+        ), (name, warm_sh.stats)
+        records.append({
+            "query": name,
+            "n_dev": N_DEV,
+            "rows": len(rows_sh),
+            "single_ms": _time(pq_si.run, REPEATS) * 1e3,
+            "sharded_ms": _time(pq_sh.run, REPEATS) * 1e3,
+            "single_max_bucket": warm_si.stats.peak_join_bucket,
+            "per_shard_max_bucket": warm_sh.stats.peak_join_bucket,
+        })
+    print("BENCH_JSON: " + json.dumps({"n_dev": N_DEV, "scale": SCALE,
+                                       "records": records}))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,14 +4,19 @@ dry-run lowers, executed for real on host devices.
 
     PYTHONPATH=src python examples/distributed_join.py
 """
-import jax
+import os
 
-jax.config.update("jax_num_cpu_devices", 8)
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
 
-import numpy as np
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
-from repro.core.distributed import make_distributed_join
-from repro.core.relation import Relation
+from repro.core import compat  # noqa: E402
+from repro.core.distributed import make_distributed_join  # noqa: E402
+from repro.core.relation import Relation  # noqa: E402
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 n = 1 << 12
@@ -26,7 +31,7 @@ join = make_distributed_join(mesh, ("data", "model"), bucket_capacity=2048,
                              join_capacity=1 << 16,
                              left_schema=("?x", "?y"),
                              right_schema=("?y", "?z"))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out, totals, overflows = join(left, right)
 per_shard = np.asarray(totals)
 print(f"8 shards hold {per_shard.sum()} join rows "

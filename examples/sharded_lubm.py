@@ -1,0 +1,41 @@
+"""Open a LUBM store SHARDED over the local devices and query it.
+
+The triple set is subject-hash partitioned across a device mesh; every
+warm query executes as ONE shard_map dispatch — scans read shard-local
+partitions, each MapReduce join hash-shuffles by its key over the mesh
+(all_to_all) then joins locally, and results gather back to host.
+
+    PYTHONPATH=src python examples/sharded_lubm.py
+
+(The XLA flag below fakes 4 host devices so the example runs on CPU;
+on a real TPU/GPU mesh, drop it and the mesh spans the actual chips.)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+from repro.sparql import lubm  # noqa: E402
+from repro.sparql.engine import ShardedQueryEngine  # noqa: E402
+from repro.sparql.sharded_store import shard_store  # noqa: E402
+
+store = lubm.generate(scale=1, seed=0)
+sharded = shard_store(store, n_shards=jax.device_count())
+print(f"{len(store)} triples over {sharded.n_shards} shards: "
+      f"{sharded.shard_sizes()} triples per shard")
+
+engine = ShardedQueryEngine(sharded)
+pq = engine.prepare(lubm.QUERIES["Q2"])
+
+rows = pq.run()  # cold: calibrates buckets, compiles the mesh program
+warm = pq.run()  # warm: ONE shard_map dispatch, zero compiles
+print(f"Q2: {len(rows)} rows; warm run = {warm.stats.n_dispatches} "
+      f"dispatch, {warm.stats.n_compiles} compiles, per-shard max join "
+      f"bucket {warm.stats.peak_join_bucket}")
+
+# the plan report now shows per-shard rows and join/shuffle buckets
+print(pq.explain())

@@ -13,6 +13,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.data.tokens import Prefetcher, TokenPipeline
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
@@ -55,7 +56,7 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
         TrainSettings(total_steps=args.steps, ckpt_every=50, log_every=20),
         to_device=lambda _: to_dev(next(pf)),
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         hist = trainer.run()
 pf.close()
 first = [h["loss"] for h in hist[:10]]

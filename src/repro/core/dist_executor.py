@@ -1,0 +1,413 @@
+"""Distributed executor: one shard_map dispatch for the whole plan tree.
+
+`core/executor.py` lowers a PhysicalPlan to a single-device program; this
+module lowers the SAME plan IR to a mesh program, so the parser, algebra,
+optimizer, plan-shape cache and bucket-calibration layers above stay
+unchanged. Inside the one `shard_map`-wrapped dispatch:
+
+  * Scan    — reads the shard-local partition of the sharded store's flat
+              (n_shards * cap) scan buffer (the in_spec splits on exactly
+              the per-shard row blocks the store laid out);
+  * MRJoin  — the paper's Map phase becomes a hash shuffle over the mesh
+              (core/distributed.shuffle_by_key: bucketize + all_to_all on
+              the join key), then each shard runs the local Algorithm-1
+              sort/ReduceDuplicate join — the cascading map-side join
+              pattern, one shuffle per join step;
+  * LeftJoin— both sides shuffle by the shared vars, then the local
+              left join; unmatched-left padding is globally correct
+              because every left row meets ALL right rows of its key;
+  * CrossJoin — the right side is all_gathered (replicated) and each
+              shard crosses its local left slice against it;
+  * Filter / Project / UnionAll — purely row-local, unchanged;
+  * Distinct — rows are shuffled by a hash of ALL columns (equal rows
+              co-locate) before the local dedup, at its own calibrated
+              per-shard bucket — a tracked shuffle site, regrown from
+              the exact need on skew like the join shuffles, so
+              per-device DISTINCT memory shrinks with the mesh too;
+  * Slice   — LIMIT/OFFSET against the GLOBAL valid-row rank: per-shard
+              counts are all_gathered, each shard offsets its local
+              cumulative rank by the rows on earlier shards (the order
+              results gather to host in).
+
+Everything dynamic rides back in the same dispatch, per shard: exact join
+totals, join-bucket overflow flags, exact shuffle bucket needs (worst
+per-destination load) and shuffle overflow flags. The engine's only host
+sync reads the flags; on overflow it regrows the flagged bucket from the
+exact per-shard numbers and recompiles — the single-device overflow/
+regrow fallback, now per shard.
+
+Static shapes are all PER-SHARD: scan caps, join bucket caps and shuffle
+bucket caps describe one shard's slice, which is what makes the memory
+footprint scale down with the mesh (the D1 benchmark asserts the
+per-shard max join bucket sits strictly below the single-device bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
+from repro.core import distributed as dj
+from repro.core import mr_join as mj
+from repro.core.plan_ir import (
+    CrossJoin,
+    Distinct,
+    Filter,
+    LeftJoin,
+    MRJoin,
+    PhysicalPlan,
+    PlanNode,
+    Project,
+    Scan,
+    Slice,
+    UnionAll,
+)
+from repro.core.relation import Relation
+
+
+class ShardedChainResult(NamedTuple):
+    """Everything one sharded dispatch returns (device-resident).
+
+    `relation` rows gather over shards (shard k's slice is row block k);
+    the per-join and per-shuffle accounting keeps the shard axis so the
+    host can regrow buckets from the worst shard's exact numbers.
+    """
+
+    relation: Relation  # rows sharded: (n_shards * cap_out, n_cols)
+    totals: jax.Array  # (n_shards, n_joins) exact local join totals
+    overflows: jax.Array  # (n_shards, n_joins) join bucket truncated
+    shuffle_needs: jax.Array  # (n_shards, n_sites) exact worst dest load
+    shuffle_flags: jax.Array  # (n_shards, n_sites) shuffle bucket dropped
+
+
+def n_shuffle_sites(plan: PhysicalPlan) -> int:
+    """Shuffle sites in evaluation order: one per join step (MRJoin /
+    LeftJoin / CrossJoin — the cross join's slot is structural) plus one
+    per Distinct (the shuffle that co-locates equal rows)."""
+    from repro.core.plan_ir import child_nodes
+
+    count = 0
+    seen: set[int] = set()
+
+    def walk(node: PlanNode) -> None:
+        nonlocal count
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        for child in child_nodes(node):
+            walk(child)
+        if isinstance(node, (MRJoin, LeftJoin, CrossJoin, Distinct)):
+            count += 1
+
+    walk(plan.root)
+    return count
+
+
+def initial_shuffle_caps(
+    plan: PhysicalPlan, n_shards: int, floor: int = 8
+) -> tuple[int, ...]:
+    """Starting shuffle bucket per site: the uniform-distribution
+    estimate (worst input capacity / n_shards, pow-2 bucketed). Skewed
+    keys overflow the first dispatch, which reports the exact need —
+    one regrow converges, exactly like the join buckets."""
+    from repro.core.plan_ir import bucket_capacity, child_nodes
+
+    caps: list[int] = []
+    seen: set[int] = set()
+
+    def walk(node: PlanNode) -> None:
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        for child in child_nodes(node):
+            walk(child)
+        if isinstance(node, (MRJoin, LeftJoin, CrossJoin)):
+            worst = max(node.left.capacity, node.right.capacity)
+            caps.append(
+                bucket_capacity(max(floor, -(-worst // n_shards)))
+            )
+        elif isinstance(node, Distinct):
+            caps.append(
+                bucket_capacity(
+                    max(floor, -(-node.capacity // n_shards))
+                )
+            )
+
+    walk(plan.root)
+    return tuple(caps)
+
+
+def lower_sharded(
+    plan: PhysicalPlan,
+    mesh: jax.sharding.Mesh,
+    axis_names: tuple[str, ...],
+    shuffle_caps: tuple[int, ...],
+    use_kernel: bool = False,
+) -> Callable[..., ShardedChainResult]:
+    """Plan tree -> shard_mapped function of (scans, consts_i, consts_f,
+    num_vals) with the same call signature as the single-device program.
+
+    Join/shuffle accounting is collected in evaluation order — the same
+    order `build_plan` consumes join_caps in. `shuffle_caps` carries one
+    slot per shuffle site (`n_shuffle_sites`): the join steps in
+    join_caps order (cross joins keep a structural slot whose cap is
+    unused) plus one per Distinct node."""
+    n_shards = 1
+    for a in axis_names:
+        n_shards *= mesh.shape[a]
+
+    def flat_rank() -> jax.Array:
+        rank = jnp.int32(0)
+        for a in axis_names:
+            rank = rank * compat.axis_size(a) + jax.lax.axis_index(a)
+        return rank
+
+    def gather_rows(x: jax.Array) -> jax.Array:
+        """all_gather rows over the mesh, ordered by flat shard rank."""
+        for a in reversed(axis_names):
+            x = jax.lax.all_gather(x, a, axis=0, tiled=True)
+        return x
+
+    def local_run(
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+    ) -> ShardedChainResult:
+        totals: list[jax.Array] = []
+        flags: list[jax.Array] = []
+        sh_needs: list[jax.Array] = []
+        sh_flags: list[jax.Array] = []
+        site = iter(shuffle_caps)
+        memo: dict[int, Relation] = {}
+
+        def shuffle(rel: Relation, key_vars, cap: int):
+            idx = [rel.schema.index(v) for v in key_vars]
+            cols, valid, ov, need = dj.shuffle_by_key(
+                rel.cols, rel.valid, idx, axis_names, cap
+            )
+            return Relation(rel.schema, cols, valid), ov, need
+
+        def eval_node(node: PlanNode) -> Relation:
+            hit = memo.get(id(node))
+            if hit is not None:
+                return hit
+            rel = _eval(node)
+            memo[id(node)] = rel
+            return rel
+
+        def _eval(node: PlanNode) -> Relation:
+            if isinstance(node, Scan):
+                return scans[node.index]
+            if isinstance(node, MRJoin):
+                left = eval_node(node.left)
+                right = eval_node(node.right)
+                cap_sh = next(site)
+                left, ov_l, need_l = shuffle(left, node.key_vars, cap_sh)
+                right, ov_r, need_r = shuffle(right, node.key_vars, cap_sh)
+                out, total, ovf = mj.mr_join(
+                    left, right, capacity=node.capacity,
+                    use_kernel=use_kernel,
+                )
+                totals.append(total)
+                flags.append(ovf)
+                sh_needs.append(jnp.maximum(need_l, need_r))
+                sh_flags.append(ov_l | ov_r)
+                return out
+            if isinstance(node, CrossJoin):
+                left = eval_node(node.left)
+                right = eval_node(node.right)
+                next(site)  # structural slot; a gather has no bucket
+                r_all = Relation(
+                    right.schema,
+                    gather_rows(right.cols),
+                    gather_rows(right.valid),
+                )
+                # every (local-left, global-right) position is enumerated:
+                # exact, like the single-device cross join
+                out, total, ovf = mj.cross_join(
+                    left, r_all, capacity=left.capacity * r_all.capacity
+                )
+                totals.append(total)
+                flags.append(ovf)
+                sh_needs.append(jnp.int32(0))
+                sh_flags.append(jnp.bool_(False))
+                return mj.compact(out)
+            if isinstance(node, LeftJoin):
+                left = eval_node(node.left)
+                right = eval_node(node.right)
+                cap_sh = next(site)
+                left, ov_l, need_l = shuffle(left, node.key_vars, cap_sh)
+                right, ov_r, need_r = shuffle(right, node.key_vars, cap_sh)
+                out, total, ovf = mj.left_join(
+                    left, right, capacity=node.join_cap,
+                    use_kernel=use_kernel,
+                )
+                totals.append(total)
+                flags.append(ovf)
+                sh_needs.append(jnp.maximum(need_l, need_r))
+                sh_flags.append(ov_l | ov_r)
+                return out
+            if isinstance(node, Filter):
+                child = eval_node(node.child)
+                keep = mj.filter_mask(
+                    child, node.conds, consts_i, consts_f, num_vals
+                )
+                return Relation(child.schema, child.cols, keep)
+            if isinstance(node, UnionAll):
+                kids = [eval_node(c) for c in node.children]
+                return mj.union_all(kids, node.schema)
+            if isinstance(node, Project):
+                return eval_node(node.child).project(list(node.schema))
+            if isinstance(node, Distinct):
+                child = eval_node(node.child)
+                cap_sh = next(site)
+                if n_shards > 1 and child.n_cols:
+                    # co-locate equal rows at a calibrated per-shard
+                    # bucket (skew regrows from the exact need, like the
+                    # join shuffles) — per-device DISTINCT memory shrinks
+                    # with the mesh instead of re-materialising the
+                    # global relation on every shard
+                    child, ov, need = shuffle(
+                        child, child.schema, cap_sh
+                    )
+                    sh_needs.append(need)
+                    sh_flags.append(ov)
+                else:
+                    sh_needs.append(jnp.int32(0))
+                    sh_flags.append(jnp.bool_(False))
+                return mj.distinct(child)
+            if isinstance(node, Slice):
+                child = eval_node(node.child)
+                count = child.count().astype(jnp.int32)
+                counts = gather_rows(count[None])  # (n_shards,)
+                my = flat_rank()
+                prev = jnp.sum(
+                    jnp.where(
+                        jnp.arange(n_shards) < my, counts, 0
+                    )
+                )
+                offset = consts_i[node.offset_index]
+                limit = consts_i[node.limit_index]
+                rank = prev + jnp.cumsum(child.valid.astype(jnp.int32))
+                keep = (
+                    child.valid
+                    & (rank > offset)
+                    & (rank <= offset + limit)
+                )
+                return Relation(child.schema, child.cols, keep)
+            raise TypeError(f"unknown plan node {node!r}")
+
+        rel = eval_node(plan.root)
+        n_joins = len(totals)
+        totals_arr = (
+            jnp.stack(totals)[None] if totals
+            else jnp.zeros((1, 0), jnp.int32)
+        )
+        flags_arr = (
+            jnp.stack(flags)[None] if flags
+            else jnp.zeros((1, 0), bool)
+        )
+        needs_arr = (
+            jnp.stack(sh_needs)[None] if sh_needs
+            else jnp.zeros((1, 0), jnp.int32)
+        )
+        sh_flags_arr = (
+            jnp.stack(sh_flags)[None] if sh_flags
+            else jnp.zeros((1, 0), bool)
+        )
+        assert n_joins == len(plan.join_caps), (n_joins, plan.join_caps)
+        assert len(sh_needs) == len(shuffle_caps), (
+            len(sh_needs), shuffle_caps,
+        )
+        return ShardedChainResult(
+            rel, totals_arr, flags_arr, needs_arr, sh_flags_arr
+        )
+
+    row = P(axis_names)
+    scan_specs = tuple(
+        Relation(node_schema, row, row)
+        for node_schema in _scan_schemas(plan)
+    )
+    rep = P()
+    out_specs = ShardedChainResult(
+        Relation(plan.root.schema, row, row), row, row, row, row
+    )
+    return compat.shard_map(
+        local_run,
+        mesh=mesh,
+        in_specs=(scan_specs, rep, rep, rep),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+
+
+def _scan_schemas(plan: PhysicalPlan) -> list[tuple[str, ...]]:
+    """Scan schemas by scan index (for the in_spec pytree)."""
+    from repro.core.plan_ir import child_nodes
+
+    out: dict[int, tuple[str, ...]] = {}
+    seen: set[int] = set()
+
+    def walk(node: PlanNode) -> None:
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        if isinstance(node, Scan):
+            out[node.index] = node.schema
+        for child in child_nodes(node):
+            walk(child)
+
+    walk(plan.root)
+    return [out[i] for i in range(plan.n_scans)]
+
+
+@dataclasses.dataclass
+class CompiledShardedPlan:
+    """An XLA mesh executable specialised on one (shape, per-shard join
+    caps, per-shard shuffle caps) point. Call-compatible with
+    executor.CompiledPlan so the engine's cache entries can hold either."""
+
+    plan: PhysicalPlan
+    shuffle_caps: tuple[int, ...]
+    n_shards: int
+    executable: Any  # jax.stages.Compiled
+
+    def __call__(
+        self,
+        scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+    ) -> ShardedChainResult:
+        return self.executable(scans, consts_i, consts_f, num_vals)
+
+
+def compile_sharded_plan(
+    plan: PhysicalPlan,
+    mesh: jax.sharding.Mesh,
+    axis_names: tuple[str, ...],
+    shuffle_caps: tuple[int, ...],
+    scans: tuple[Relation, ...],
+    consts_i: jax.Array,
+    consts_f: jax.Array,
+    num_vals: jax.Array,
+    use_kernel: bool = False,
+) -> CompiledShardedPlan:
+    """AOT-compile the sharded program against the inputs' static shapes
+    (compilation is the only XLA entry point, so the engine's n_compiles
+    accounting stays exact — warm queries must report zero)."""
+    n_shards = 1
+    for a in axis_names:
+        n_shards *= mesh.shape[a]
+    fn = jax.jit(
+        lower_sharded(
+            plan, mesh, axis_names, shuffle_caps, use_kernel=use_kernel
+        )
+    )
+    executable = fn.lower(scans, consts_i, consts_f, num_vals).compile()
+    return CompiledShardedPlan(plan, shuffle_caps, n_shards, executable)

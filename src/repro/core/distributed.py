@@ -16,6 +16,7 @@ from functools import partial, reduce
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core import mr_join as mj
 from repro.core.relation import Relation
 from repro.core.segments import segment_offsets_from_sorted
@@ -36,8 +37,12 @@ def bucketize(cols: jax.Array, valid: jax.Array, part: jax.Array, num_parts: int
               bucket_capacity: int):
     """Pack rows into per-destination buckets (static shapes).
 
-    Returns (buf (P, cap, C), bvalid (P, cap), overflowed ()).
-    Rows beyond a destination's capacity are dropped and flagged.
+    Returns (buf (P, cap, C), bvalid (P, cap), overflowed (), max_load ()).
+    Rows beyond a destination's capacity are dropped and flagged;
+    `max_load` is the EXACT largest per-destination row count (valid rows
+    only, before the capacity clamp), so an overflowed shuffle bucket can
+    be regrown to the needed size in one step — the same
+    exact-totals-on-overflow discipline the join buckets use.
     """
     n, c = cols.shape
     part = jnp.where(valid, part, num_parts).astype(jnp.int32)
@@ -53,18 +58,21 @@ def bucketize(cols: jax.Array, valid: jax.Array, part: jax.Array, num_parts: int
     buf = buf.at[slot].set(jnp.where(ok[:, None], cols_s, 0), mode="drop")
     bvalid = jnp.zeros((num_parts * bucket_capacity,), bool).at[slot].set(ok, mode="drop")
     overflowed = jnp.any((part_s < num_parts) & valid_s & (pos >= bucket_capacity))
+    max_load = jnp.max(offsets[1:] - offsets[:-1])
     return (
         buf.reshape(num_parts, bucket_capacity, c),
         bvalid.reshape(num_parts, bucket_capacity),
         overflowed,
+        max_load,
     )
 
 
 def _shuffle_one_axis(cols, valid, dest_along_axis, axis_name, bucket_capacity):
     """Route rows to `dest_along_axis` coordinates over one mesh axis."""
-    size = jax.lax.axis_size(axis_name)
-    buf, bvalid, overflowed = bucketize(cols, valid, dest_along_axis, size,
-                                        bucket_capacity)
+    size = compat.axis_size(axis_name)
+    buf, bvalid, overflowed, max_load = bucketize(
+        cols, valid, dest_along_axis, size, bucket_capacity
+    )
     buf = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0, tiled=False)
     bvalid = jax.lax.all_to_all(bvalid, axis_name, split_axis=0, concat_axis=0,
                                 tiled=False)
@@ -73,6 +81,7 @@ def _shuffle_one_axis(cols, valid, dest_along_axis, axis_name, bucket_capacity):
         buf.reshape(size * bucket_capacity, n_cols),
         bvalid.reshape(size * bucket_capacity),
         overflowed,
+        max_load,
     )
 
 
@@ -88,20 +97,26 @@ def shuffle_by_key(cols: jax.Array, valid: jax.Array, key_idx: list[int],
     instead of shipping a separate key copy + precomputed destination —
     the destination is recomputed from the payload at each stage, cutting
     shuffle bytes by (k+1)/(c+k+1) (50% for the 2-col relations here).
+
+    Returns (cols, valid, overflowed, need) where `need` is this shard's
+    exact worst per-destination load across the stages — pmax it over the
+    mesh to get the bucket capacity a retry dispatch must compile at.
     """
-    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    sizes = [compat.axis_size(a) for a in axis_names]
     total = reduce(lambda a, b: a * b, sizes, 1)
     overflow = jnp.bool_(False)
+    need = jnp.int32(0)
     # decompose dest into per-axis coordinates (row-major over axis_names)
     for k, axis in enumerate(axis_names):
         dest = (hash_keys(cols[:, key_idx]) % jnp.uint32(total)).astype(
             jnp.int32)
         inner = reduce(lambda a, b: a * b, sizes[k + 1:], 1)
         coord = (dest // inner) % sizes[k]
-        cols, valid, ov = _shuffle_one_axis(cols, valid, coord, axis,
-                                            bucket_capacity)
+        cols, valid, ov, max_load = _shuffle_one_axis(cols, valid, coord, axis,
+                                                      bucket_capacity)
         overflow = overflow | ov
-    return cols, valid, overflow
+        need = jnp.maximum(need, max_load.astype(jnp.int32))
+    return cols, valid, overflow, need
 
 
 def distributed_mr_join(
@@ -122,10 +137,10 @@ def distributed_mr_join(
         raise ValueError("distributed cross join not supported")
     l_idx = [left.schema.index(v) for v in key_vars]
     r_idx = [right.schema.index(v) for v in key_vars]
-    l_cols, l_valid, ov_l = shuffle_by_key(left.cols, left.valid, l_idx,
-                                           axis_names, bucket_capacity)
-    r_cols, r_valid, ov_r = shuffle_by_key(right.cols, right.valid, r_idx,
-                                           axis_names, bucket_capacity)
+    l_cols, l_valid, ov_l, _ = shuffle_by_key(left.cols, left.valid, l_idx,
+                                              axis_names, bucket_capacity)
+    r_cols, r_valid, ov_r, _ = shuffle_by_key(right.cols, right.valid, r_idx,
+                                              axis_names, bucket_capacity)
     l_rel = Relation(left.schema, l_cols, l_valid)
     r_rel = Relation(right.schema, r_cols, r_valid)
     out, total, ov_j = mj.mr_join(l_rel, r_rel, join_capacity)
@@ -155,8 +170,8 @@ def make_distributed_join_fn(mesh: jax.sharding.Mesh,
                                              bucket_capacity, join_capacity)
         return out, total[None], ov[None]
 
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=specs_in,
-                         out_specs=specs_out, check_vma=False)
+    return compat.shard_map(local_fn, mesh=mesh, in_specs=specs_in,
+                            out_specs=specs_out, check_vma=False)
 
 
 def make_distributed_join(mesh: jax.sharding.Mesh, axis_names: tuple[str, ...],

@@ -196,7 +196,9 @@ def compile_plan(
 
 
 def lower_batched(
-    plan: PhysicalPlan, use_kernel: bool = False
+    plan: PhysicalPlan,
+    use_kernel: bool = False,
+    scan_axes: "tuple[int | None, ...] | None" = None,
 ) -> Callable[..., ChainResult]:
     """Stacked variant of `lower`: one dispatch executes a whole lane batch
     of same-shape queries.
@@ -209,8 +211,15 @@ def lower_batched(
     join expansion, OPTIONAL unmatched-left padding, UNION concatenation —
     can emit a valid row for it, and its overflow flags are suppressed so
     padding can never trigger a bucket regrow.
+
+    `scan_axes` is the per-scan vmap axis: 0 for a stacked (width, cap,
+    n_cols) buffer, None for a BROADCAST scan every lane shares — the
+    same-query-different-FILTER batch ships each such scan's device buffer
+    once instead of W stacked copies, cutting staging memory by the batch
+    width at those positions. Default: all stacked.
     """
     base = lower(plan, use_kernel=use_kernel)
+    axes = scan_axes if scan_axes is not None else (0,) * plan.n_scans
 
     def run_lane(
         scans: tuple[Relation, ...],
@@ -225,20 +234,22 @@ def lower_batched(
         rel, totals, flags = base(masked, consts_i, consts_f, num_vals)
         return ChainResult(rel, totals, flags & active)
 
-    return jax.vmap(run_lane, in_axes=(0, 0, 0, None, 0))
+    return jax.vmap(run_lane, in_axes=(tuple(axes), 0, 0, None, 0))
 
 
 @dataclasses.dataclass
 class CompiledBatch:
     """A width-W stacked executable for one (shape, join-caps) point.
 
-    Same specialisation as CompiledPlan plus the batch width: any group of
-    <= W same-shape queries dispatches through it (trailing lanes padded,
-    masked inactive)."""
+    Same specialisation as CompiledPlan plus the batch width and the
+    per-scan stacked/broadcast layout: any group of <= W same-shape
+    queries whose scans stack the same way dispatches through it
+    (trailing lanes padded, masked inactive)."""
 
     plan: PhysicalPlan
     width: int
     executable: Any  # jax.stages.Compiled
+    scan_axes: "tuple[int | None, ...]" = ()
 
     def __call__(
         self,
@@ -259,13 +270,21 @@ def compile_plan_batched(
     num_vals: jax.Array,
     lane_active: jax.Array,
     use_kernel: bool = False,
+    scan_axes: "tuple[int | None, ...] | None" = None,
 ) -> CompiledBatch:
-    """AOT-compile the stacked variant at the inputs' batch width."""
-    fn = jax.jit(lower_batched(plan, use_kernel=use_kernel))
+    """AOT-compile the stacked variant at the inputs' batch width (scans
+    at a None axis in `scan_axes` must arrive UNstacked, (cap, n_cols))."""
+    if scan_axes is None:
+        scan_axes = (0,) * plan.n_scans
+    fn = jax.jit(
+        lower_batched(plan, use_kernel=use_kernel, scan_axes=scan_axes)
+    )
     executable = fn.lower(
         scans, consts_i, consts_f, num_vals, lane_active
     ).compile()
-    return CompiledBatch(plan, int(lane_active.shape[0]), executable)
+    return CompiledBatch(
+        plan, int(lane_active.shape[0]), executable, tuple(scan_axes)
+    )
 
 
 def execute_plan(

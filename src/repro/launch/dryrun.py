@@ -25,6 +25,7 @@ import jax
 
 from repro.configs.registry import ARCHS, SHAPES_FOR, build_cell
 from repro.launch.mesh import make_production_mesh
+from repro.core import compat
 
 # TPU v5e-like hardware constants (per chip) — see EXPERIMENTS.md §Roofline.
 PEAK_FLOPS = 197e12  # bf16
@@ -93,7 +94,7 @@ def parse_collectives(hlo_text: str) -> dict:
 def _compile_cell(arch, shape, multi_pod, mesh, n_layers=None):
     cell = build_cell(arch, shape, mesh, multi_pod, n_layers=n_layers)
     jf = jax.jit(cell.fn, donate_argnums=cell.donate)
-    with jax.set_mesh(mesh):  # PartitionSpec-based constraints resolve here
+    with compat.set_mesh(mesh):  # PartitionSpec constraints resolve here
         t0 = time.time()
         lowered = jf.lower(*cell.inputs)
         t_lower = time.time() - t0

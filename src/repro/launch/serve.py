@@ -10,16 +10,30 @@ import argparse
 
 import jax
 import numpy as np
+from repro.core import compat
 
 
-def serve_sparql(scale: int, n_queries: int) -> None:
+def serve_sparql(scale: int, n_queries: int, shards: int = 0) -> None:
+    """`shards > 0` opens the store SHARDED: subject-hash partitioned over
+    a `shards`-device mesh, queries served by the distributed executor
+    (one shard_map dispatch per warm query). Force host devices first,
+    e.g. XLA_FLAGS=--xla_force_host_platform_device_count=4 for CPU."""
     from repro.serve.sparql_server import SPARQLServer
-    from repro.sparql.engine import QueryEngine
+    from repro.sparql.engine import QueryEngine, ShardedQueryEngine
     from repro.sparql.lubm import QUERIES, generate
 
     store = generate(scale=scale)
     print(f"LUBM-ish store: {len(store)} triples")
-    srv = SPARQLServer(QueryEngine(store))
+    if shards > 0:
+        from repro.sparql.sharded_store import shard_store
+
+        sharded = shard_store(store, shards)
+        print(f"sharded over {shards} device(s): "
+              f"per-shard triples {sharded.shard_sizes()}")
+        engine: QueryEngine = ShardedQueryEngine(sharded)
+    else:
+        engine = QueryEngine(store)
+    srv = SPARQLServer(engine)
     import threading
 
     results = {}
@@ -56,7 +70,7 @@ def serve_lm(arch: str) -> None:
     params = T.init_params(jax.random.PRNGKey(0), cfg,
                            ep=mesh.shape["model"])
     gen = Generator(cfg, params, mesh, max_len=64)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         prompts = np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab
         out = gen.generate(prompts, n_new=16)
     print("generated:", out.shape)
@@ -69,9 +83,12 @@ def main() -> None:
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--scale", type=int, default=2)
     ap.add_argument("--n-queries", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="open the store sharded over this many devices "
+                         "(0 = single-device store)")
     args = ap.parse_args()
     if args.mode == "sparql":
-        serve_sparql(args.scale, args.n_queries)
+        serve_sparql(args.scale, args.n_queries, args.shards)
     else:
         serve_lm(args.arch)
 

@@ -14,6 +14,7 @@ import jax
 import numpy as np
 
 from repro.launch.mesh import make_local_mesh
+from repro.core import compat
 
 
 def reduced_lm(cfg, vocab=512):
@@ -63,7 +64,7 @@ def main() -> None:
         TrainSettings(total_steps=args.steps, ckpt_every=args.ckpt_every),
     )
     tr.resume_if_possible()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         hist = tr.run()
     print(f"final loss: {hist[-1]['loss']:.4f} (step {hist[-1]['step']})")
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.models.moe import gather_from_buckets, route_plan, \
     scatter_to_buckets
 
@@ -28,12 +29,12 @@ from repro.models.moe import gather_from_buckets, route_plan, \
 def _flat_rank(axes: tuple[str, ...]) -> jax.Array:
     rank = jnp.int32(0)
     for a in axes:
-        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        rank = rank * compat.axis_size(a) + jax.lax.axis_index(a)
     return rank
 
 
 def _ndev(axes: tuple[str, ...]) -> int:
-    return reduce(lambda x, a: x * jax.lax.axis_size(a), axes, 1)
+    return reduce(lambda x, a: x * compat.axis_size(a), axes, 1)
 
 
 def _gather_local(x_local, ids, valid, *, axes, cap):
@@ -72,7 +73,7 @@ def _scatter_local(msgs, dst, valid, *, axes, cap, n_nodes):
 
 
 def _cap_for(n_requests: int, axes: tuple[str, ...], cf: float = 2.0) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.ambient_mesh()
     ndev = 1
     for a in axes:
         ndev *= mesh.shape[a]
@@ -85,7 +86,7 @@ def gather_nodes(x: jax.Array, ids: jax.Array, valid: jax.Array,
     """x: (N, d) sharded P(axes, None); ids/valid: (E,) sharded P(axes).
     Returns (E, d) rows, edge-sharded. O(E·d/ndev) traffic per device."""
     cap = _cap_for(ids.shape[0], axes)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         partial(_gather_local, axes=axes, cap=cap),
         in_specs=(P(axes, None), P(axes), P(axes)),
         out_specs=P(axes, None),
@@ -98,7 +99,7 @@ def scatter_add_nodes(msgs: jax.Array, dst: jax.Array, valid: jax.Array,
                       n_nodes: int, axes: tuple[str, ...]) -> jax.Array:
     """msgs: (E, d) edge-sharded; returns (N, d) node table P(axes, None)."""
     cap = _cap_for(dst.shape[0], axes)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         partial(_scatter_local, axes=axes, cap=cap, n_nodes=n_nodes),
         in_specs=(P(axes, None), P(axes), P(axes)),
         out_specs=P(axes, None),

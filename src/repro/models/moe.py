@@ -31,6 +31,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 from repro.core.segments import segment_offsets_from_sorted
 
 
@@ -114,7 +116,7 @@ def moe_ffn_ep_local(
     once per data-parallel group; gradients are exact).
     p: this device's expert shard — we_*: (e_local, ...), router replicated.
     """
-    ep = jax.lax.axis_size(expert_axis)
+    ep = compat.axis_size(expert_axis)
     er = jax.lax.axis_index(expert_axis)
     b, s_loc, d = x.shape
     t_my = b * s_loc

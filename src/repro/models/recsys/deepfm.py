@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import moe as M
 from repro.models.gnn.common import init_mlp, mlp
+from repro.core import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +75,7 @@ def _sharded_lookup_local(table_shard, ids, *, expert_axis: str, cap: int):
     ids: (n_local,) — this chip's slice of the flattened id stream.
     Returns (n_local, D) embedding rows.
     """
-    ep = jax.lax.axis_size(expert_axis)
+    ep = compat.axis_size(expert_axis)
     er = jax.lax.axis_index(expert_axis)
     r_local = table_shard.shape[0]
     n = ids.shape[0]
@@ -94,7 +95,7 @@ def make_sharded_lookup(mesh, dp: tuple[str, ...], cap: int):
     """jit-compatible distributed lookup: ids (n_flat,) sharded over
     (dp..., model) jointly; table (R, D) row-sharded on model."""
     spec_ids = P(dp + ("model",))
-    return jax.shard_map(
+    return compat.shard_map(
         partial(_sharded_lookup_local, expert_axis="model", cap=cap),
         mesh=mesh,
         in_specs=(P("model", None), spec_ids),

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.core import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,7 +267,7 @@ def _forward_trunk(
     if cfg.is_moe:
         moe_local = partial(M.moe_ffn_ep_local, st=st, expert_axis="model")
         token_spec = P(dp, "model", None)
-        moe_ep = jax.shard_map(
+        moe_ep = compat.shard_map(
             moe_local,
             mesh=mesh,
             in_specs=(_moe_specs_one_layer(cfg), token_spec),

@@ -106,19 +106,35 @@ class PlanCacheEntry:
     shape: plan_ir.PlanShape
     join_caps: tuple[int, ...]
     compiled: ex.CompiledPlan
-    # width -> stacked executable at THESE join caps (compiled on demand by
-    # run_batch; reset when an overflow regrow replaces the entry)
-    batched: dict[int, ex.CompiledBatch] = dataclasses.field(
+    # (width, per-scan stacked/broadcast axes) -> stacked executable at
+    # THESE join caps (compiled on demand by run_batch; reset when an
+    # overflow regrow replaces the entry)
+    batched: dict[tuple, ex.CompiledBatch] = dataclasses.field(
         default_factory=dict
     )
-    # widths persisted by a previous process (save_cache round-trips them
-    # even before this process serves its first stacked batch)
-    warm_widths: tuple[int, ...] = ()
+    # (width, axes) layouts persisted by a previous process (save_cache
+    # round-trips them even before this process serves a stacked batch);
+    # pre-layout files carried widths only — those load as all-stacked
+    warm_layouts: tuple[tuple, ...] = ()
 
     def widths(self) -> tuple[int, ...]:
         """Known stacked widths for this signature: compiled this process
-        plus persisted from the warmup file."""
-        return tuple(sorted(set(self.batched) | set(self.warm_widths)))
+        (at any scan layout) plus persisted from the warmup file."""
+        return tuple(
+            sorted(
+                {k[0] for k in self.batched}
+                | {w for w, _ in self.warm_layouts}
+            )
+        )
+
+    def layouts(self) -> tuple[tuple, ...]:
+        """Known (width, scan_axes) stacked layouts for this signature."""
+        return tuple(
+            sorted(
+                set(self.batched) | set(self.warm_layouts),
+                key=lambda k: (k[0], str(k[1])),
+            )
+        )
 
 
 class PlanCache:
@@ -177,6 +193,10 @@ class BatchGroupStats:
     n_compiles: int = 0
     cold: bool = False  # group paid calibration/compilation this batch
     fallback: bool = False  # stacked dispatch failed; ran sequentially
+    # scan positions shipped ONCE (vmap in_axes=None) because every lane's
+    # pattern was identical — the same-query-different-FILTER win: those
+    # buffers skip the W-copy stacking entirely
+    n_broadcast_scans: int = 0
 
 
 @dataclasses.dataclass
@@ -306,9 +326,10 @@ class QueryEngine:
         # here compiles directly at the saved capacities, skipping the
         # eager calibration run entirely
         self._warm_caps: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
-        # persisted stacked batch widths per shape; files written before
-        # run_batch existed simply have none (the key is optional)
-        self._warm_widths: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
+        # persisted stacked (width, scan_axes) layouts per shape; files
+        # written before run_batch existed simply have none, and files
+        # from before broadcast scans carry widths only (all-stacked)
+        self._warm_layouts: dict[plan_ir.PlanShape, tuple[tuple, ...]] = {}
         if self.warmup_path is not None:
             p = pathlib.Path(self.warmup_path)
             if p.exists():
@@ -318,9 +339,16 @@ class QueryEngine:
                     self._warm_caps[shape] = tuple(
                         int(c) for c in e["join_caps"]
                     )
-                    widths = tuple(int(w) for w in e.get("widths", ()))
-                    if widths:
-                        self._warm_widths[shape] = widths
+                    layouts = [
+                        (int(w), tuple(axes))
+                        for w, axes in e.get("layouts", ())
+                    ]
+                    stacked = (0,) * len(shape.scan_schemas)
+                    for w in e.get("widths", ()):
+                        if not any(lw == int(w) for lw, _ in layouts):
+                            layouts.append((int(w), stacked))
+                    if layouts:
+                        self._warm_layouts[shape] = tuple(layouts)
         # stacked-batch counters (cumulative; server stats report them)
         self.batch_width_hist: dict[int, int] = {}
         self.stacked_dispatches = 0
@@ -339,17 +367,22 @@ class QueryEngine:
         key is optional). Returns the number of signatures written.
         """
         entries = [
-            {
-                "shape": plan_ir.shape_to_jsonable(e.shape),
-                "join_caps": list(e.join_caps),
-                "widths": list(e.widths()),
-            }
-            for e in self.plan_cache.entries()
+            self._entry_jsonable(e) for e in self.plan_cache.entries()
         ]
         pathlib.Path(path).write_text(
             json.dumps({"version": 2, "entries": entries})
         )
         return len(entries)
+
+    def _entry_jsonable(self, e: PlanCacheEntry) -> dict:
+        """One warmup-file entry (the sharded engine appends its shuffle
+        bucket caps here — keep the base format in one place)."""
+        return {
+            "shape": plan_ir.shape_to_jsonable(e.shape),
+            "join_caps": list(e.join_caps),
+            "widths": list(e.widths()),
+            "layouts": [[w, list(axes)] for w, axes in e.layouts()],
+        }
 
     # -- public API --------------------------------------------------------
     def prepare(self, text: str) -> PreparedQuery:
@@ -496,15 +529,31 @@ class QueryEngine:
         width = plan_ir.bucket_width(n, self.max_batch_width)
         # pad trailing lanes with lane 0's inputs; lane_active masks them
         lanes = [ctxs[i] for i in chunk] + [ctxs[chunk[0]]] * (width - n)
-        scans_b = tuple(
-            Relation(
-                shape.scan_schemas[j],
-                *self.store.stacked_scan_device(
-                    tuple(c.prog.patterns[j] for c in lanes)
-                ),
-            )
-            for j in range(len(shape.scan_schemas))
-        )
+        # per scan position: if every lane scans the SAME pattern (e.g. a
+        # batch differing only in FILTER constants), ship the device
+        # buffer once and let vmap broadcast it (in_axes=None) instead of
+        # staging W stacked copies
+        scans_b: list[Relation] = []
+        axes: list[int | None] = []
+        for j in range(len(shape.scan_schemas)):
+            tps = tuple(c.prog.patterns[j] for c in lanes)
+            if len({self.store._scan_key(tp) for tp in tps}) == 1:
+                rel = self.store.match_pattern_device(tps[0])
+                scans_b.append(
+                    Relation(shape.scan_schemas[j], rel.cols, rel.valid)
+                )
+                axes.append(None)
+            else:
+                scans_b.append(
+                    Relation(
+                        shape.scan_schemas[j],
+                        *self.store.stacked_scan_device(tps),
+                    )
+                )
+                axes.append(0)
+        scans_b = tuple(scans_b)
+        scan_axes = tuple(axes)
+        group.n_broadcast_scans += sum(1 for a in scan_axes if a is None)
         consts_i = jnp.asarray(np.stack([c.prog.consts_i for c in lanes]))
         consts_f = jnp.asarray(np.stack([c.prog.consts_f for c in lanes]))
         active = jnp.asarray(np.arange(width) < n)
@@ -515,7 +564,7 @@ class QueryEngine:
         self.plan_cache.hits += n
         try:
             while True:
-                bexec = entry.batched.get(width)
+                bexec = entry.batched.get((width, scan_axes))
                 if bexec is None:
                     bexec = ex.compile_plan_batched(
                         entry.compiled.plan,
@@ -525,8 +574,9 @@ class QueryEngine:
                         num_vals,
                         active,
                         use_kernel=self.use_kernel,
+                        scan_axes=scan_axes,
                     )
-                    entry.batched[width] = bexec
+                    entry.batched[(width, scan_axes)] = bexec
                     stats.n_compiles += 1
                     self.plan_cache.compiles += 1
                 stats.n_dispatches += 1
@@ -885,16 +935,37 @@ class QueryEngine:
             for s in scans
         )
         shape = self._shape_for(
-            prog, schemas, tuple(s.capacity for s in scans), rename
+            prog, schemas, self._scan_caps(scans), rename
         )
         return canon_scans, shape, inverse
+
+    def _scan_caps(
+        self, scans: tuple[Relation, ...]
+    ) -> tuple[int, ...]:
+        """Scan capacities as the PlanShape records them (the sharded
+        engine overrides this to report PER-SHARD buckets)."""
+        return tuple(s.capacity for s in scans)
+
+    def _device_consts(
+        self, prog: _Program
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Device placement of the runtime-constant inputs (the sharded
+        engine overrides this to replicate them over its mesh)."""
+        return (
+            jnp.asarray(prog.consts_i),
+            jnp.asarray(prog.consts_f),
+            self.store.numeric_values_device(),
+        )
+
+    def _caps_from_totals(self, totals: list[int]) -> tuple[int, ...]:
+        """Join bucket capacities from the calibration run's exact totals
+        (the sharded engine overrides this to size PER-SHARD buckets)."""
+        return tuple(plan_ir.bucket_capacity(t) for t in totals)
 
     def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
         canon_scans, shape, inverse = self._canonicalize(prog)
         stats.n_joins = shape.n_joins()
-        consts_i = jnp.asarray(prog.consts_i)
-        consts_f = jnp.asarray(prog.consts_f)
-        num_vals = self.store.numeric_values_device()
+        consts_i, consts_f, num_vals = self._device_consts(prog)
 
         entry = self.plan_cache.get(shape)
         if entry is None:
@@ -928,13 +999,7 @@ class QueryEngine:
                 shape, warm_caps, canon_scans, prog, stats
             )
             return self._dispatch_entry(
-                shape,
-                entry,
-                canon_scans,
-                jnp.asarray(prog.consts_i),
-                jnp.asarray(prog.consts_f),
-                self.store.numeric_values_device(),
-                stats,
+                shape, entry, canon_scans, *self._device_consts(prog), stats
             )
         eager_stats = ExecStats()
         rel, totals = self._eval_shape_eager(
@@ -949,7 +1014,7 @@ class QueryEngine:
         stats.peak_join_bucket = max(
             stats.peak_join_bucket, eager_stats.peak_join_bucket
         )
-        join_caps = tuple(plan_ir.bucket_capacity(t) for t in totals)
+        join_caps = self._caps_from_totals(totals)
         self._compile_entry(shape, join_caps, canon_scans, prog, stats)
         return rel
 
@@ -1042,7 +1107,7 @@ class QueryEngine:
             shape,
             join_caps,
             compiled,
-            warm_widths=self._warm_widths.get(shape, ()),
+            warm_layouts=self._warm_layouts.get(shape, ()),
         )
         if prog is not None:
             # cold-compile path only: a regrow retry (prog=None) must not
@@ -1057,30 +1122,44 @@ class QueryEngine:
         canon_scans: tuple[Relation, ...],
         stats: ExecStats,
     ) -> None:
-        """Compile stacked executables for the widths a previous process
-        persisted (save_cache / warmup_path), so a restarted server's first
-        micro-batch dispatches warm instead of paying the vmap compile.
-        Abstract (shape/dtype) templates stand in for the batched inputs —
-        no device data is staged here."""
+        """Compile stacked executables for the (width, scan-layout)
+        signatures a previous process persisted (save_cache /
+        warmup_path), so a restarted server's first micro-batch dispatches
+        warm instead of paying the vmap compile. Abstract (shape/dtype)
+        templates stand in for the batched inputs — no device data is
+        staged here; broadcast scan positions keep their UNstacked
+        template shapes."""
         width_cap = plan_ir.floor_pow2(self.max_batch_width)
         sds = jax.ShapeDtypeStruct
-        for w in entry.warm_widths:
-            if w in entry.batched or w < 2 or w > width_cap:
+        for w, axes in entry.warm_layouts:
+            key = (w, axes)
+            if (
+                key in entry.batched
+                or w < 2
+                or w > width_cap
+                or len(axes) != len(canon_scans)
+            ):
                 continue
             scans_b = tuple(
                 Relation(
                     s.schema,
-                    sds((w,) + s.cols.shape, s.cols.dtype),
-                    sds((w,) + s.valid.shape, s.valid.dtype),
+                    sds(
+                        ((w,) if ax == 0 else ()) + s.cols.shape,
+                        s.cols.dtype,
+                    ),
+                    sds(
+                        ((w,) if ax == 0 else ()) + s.valid.shape,
+                        s.valid.dtype,
+                    ),
                 )
-                for s in canon_scans
+                for s, ax in zip(canon_scans, axes)
             )
             n_i = entry.shape.n_consts[0] + (
                 2 if entry.shape.has_slice else 0
             )
             n_f = entry.shape.n_consts[1]
             try:
-                entry.batched[w] = ex.compile_plan_batched(
+                entry.batched[key] = ex.compile_plan_batched(
                     entry.compiled.plan,
                     scans_b,
                     sds((w, n_i), jnp.int32),
@@ -1088,6 +1167,7 @@ class QueryEngine:
                     self.store.numeric_values_device(),
                     sds((w,), jnp.bool_),
                     use_kernel=self.use_kernel,
+                    scan_axes=axes,
                 )
             except Exception:
                 continue  # a stale width must never fail a live query
@@ -1197,4 +1277,298 @@ class QueryEngine:
                 else ""
             )
         )
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class ShardedQueryEngine(QueryEngine):
+    """Distributed MapSQ: the same engine over a subject-hash sharded store.
+
+    `store` must be a sparql.sharded_store.ShardedTripleStore whose shard
+    count equals the mesh size. Parsing, the algebra, the cost-based
+    optimizer, the plan IR and the plan/compile cache are the single-device
+    layers UNCHANGED; only three things differ:
+
+      * scans come up as flat per-shard partitions (upload-once per shard)
+        and the PlanShape's scan/join capacities are PER-SHARD buckets;
+      * the compiled executable is core/dist_executor.py's one
+        shard_map-wrapped dispatch — every MRJoin hash-shuffles both sides
+        over the mesh then joins locally, results gather to host;
+      * overflow handling grows the worst SHARD's flagged bucket (join or
+        shuffle) from the exact numbers that ride back with the dispatch,
+        recompiles, and retries — the single-device discipline per shard.
+
+    `mesh=None` builds a 1-axis mesh over every local device. Warm queries
+    are exactly one dispatch and zero compiles, same as the base engine.
+    """
+
+    mesh: "jax.sharding.Mesh | None" = None
+    axis_name: str = "shards"
+
+    def __post_init__(self):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sparql.sharded_store import ShardedTripleStore
+
+        if self.mesh is None:
+            self.mesh = jax.make_mesh(
+                (jax.device_count(),), (self.axis_name,)
+            )
+        self.axis_names = tuple(self.mesh.axis_names)
+        self.n_shards = 1
+        for a in self.axis_names:
+            self.n_shards *= self.mesh.shape[a]
+        if not isinstance(self.store, ShardedTripleStore):
+            raise TypeError(
+                "ShardedQueryEngine needs a ShardedTripleStore "
+                f"(got {type(self.store).__name__}); wrap a TripleStore "
+                "with sparql.sharded_store.shard_store(store, n_shards)"
+            )
+        if self.store.n_shards != self.n_shards:
+            raise ValueError(
+                f"store has {self.store.n_shards} shards but the mesh has "
+                f"{self.n_shards} devices"
+            )
+        if not self.compiled:
+            raise ValueError(
+                "sharded execution is compiled-only (compiled=True)"
+            )
+        super().__post_init__()
+        self._row_sharding = NamedSharding(self.mesh, P(self.axis_names))
+        self._rep_sharding = NamedSharding(self.mesh, P())
+        self.store.row_sharding = self._row_sharding
+        self._num_vals_rep = None
+        # shuffle bucket signatures persisted by a previous process (the
+        # sharded extension of the warmup file; absent in older files)
+        self._warm_shuffle: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
+        if self.warmup_path is not None:
+            p = pathlib.Path(self.warmup_path)
+            if p.exists():
+                for e in json.loads(p.read_text())["entries"]:
+                    sh = tuple(int(c) for c in e.get("shuffle_caps", ()))
+                    if sh:
+                        shape = plan_ir.shape_from_jsonable(e["shape"])
+                        self._warm_shuffle[shape] = sh
+
+    # -- device placement --------------------------------------------------
+    def _replicated(self, arr) -> jax.Array:
+        return jax.device_put(arr, self._rep_sharding)
+
+    def _num_vals(self) -> jax.Array:
+        if self._num_vals_rep is None:
+            self._num_vals_rep = self._replicated(
+                np.asarray(self.store.numeric_values_device())
+            )
+        return self._num_vals_rep
+
+    def _device_consts(self, prog: _Program):
+        return (
+            self._replicated(prog.consts_i),
+            self._replicated(prog.consts_f),
+            self._num_vals(),
+        )
+
+    # -- planning ----------------------------------------------------------
+    def _scan_caps(
+        self, scans: tuple[Relation, ...]
+    ) -> tuple[int, ...]:
+        """Capacities entering the PlanShape are the PER-SHARD row
+        buckets (the flat scan buffer holds n_shards equal blocks, so
+        its per-shard slice is capacity // n_shards)."""
+        return tuple(s.capacity // self.n_shards for s in scans)
+
+    def _caps_from_totals(self, totals: list[int]) -> tuple[int, ...]:
+        """Per-shard join buckets from the calibration run's exact GLOBAL
+        totals: the uniform-hash share, pow-2 bucketed. Key skew shows up
+        as an overflow on the first dispatch and regrows from the worst
+        shard's exact total."""
+        return tuple(
+            plan_ir.bucket_capacity(max(1, -(-int(t) // self.n_shards)))
+            for t in totals
+        )
+
+    # -- compiled path -----------------------------------------------------
+    def _compiled_cold(
+        self,
+        shape: plan_ir.PlanShape,
+        canon_scans: tuple[Relation, ...],
+        prog: _Program,
+        stats: ExecStats,
+    ) -> Relation:
+        """Cache miss: calibrate GLOBAL join totals with the eager
+        evaluator (the flat scan buffer is a valid single-device relation,
+        so the count passes are exact), size per-shard buckets at the
+        uniform-hash share, then DISPATCH once — unlike the base engine,
+        the cold query is served from the mesh so any hash-skew overflow
+        regrows now and warm queries stay at one dispatch, zero compiles."""
+        stats.cache_misses += 1
+        self.plan_cache.misses += 1
+        warm_caps = self._warm_caps.get(shape)
+        if warm_caps is not None and len(warm_caps) == shape.n_joins():
+            entry = self._compile_entry(
+                shape, warm_caps, canon_scans, prog, stats
+            )
+        else:
+            eager_stats = ExecStats()
+            _, totals = self._eval_shape_eager(
+                shape, canon_scans, prog, eager_stats
+            )
+            stats.n_count_passes += eager_stats.n_count_passes
+            stats.n_dispatches += eager_stats.n_dispatches
+            stats.n_retries += eager_stats.n_retries
+            entry = self._compile_entry(
+                shape, self._caps_from_totals(totals), canon_scans, prog,
+                stats,
+            )
+        return self._dispatch_entry(
+            shape, entry, canon_scans, *self._device_consts(prog), stats
+        )
+
+    def _compile_entry(
+        self,
+        shape: plan_ir.PlanShape,
+        join_caps: tuple[int, ...],
+        canon_scans: tuple[Relation, ...],
+        prog: "_Program | None",
+        stats: ExecStats,
+        shuffle_caps: "tuple[int, ...] | None" = None,
+    ) -> PlanCacheEntry:
+        from repro.core import dist_executor as dx
+
+        plan = plan_ir.build_plan(shape, join_caps)
+        n_sites = dx.n_shuffle_sites(plan)
+        if shuffle_caps is None:
+            prev = self.plan_cache.get(shape)
+            if prev is not None and len(
+                prev.compiled.shuffle_caps
+            ) == n_sites:
+                shuffle_caps = prev.compiled.shuffle_caps
+            else:
+                shuffle_caps = self._warm_shuffle.get(shape)
+        if shuffle_caps is None or len(shuffle_caps) != n_sites:
+            shuffle_caps = dx.initial_shuffle_caps(plan, self.n_shards)
+        n_i = shape.n_consts[0] + (2 if shape.has_slice else 0)
+        n_f = shape.n_consts[1]
+        consts_i = self._replicated(
+            prog.consts_i if prog is not None else np.zeros(n_i, np.int32)
+        )
+        consts_f = self._replicated(
+            prog.consts_f if prog is not None else np.zeros(n_f, np.float32)
+        )
+        compiled = dx.compile_sharded_plan(
+            plan,
+            self.mesh,
+            self.axis_names,
+            shuffle_caps,
+            canon_scans,
+            consts_i,
+            consts_f,
+            self._num_vals(),
+            use_kernel=self.use_kernel,
+        )
+        stats.n_compiles += 1
+        self.plan_cache.compiles += 1
+        entry = PlanCacheEntry(shape, join_caps, compiled)
+        self.plan_cache.put(shape, entry)
+        return entry
+
+    def _dispatch_entry(
+        self,
+        shape: plan_ir.PlanShape,
+        entry: PlanCacheEntry,
+        canon_scans: tuple[Relation, ...],
+        consts_i: jax.Array,
+        consts_f: jax.Array,
+        num_vals: jax.Array,
+        stats: ExecStats,
+    ) -> Relation:
+        while True:
+            stats.n_dispatches += 1
+            res = entry.compiled(canon_scans, consts_i, consts_f, num_vals)
+            caps = entry.compiled.plan.join_caps
+            stats.peak_capacity = max(
+                stats.peak_capacity, entry.compiled.plan.max_capacity()
+            )
+            stats.peak_join_bucket = max(
+                stats.peak_join_bucket, max(caps) if caps else 0
+            )
+            # the single host sync: join AND shuffle flags, all shards
+            flags_np = np.asarray(res.overflows)
+            sh_flags_np = np.asarray(res.shuffle_flags)
+            if not flags_np.any() and not sh_flags_np.any():
+                return res.relation
+            # a bucket overflowed on some shard: grow the flagged ones
+            # from the worst shard's exact numbers, recompile, retry
+            stats.n_retries += 1
+            totals_np = np.asarray(res.totals)
+            needs_np = np.asarray(res.shuffle_needs)
+            n_j = flags_np.shape[1]
+            n_s = sh_flags_np.shape[1]  # join sites + Distinct sites
+            new_caps = plan_ir.grow_join_caps(
+                entry.join_caps,
+                [int(totals_np[:, j].max()) for j in range(n_j)],
+                [bool(flags_np[:, j].any()) for j in range(n_j)],
+            )
+            new_shuffle = plan_ir.grow_join_caps(
+                entry.compiled.shuffle_caps,
+                [int(needs_np[:, j].max()) for j in range(n_s)],
+                [bool(sh_flags_np[:, j].any()) for j in range(n_s)],
+            )
+            if max(new_caps + new_shuffle) > self.max_capacity:
+                raise MemoryError(
+                    f"join result exceeds {self.max_capacity}"
+                )
+            entry = self._compile_entry(
+                shape, new_caps, canon_scans, None, stats,
+                shuffle_caps=new_shuffle,
+            )
+
+    # -- batching ----------------------------------------------------------
+    def run_batch_outcomes(
+        self, prepared: list[PreparedQuery]
+    ) -> list["ResultSet | Exception"]:
+        """Sharded execution keeps the device axis for SHARDS, so micro-
+        batches run per query (each still one warm mesh dispatch) instead
+        of stacking lanes."""
+        self.last_batch = []
+        group = BatchGroupStats(n_queries=len(prepared), fallback=True)
+        self.last_batch.append(group)
+        return [self._run_single(pq, group) for pq in prepared]
+
+    # -- persistence -------------------------------------------------------
+    def _entry_jsonable(self, e: PlanCacheEntry) -> dict:
+        """Base signature plus the entry's shuffle bucket caps, so a
+        restarted sharded server compiles warm shapes with zero
+        shuffle-overflow retries too."""
+        d = super()._entry_jsonable(e)
+        d["shuffle_caps"] = list(e.compiled.shuffle_caps)
+        return d
+
+    # -- explain -----------------------------------------------------------
+    def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:
+        lines = [super()._explain_program(pq, prog)]
+        lines.append(
+            f"sharded: {self.n_shards} shard(s), mesh axes "
+            f"{list(self.axis_names)}, subject-hash partitioned scans"
+        )
+        schemas: list[tuple[str, ...]] = []
+        caps: list[int] = []
+        for i, tp in enumerate(prog.patterns):
+            counts = self.store.per_shard_counts(tp)
+            schema, worst = self.store.pattern_scan_info(tp)
+            schemas.append(schema)
+            caps.append(plan_ir.bucket_capacity(worst))
+            lines.append(
+                f"  scan[{i}] per-shard rows={counts} "
+                f"per-shard bucket={caps[-1]}"
+            )
+        rename = plan_ir.canonical_renaming(tuple(schemas))
+        shape = self._shape_for(prog, tuple(schemas), tuple(caps), rename)
+        entry = self.plan_cache.get(shape)
+        if entry is not None:
+            lines.append(
+                f"  per-shard join buckets={entry.join_caps}, "
+                f"shuffle buckets={entry.compiled.shuffle_caps}"
+            )
         return "\n".join(lines)

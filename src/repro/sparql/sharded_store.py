@@ -1,0 +1,208 @@
+"""Subject-hash sharded triple store: the storage half of distributed MapSQ.
+
+gStoreD (the paper's distributed baseline) partitions the RDF graph across
+workers and plans partition-aware joins; this module is our equivalent for
+a JAX device mesh. The triple set is hash-partitioned by SUBJECT id — the
+same FNV-1a hash the device-side shuffle collectives use
+(core/distributed.hash_keys), mirrored here on host numpy — into
+`n_shards` disjoint partitions, each with its own sorted SPO/POS/OSP
+indexes (a plain TripleStore over the partition, sharing one global
+TermDict, so dictionary ids are mesh-wide).
+
+Scans stay partitioned end to end: `match_pattern_device` range-scans
+every shard, pads each shard's matches to ONE shared pow-2 capacity
+bucket (the max across shards — shard_map needs equal static shapes per
+shard) and uploads a flat (n_shards * cap, n_cols) device buffer whose
+row blocks are the per-shard partitions, in shard order. The executor's
+`shard_map` in_spec splits exactly on those blocks, so scan data is
+uploaded once per pattern structure and never re-staged (the same
+upload-once discipline as the single-device store, now per shard).
+
+The `statistics` catalog the cost-based optimizer plans against is the
+per-shard catalogs aggregated by `StoreStatistics.merge` — exact on all
+additive counts for a subject-hash partitioning (see merge's docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan_ir import bucket_capacity
+from repro.core.planner import TriplePattern
+from repro.core.relation import Relation
+from repro.sparql.dictionary import TermDict
+from repro.sparql.store import StoreStatistics, TripleStore
+
+_FNV_OFFSET = np.uint32(2166136261)
+_FNV_PRIME = np.uint32(16777619)
+
+
+def subject_shard(subject_ids: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owner shard per subject id: FNV-1a (the device shuffle's hash,
+    core/distributed.hash_keys) mod n_shards, on host numpy."""
+    s = np.asarray(subject_ids).astype(np.uint32)
+    with np.errstate(over="ignore"):
+        h = (_FNV_OFFSET ^ s) * _FNV_PRIME
+    return (h % np.uint32(n_shards)).astype(np.int64)
+
+
+@dataclasses.dataclass
+class ShardedTripleStore:
+    """`n_shards` disjoint subject-hash partitions behind one store API.
+
+    Exposes the same planning/scan surface the QueryEngine consumes
+    (dictionary, statistics, estimate_cardinality, pattern_scan_info,
+    match_pattern_device, numeric_values_device) — with the sharded
+    semantics that `match_pattern_device` returns the flat stacked
+    per-shard partitions and `pattern_scan_info` reports the PER-SHARD
+    capacity bucket (the number a compiled sharded program is specialised
+    on), so the plan-cache key probing in explain() stays correct.
+    """
+
+    triples: np.ndarray  # (n, 3) int32 dictionary-encoded (all shards)
+    dictionary: TermDict
+    n_shards: int
+    scan_cache_entries: int = 512
+    # NamedSharding placing row blocks on their shard's device; set by the
+    # ShardedQueryEngine once it knows the mesh. None = default device
+    # (fine for host-side use and for a 1-device mesh).
+    row_sharding: object | None = None
+
+    def __post_init__(self):
+        assert self.n_shards >= 1
+        self.triples = np.asarray(self.triples, np.int32).reshape(-1, 3)
+        owner = subject_shard(self.triples[:, 0], self.n_shards)
+        self.shards: list[TripleStore] = [
+            TripleStore(
+                self.triples[owner == k],
+                self.dictionary,
+                scan_cache_entries=self.scan_cache_entries,
+            )
+            for k in range(self.n_shards)
+        ]
+        # flat stacked (n_shards * cap) device scans, keyed like the
+        # single-device cache: one upload per pattern structure, per shard
+        self._device_cache: OrderedDict[tuple, Relation] = OrderedDict()
+        self._scan_hits = 0
+        self._scan_misses = 0
+        self._statistics: StoreStatistics | None = None
+
+    def __len__(self) -> int:
+        return len(self.triples)
+
+    @property
+    def statistics(self) -> StoreStatistics:
+        """Per-shard catalogs aggregated across the mesh (computed once;
+        partitions are immutable after construction)."""
+        if self._statistics is None:
+            self._statistics = StoreStatistics.merge(
+                [s.statistics for s in self.shards]
+            )
+        return self._statistics
+
+    # -- planning surface -------------------------------------------------
+    def estimate_cardinality(self, tp: TriplePattern) -> int:
+        """Store-wide match count: the per-shard counts sum exactly
+        (partitions are disjoint)."""
+        return sum(s.estimate_cardinality(tp) for s in self.shards)
+
+    def pattern_scan_info(
+        self, tp: TriplePattern
+    ) -> tuple[tuple[str, ...], int]:
+        """(schema, max per-shard match count): bucketing that count gives
+        the per-shard scan capacity a compiled sharded program uses, so
+        explain()'s cache probing hashes to the right PlanShape."""
+        schema: tuple[str, ...] = ()
+        worst = 0
+        for s in self.shards:
+            schema, n = s.pattern_scan_info(tp)
+            worst = max(worst, n)
+        return schema, worst
+
+    # -- device scans ------------------------------------------------------
+    def per_shard_counts(self, tp: TriplePattern) -> list[int]:
+        return [len(s.match_rows(tp)) for s in self.shards]
+
+    def match_pattern_device(self, tp: TriplePattern) -> Relation:
+        """Flat stacked per-shard partial match at one shared bucket.
+
+        Row block k (`[k * cap, (k + 1) * cap)`) holds shard k's matches,
+        padded to cap = bucket_capacity(max per-shard count). Device
+        arrays are uploaded once per pattern structure and shared across
+        queries (the Relation rebinds only the schema names) — the
+        upload-once-per-shard contract.
+        """
+        key = self.shards[0]._scan_key(tp)
+        entry = self._device_cache.get(key)
+        if entry is None:
+            self._scan_misses += 1
+            per_shard = []
+            schema: tuple[str, ...] = ()
+            for s in self.shards:
+                schema, mat = s._pattern_columns(tp, s.match_rows(tp))
+                per_shard.append(mat)
+            cap = bucket_capacity(max(len(m) for m in per_shard))
+            n_cols = len(schema)
+            cols = np.zeros((self.n_shards * cap, n_cols), np.int32)
+            valid = np.zeros((self.n_shards * cap,), bool)
+            for k, mat in enumerate(per_shard):
+                cols[k * cap : k * cap + len(mat)] = mat
+                valid[k * cap : k * cap + len(mat)] = True
+            placeholder = tuple(f"?{i}" for i in range(n_cols))
+            entry = Relation(
+                placeholder, self._place(cols), self._place(valid)
+            )
+            self._device_cache[key] = entry
+            while len(self._device_cache) > self.scan_cache_entries:
+                self._device_cache.popitem(last=False)
+            actual = schema
+        else:
+            self._scan_hits += 1
+            actual, _ = self.shards[0]._pattern_columns(
+                tp, np.zeros((0, 3), np.int32)
+            )
+        return Relation(
+            tuple(actual), self._place(entry.cols), self._place(entry.valid)
+        )
+
+    def _place(self, arr):
+        """Pin row blocks to their shard's device (no-op re-put on cache
+        hits: equal shardings transfer nothing)."""
+        if self.row_sharding is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, self.row_sharding)
+
+    def numeric_values_device(self):
+        return self.shards[0].numeric_values_device()
+
+    def scan_cache_stats(self) -> dict:
+        return {
+            "hits": self._scan_hits,
+            "misses": self._scan_misses,
+            "entries": len(self._device_cache),
+        }
+
+    def shard_sizes(self) -> list[int]:
+        return [len(s) for s in self.shards]
+
+
+def shard_store(store: TripleStore, n_shards: int) -> ShardedTripleStore:
+    """Partition an existing single-device store across `n_shards`."""
+    return ShardedTripleStore(store.triples, store.dictionary, n_shards)
+
+
+def sharded_store_from_string_triples(
+    triples: list[tuple[str, str, str]],
+    n_shards: int,
+    dictionary: TermDict | None = None,
+) -> ShardedTripleStore:
+    d = dictionary or TermDict()
+    enc = np.array(
+        [[d.encode(s), d.encode(p), d.encode(o)] for s, p, o in triples],
+        np.int32,
+    ).reshape(-1, 3)
+    return ShardedTripleStore(enc, d, n_shards)

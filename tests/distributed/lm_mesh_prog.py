@@ -3,9 +3,16 @@ AND execute on a (1,2,4) pod mesh with real (reduced) weights — catching
 sharding bugs that the abstract dry-run can't (numerics, donation).
 Also checks multi-device loss == single-device loss (sharding-invariance).
 """
-import jax
+import os
 
-jax.config.update("jax_num_cpu_devices", 8)
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+from repro.core import compat  # noqa: E402
 
 import dataclasses
 import jax.numpy as jnp
@@ -31,7 +38,7 @@ def main():
 
     opt = adamw_init(params)
     step = jax.jit(T.make_train_step(cfg, mesh, AdamWConfig(), True))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p2, s2, m = step(params, opt, batch)
         loss_mesh = float(m["loss"])
     assert np.isfinite(loss_mesh)
@@ -43,10 +50,10 @@ def main():
     mesh1 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
     params1 = T.init_params(jax.random.PRNGKey(0), cfg, ep=2)
     step1 = jax.jit(T.make_loss_fn(cfg, mesh1, True))
-    with jax.set_mesh(mesh1):
+    with compat.set_mesh(mesh1):
         loss1, _ = step1(params1, tokens, labels)
     stepm = jax.jit(T.make_loss_fn(cfg, mesh, True))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lossm, _ = stepm(params, tokens, labels)
     np.testing.assert_allclose(float(lossm), float(loss1), rtol=2e-3)
     print(f"loss sharding-invariance: {float(lossm):.5f} == {float(loss1):.5f}")
@@ -54,7 +61,7 @@ def main():
     # serve_step on the mesh (donated caches)
     serve = jax.jit(T.make_serve_step(cfg, mesh, True), donate_argnums=(1, 2))
     kc, vc = T.init_decode_cache(cfg, 8, 64)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         nxt, kc, vc = serve(params, kc, vc, jnp.int32(0), tokens[:, 0])
         nxt2, kc, vc = serve(params, kc, vc, jnp.int32(1), nxt)
     assert nxt2.shape == (8,) and int(nxt2.max()) < cfg.vocab

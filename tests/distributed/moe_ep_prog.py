@@ -4,9 +4,16 @@ lookup: outputs AND gradients must match the single-path dense references.
 Run via tests/test_distributed.py in a subprocess (device count locks at
 first jax init, so the main pytest process keeps 1 device).
 """
-import jax
+import os
 
-jax.config.update("jax_num_cpu_devices", 8)
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+from repro.core import compat  # noqa: E402
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,12 +62,12 @@ def main():
     pspec = M.MoEParams(router=P(None, None), we_gate=P("model", None, None),
                         we_up=P("model", None, None),
                         we_down=P("model", None, None))
-    ep_fn = jax.jit(jax.shard_map(
+    ep_fn = jax.jit(compat.shard_map(
         partial(M.moe_ffn_ep_local, st=st, expert_axis="model"),
         mesh=mesh, in_specs=(pspec, token_spec), out_specs=token_spec,
         check_vma=False,
     ))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         y_ep = ep_fn(p, x)
     y_ref = dense_moe_reference(p, x, st, e_pad)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref), **TOL)
@@ -91,7 +98,7 @@ def main():
     table = jax.random.normal(jax.random.PRNGKey(3), (64, 5))
     ids = jax.random.randint(jax.random.PRNGKey(4), (128,), 0, 64)
     lookup = jax.jit(D.make_sharded_lookup(mesh, ("data",), cap=64))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         rows = lookup(table, ids)
     np.testing.assert_allclose(np.asarray(rows), np.asarray(table[ids]),
                                **TOL)

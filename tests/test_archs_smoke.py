@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compat
 from repro.configs.registry import ARCHS
 from repro.launch.mesh import make_local_mesh
 from repro.optim.adamw import AdamWConfig, adamw_init
@@ -40,7 +41,7 @@ def test_lm_smoke(arch, mesh):
     params = T.init_params(jax.random.PRNGKey(0), cfg, ep=1)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
     labels = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits, aux, _ = T.forward(params, tokens, cfg, mesh, False)
         assert logits.shape == (2, 32, cfg.padded_vocab)
         assert bool(jnp.all(jnp.isfinite(

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compat
 from repro.data.graphs import make_full_graph
 from repro.models.gnn import graphcast as gc
 from repro.models.gnn import meshgraphnet as mgn
@@ -31,7 +32,7 @@ def test_graphcast_streamed_matches_plain(mesh):
     opt = dataclasses.replace(
         base, node_spec=("data", "model"), shuffle_gather=True,
         edge_stream_chunks=4, remat=True)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         np.testing.assert_allclose(
             np.asarray(gc.apply(p, g, base)),
             np.asarray(gc.apply(p, g, opt)), rtol=2e-4, atol=2e-4)
@@ -48,7 +49,7 @@ def test_meshgraphnet_shuffle_matches_plain(mesh):
     p = mgn.init_params(jax.random.PRNGKey(1), base)
     opt = dataclasses.replace(base, node_spec=("data", "model"),
                               shuffle_gather=True, remat=True)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         np.testing.assert_allclose(
             np.asarray(mgn.apply(p, g, base)),
             np.asarray(mgn.apply(p, g, opt)), rtol=2e-4, atol=2e-4)
