@@ -212,6 +212,59 @@ def bench_optimizer(store) -> list[dict]:
     return out
 
 
+def bench_backend(repeats: int, seed: int = 0) -> list[dict]:
+    """S1: MR vs matrix join backend on the skewed-predicate shape.
+
+    Both engines execute the SAME plan (same join order, same buckets) —
+    only the physical join algebra differs. Asserts that the cost-based
+    optimizer routes S1's hot-key join to the matrix backend from the
+    statistics alone (no override), that both backends return identical
+    rows, and reports the warm DEVICE-side timing of each: S1 returns
+    20k rows, and decoding them to host dicts costs the same for both
+    backends while dwarfing the join itself, so the timed section is the
+    compiled dispatch up to block_until_ready, not the decode.
+    """
+    from repro.sparql.engine import ExecStats
+
+    store = lubm.generate(scale=1, seed=seed, skew_shapes=True)
+    out = []
+    for name, text in lubm.S_QUERIES.items():
+        auto = QueryEngine(store)
+        chosen = auto._build_program(
+            auto.prepare(text).query
+        ).plan.join_backends
+        assert "matrix" in chosen, (
+            f"{name}: optimizer chose {chosen}, expected the matrix "
+            "backend from selectivity x skew statistics"
+        )
+        mr = QueryEngine(store, join_backend="mr")
+        mx = QueryEngine(store, join_backend="matrix")
+        p_mr, p_mx = mr.prepare(text), mx.prepare(text)
+        rows_mr, rows_mx = p_mr.run(), p_mx.run()
+        key = lambda rs: sorted(
+            tuple(sorted(d.items())) for d in rs.rows
+        )
+        assert key(rows_mr) == key(rows_mx), f"{name}: backend mismatch"
+        warm = p_mx.run()
+        assert warm.stats.n_compiles == 0 and warm.stats.n_dispatches == 1
+
+        def device_run(engine, prepared):
+            rel = engine._execute_program(prepared._program, ExecStats())
+            rel.cols.block_until_ready()
+
+        t_mr = _time(lambda: device_run(mr, p_mr), repeats)
+        t_mx = _time(lambda: device_run(mx, p_mx), repeats)
+        out.append({
+            "query": f"{name}-backend",
+            "rows": len(rows_mx),
+            "chosen_backend": "matrix",
+            "mr_ms": t_mr * 1e3,
+            "matrix_ms": t_mx * 1e3,
+            "matrix_speedup": t_mr / t_mx,
+        })
+    return out
+
+
 def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
     store = lubm.generate(scale=scale, seed=seed, join_shapes=True)
     eager = QueryEngine(store, compiled=False)
@@ -280,6 +333,17 @@ def main() -> None:
             json.dump({"scale": scale, "repeats": repeats,
                        "batched": batched_records}, f, indent=2)
         print("# wrote BENCH_4.json")
+        # S1: MR vs matrix physical join algebra on the skewed shape
+        backend_records = bench_backend(repeats)
+        for r in backend_records:
+            print(f"# {r['query']}: rows={r['rows']} "
+                  f"chosen={r['chosen_backend']} "
+                  f"mr_ms={r['mr_ms']:.2f} matrix_ms={r['matrix_ms']:.2f} "
+                  f"matrix_speedup={r['matrix_speedup']:.2f}x")
+        with open("BENCH_6.json", "w") as f:
+            json.dump({"repeats": repeats,
+                       "backend": backend_records}, f, indent=2)
+        print("# wrote BENCH_6.json")
     # D1: sharded vs single-device execution, 1 vs 4 forced host devices.
     # Runs on CPU too (subprocesses force the device count); prints the
     # shard-count scaling and asserts the per-shard bucket win.

@@ -37,12 +37,14 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import matrix_join as mxj
 from repro.core import mr_join as mj
 from repro.core.plan_ir import (
     CrossJoin,
     Distinct,
     Filter,
     LeftJoin,
+    MatrixJoin,
     MRJoin,
     PhysicalPlan,
     PlanNode,
@@ -97,10 +99,14 @@ def lower(
         def _eval(node: PlanNode) -> Relation:
             if isinstance(node, Scan):
                 return scans[node.index]
-            if isinstance(node, MRJoin):
+            if isinstance(node, (MRJoin, MatrixJoin)):
                 left = eval_node(node.left)
                 right = eval_node(node.right)
-                out, total, ovf = mj.mr_join(
+                join = (
+                    mxj.matrix_join if isinstance(node, MatrixJoin)
+                    else mj.mr_join
+                )
+                out, total, ovf = join(
                     left, right, capacity=node.capacity, use_kernel=use_kernel
                 )
                 totals.append(total)
@@ -118,7 +124,11 @@ def lower(
             if isinstance(node, LeftJoin):
                 left = eval_node(node.left)
                 right = eval_node(node.right)
-                out, total, ovf = mj.left_join(
+                ljoin = (
+                    mxj.matrix_left_join if node.backend == "matrix"
+                    else mj.left_join
+                )
+                out, total, ovf = ljoin(
                     left, right, capacity=node.join_cap, use_kernel=use_kernel
                 )
                 totals.append(total)

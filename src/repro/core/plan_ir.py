@@ -147,6 +147,21 @@ class MRJoin:
 
 
 @dataclasses.dataclass(frozen=True)
+class MatrixJoin:
+    """The same equi-join lowered through the masked-SpMM backend
+    (core/matrix_join.py): no sort, dense tiled key compares + a scatter
+    expansion. Identical contract to MRJoin — same output schema, exact
+    total, exact truncation — so the two are freely interchangeable per
+    node; the optimizer picks from selectivity x skew."""
+
+    left: "PlanNode"
+    right: "PlanNode"
+    key_vars: tuple[str, ...]
+    schema: tuple[str, ...]
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
 class CrossJoin:
     """Cartesian product for disconnected BGP components.
 
@@ -167,7 +182,8 @@ class LeftJoin:
 
     `join_cap` is the calibrated/grown bucket for the inner-join part; the
     node's output capacity is join_cap + left.capacity (the padding slots
-    are exact, they can never overflow).
+    are exact, they can never overflow). `backend` selects the physical
+    algebra for the inner join ("mr" or "matrix").
     """
 
     left: "PlanNode"
@@ -175,6 +191,7 @@ class LeftJoin:
     key_vars: tuple[str, ...]
     schema: tuple[str, ...]
     join_cap: int
+    backend: str = "mr"
 
     @property
     def capacity(self) -> int:
@@ -257,8 +274,8 @@ class Slice:
 
 
 PlanNode = Union[
-    Scan, MRJoin, CrossJoin, LeftJoin, Filter, UnionAll, Project, Distinct,
-    Slice,
+    Scan, MRJoin, MatrixJoin, CrossJoin, LeftJoin, Filter, UnionAll,
+    Project, Distinct, Slice,
 ]
 
 
@@ -332,6 +349,10 @@ class PlanShape:
     distinct: bool = False
     has_slice: bool = False
     prune: bool = False  # optimizer projection pruning enabled
+    # Physical algebra per join-cap slot ("mr" | "matrix"), evaluation
+    # order, len == n_joins(). Part of the shape: a backend flip is a
+    # different compiled program. Cross-join slots carry "mr" (unused).
+    join_backends: tuple[str, ...] = ()
 
     @property
     def n_required(self) -> int:
@@ -382,6 +403,7 @@ def make_shape(
     n_consts: tuple[int, int] = (0, 0),
     has_slice: bool = False,
     prune: bool = False,
+    join_backends: tuple[str, ...] = (),
 ) -> PlanShape:
     n_group_scans = sum(g.n_scans for g in opt_groups)
     n_union_scans = sum(g.n_scans for g in union_groups)
@@ -390,7 +412,7 @@ def make_shape(
     assert has_required or not opt_groups
     assert len(scan_schemas) == len(scan_caps)
     assert len(scan_schemas) == n_req + n_group_scans + n_union_scans
-    return PlanShape(
+    shape = PlanShape(
         scan_schemas,
         scan_caps,
         cross_flags,
@@ -404,6 +426,14 @@ def make_shape(
         has_slice,
         prune,
     )
+    # Normalise the backend vector so shapes differing only in "explicit
+    # all-mr" vs "default" compare (and hash) equal — that equality is the
+    # plan-cache key.
+    if not join_backends:
+        join_backends = ("mr",) * shape.n_joins()
+    assert len(join_backends) == shape.n_joins(), (join_backends, shape)
+    assert all(b in ("mr", "matrix") for b in join_backends)
+    return dataclasses.replace(shape, join_backends=tuple(join_backends))
 
 
 def narrowed_schema(
@@ -425,6 +455,7 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
     """
     assert len(join_caps) == shape.n_joins(), (join_caps, shape)
     caps = iter(join_caps)
+    backends = iter(shape.join_backends or ("mr",) * shape.n_joins())
     effective: list[int] = []
     scan_idx = 0
     by_stage: dict[tuple, list[FilterExpr]] = {}
@@ -474,6 +505,7 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
         if is_cross:
             cap = node.capacity * right.capacity  # exact: see CrossJoin
             next(caps)  # consumes its slot, value is structural
+            next(backends)  # cross joins have one algebra; slot is padding
             node = CrossJoin(
                 node, right, tuple(node.schema) + tuple(right.schema), cap
             )
@@ -481,7 +513,8 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
             cap = bucket_capacity(next(caps))
             key = tuple(v for v in node.schema if v in right.schema)
             extra = tuple(v for v in right.schema if v not in node.schema)
-            node = MRJoin(
+            cls = MatrixJoin if next(backends) == "matrix" else MRJoin
+            node = cls(
                 node, right, key, tuple(node.schema) + extra, cap
             )
         effective.append(cap)
@@ -517,7 +550,10 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
             )
         join_cap = bucket_capacity(next(caps))
         extra = tuple(v for v in grp.schema if v not in node.schema)
-        node = LeftJoin(node, grp, key, tuple(node.schema) + extra, join_cap)
+        node = LeftJoin(
+            node, grp, key, tuple(node.schema) + extra, join_cap,
+            backend=next(backends),
+        )
         effective.append(join_cap)
         node = apply_filters(node, ("opt", gi))
         node = narrow(node)
@@ -600,6 +636,7 @@ def shape_to_jsonable(shape: PlanShape) -> dict:
         "distinct": shape.distinct,
         "has_slice": shape.has_slice,
         "prune": shape.prune,
+        "join_backends": list(shape.join_backends),
     }
 
 
@@ -607,7 +644,7 @@ def shape_from_jsonable(obj: dict) -> PlanShape:
     def group(d) -> GroupSpec:
         return GroupSpec(int(d["n_scans"]), tuple(d["cross_flags"]))
 
-    return PlanShape(
+    shape = PlanShape(
         scan_schemas=tuple(tuple(s) for s in obj["scan_schemas"]),
         scan_caps=tuple(int(c) for c in obj["scan_caps"]),
         cross_flags=tuple(bool(f) for f in obj["cross_flags"]),
@@ -624,3 +661,8 @@ def shape_from_jsonable(obj: dict) -> PlanShape:
         has_slice=bool(obj["has_slice"]),
         prune=bool(obj["prune"]),
     )
+    # files predating the matrix backend carry no vector: all-MR
+    backends = obj.get("join_backends")
+    if backends is None:
+        backends = ["mr"] * shape.n_joins()
+    return dataclasses.replace(shape, join_backends=tuple(backends))

@@ -1,0 +1,22 @@
+"""Masked SpMM primitives for the matrix join backend (core/matrix_join).
+
+The gSMat/gSmart observation: a SPARQL equi-join over dictionary ids is a
+sparse boolean matrix product. With L the (n_l x K) one-hot encoding of the
+left key column and R the (K x n_r) one-hot encoding of the right keys,
+`match_layout` reads the join's entire output layout off the implicit
+product E = L @ R^T in one tiled pass:
+
+  counts = E @ 1             — per-left-row match counts (SpMM row reduce)
+  first  = LT @ 1            — slot where each left key's group begins in
+           the key-ordered right side (LT[i,j] = [rk_j < lk_i])
+  b      = (E * excl_cumsum_rows(E)) @ 1 — slots claimed by earlier
+           same-key left rows
+  cl     = 1 @ E             — per-right-row match counts (column reduce)
+
+`sort_ranks` orders the (small) right side without an argsort: rank =
+strict_lower(C) @ 1 where C[j, j'] = [k_j' < k_j] or ([k_j' == k_j] and
+j' < j). The expansion is then pure gathers and scans over prefix sums
+(see core/matrix_join.py) — no sort anywhere. The kernels never
+materialise the one-hot forms — the products collapse to tiled key
+compares, the shape the MXU/VPU wants.
+"""

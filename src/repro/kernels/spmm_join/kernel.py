@@ -1,0 +1,126 @@
+"""Pallas kernels for the SpMM join reductions.
+
+Tiling: the comparison array (the right keys) sits whole in VMEM — one
+int32 word per row, same budget argument as pair_expand's prefix array —
+and the output rows are tiled in BLOCK-sized blocks over a 1-D grid. The
+inner compare walks the VMEM-resident keys in CHUNK-wide slices, so the
+live boolean tile is (BLOCK, CHUNK) — (8, 128)-aligned and far under the
+VMEM ceiling — and every lane executes the same data-independent schedule
+(no sort, no branches: this is the whole point of the matrix backend).
+
+`match_layout` additionally carries a per-right-column running match
+count across grid steps, accumulated in-place in its `cl` output block
+(every grid step maps to block 0). TPU grids execute sequentially, so
+the read-modify-write is well-defined — the same revisiting pattern as a
+matmul's k-loop accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # output rows per grid step (8 sublanes x 128 lanes)
+CHUNK = 256  # comparison-key slice width per inner step
+
+
+def _match_layout_kernel(lk_ref, rk_ref, counts_ref, first_ref, b_ref,
+                         cl_ref, *, n_right_pad: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        cl_ref[...] = jnp.zeros((n_right_pad,), jnp.int32)
+
+    lk = lk_ref[...]  # (BLOCK,) this block's left keys
+    rk = rk_ref[...]  # (n_right_pad,) all right keys
+    counts = jnp.zeros((BLOCK,), jnp.int32)
+    first = jnp.zeros((BLOCK,), jnp.int32)
+    b = jnp.zeros((BLOCK,), jnp.int32)
+    for c in range(n_right_pad // CHUNK):
+        rc = rk[c * CHUNK:(c + 1) * CHUNK]
+        carry = cl_ref[c * CHUNK:(c + 1) * CHUNK]
+        eq = (lk[:, None] == rc[None, :]).astype(jnp.int32)
+        lt = (rc[None, :] < lk[:, None]).astype(jnp.int32)
+        cume = jnp.cumsum(eq, axis=0) - eq + carry[None, :]
+        counts = counts + jnp.sum(eq, axis=1)
+        first = first + jnp.sum(lt, axis=1)
+        b = b + jnp.sum(eq * cume, axis=1)
+        cl_ref[c * CHUNK:(c + 1) * CHUNK] = carry + jnp.sum(eq, axis=0)
+    counts_ref[...] = counts
+    first_ref[...] = first
+    b_ref[...] = b
+
+
+def _sort_ranks_kernel(keys_ref, blk_ref, out_ref, *, n_pad: int):
+    base = pl.program_id(0) * BLOCK
+    own = blk_ref[...]  # (BLOCK,) this block's keys
+    keys = keys_ref[...]  # (n_pad,) all keys
+    j = base + jax.lax.iota(jnp.int32, BLOCK)
+    acc = jnp.zeros((BLOCK,), jnp.int32)
+    for c in range(n_pad // CHUNK):
+        kc = keys[c * CHUNK:(c + 1) * CHUNK]
+        lt = kc[None, :] < own[:, None]
+        eq = own[:, None] == kc[None, :]
+        before = (c * CHUNK + jax.lax.iota(jnp.int32, CHUNK))[None, :] < j[:, None]
+        acc = acc + jnp.sum((lt | (eq & before)).astype(jnp.int32), axis=1)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def match_layout_pallas(left_keys: jax.Array, right_keys: jax.Array, *,
+                        interpret: bool = True):
+    """Per-left-row (counts, first, b) and per-right-row cl; inputs
+    pre-padded to BLOCK / CHUNK. The right pad value must neither equal
+    nor sit below any real left key, so padded right rows count into no
+    sum; padded LEFT rows come after every real row, so their eq
+    contributions to cl (none, by pad-value choice) and to later rows'
+    cume (none — there are no later rows) are nil."""
+    n_left, n_right = left_keys.shape[0], right_keys.shape[0]
+    assert n_left % BLOCK == 0 and n_right % CHUNK == 0
+    kernel = functools.partial(_match_layout_kernel, n_right_pad=n_right)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_left // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((n_right,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((n_right,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_left,), jnp.int32),
+            jax.ShapeDtypeStruct((n_left,), jnp.int32),
+            jax.ShapeDtypeStruct((n_left,), jnp.int32),
+            jax.ShapeDtypeStruct((n_right,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(left_keys, right_keys)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_ranks_pallas(keys: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """Per-row stable sorted position of its key; input pre-padded to
+    BLOCK (the pad value must not be below any real key — padded rows sit
+    at the tail of the ranking and real rows' ranks are unaffected)."""
+    n = keys.shape[0]
+    assert n % BLOCK == 0
+    kernel = functools.partial(_sort_ranks_kernel, n_pad=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(keys, keys)

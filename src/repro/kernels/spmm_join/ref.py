@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the SpMM join reductions (blocked, O(n_l * n_r)).
+
+`match_layout` is evaluated in fixed-height left-row blocks with a
+per-column carry so peak memory is BLOCK_ROWS x n_r regardless of the
+left side's size — the same sequential-grid accumulation the Pallas
+kernel uses, minus the explicit VMEM placement. Small inputs (anything
+the optimizer's dense cap admits) take a single fused compare tile.
+"""
+import jax
+import jax.numpy as jnp
+
+BLOCK_ROWS = 128
+ONE_SHOT_ELEMS = 1 << 22  # full-tile path below this many compares
+
+
+def _layout_tile(blk: jax.Array, right_keys: jax.Array, carry: jax.Array):
+    """One left-row block of the layout reduction.
+
+    Returns (counts, first, b) for the block and the updated per-column
+    carry (running count of left matches per right row, i.e. the partial
+    column sums of the eq tile over all left rows seen so far).
+    """
+    eq = (blk[:, None] == right_keys[None, :]).astype(jnp.int32)
+    lt = (right_keys[None, :] < blk[:, None]).astype(jnp.int32)
+    cume = jnp.cumsum(eq, axis=0) - eq + carry[None, :]
+    counts = jnp.sum(eq, axis=1)
+    first = jnp.sum(lt, axis=1)
+    b = jnp.sum(eq * cume, axis=1)
+    return counts, first, b, carry + jnp.sum(eq, axis=0)
+
+
+def match_layout(
+    left_keys: jax.Array, right_keys: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Everything the gather expansion needs, from ONE dense eq/lt pass:
+
+      counts[i] = |{j : rk[j] == lk[i]}|       (SpMM row reduction)
+      first[i]  = |{j : rk[j] <  lk[i]}|       (slot where row i's key
+                                                begins in the key-ordered
+                                                right side)
+      b[i]      = counts[i] * |{i' < i : lk[i'] == lk[i]}|  (output slots
+                  claimed by EARLIER left rows of the same key, via a
+                  column-wise exclusive cumsum of the eq tile)
+      cl[j]     = |{i : lk[i] == rk[j]}|       (column sums — per-right-row
+                  match counts, the transpose reduction for free)
+
+    Together: row i's outputs start at slot  prefix(cl, first[i]) + b[i]
+    in mr_join's exact emission order (left rows in stable key order),
+    with NO left-side sort or rank pass — zero-count rows occupy zero
+    slots, so only matching rows need ordering and their keys all exist
+    on the right side.
+    """
+    n_l, n_r = left_keys.shape[0], right_keys.shape[0]
+    carry0 = jnp.zeros((n_r,), jnp.int32)
+    if n_l * max(n_r, 1) <= ONE_SHOT_ELEMS:
+        counts, first, b, cl = _layout_tile(left_keys, right_keys, carry0)
+        return counts, first, b, cl
+
+    n_pad = ((n_l + BLOCK_ROWS - 1) // BLOCK_ROWS) * BLOCK_ROWS
+    kp = jnp.pad(left_keys, (0, n_pad - n_l))
+    out0 = jnp.zeros((n_pad, 3), jnp.int32)
+
+    def body(bi, state):
+        acc, carry = state
+        base = bi * BLOCK_ROWS
+        blk = jax.lax.dynamic_slice(kp, (base,), (BLOCK_ROWS,))
+        counts, first, b, carry = _layout_tile(blk, right_keys, carry)
+        rows = jnp.stack([counts, first, b], axis=1)
+        return jax.lax.dynamic_update_slice(acc, rows, (base, 0)), carry
+
+    acc, cl = jax.lax.fori_loop(0, n_pad // BLOCK_ROWS, body, (out0, carry0))
+    acc = acc[:n_l]
+    # padded left rows (key 0) may have polluted cl; recompute their
+    # contribution exactly: pad rows all share key 0, appended last.
+    if n_pad != n_l:
+        cl = cl - (n_pad - n_l) * (right_keys == 0).astype(jnp.int32)
+    return acc[:, 0], acc[:, 1], acc[:, 2], cl
+
+
+def sort_ranks(keys: jax.Array) -> jax.Array:
+    """rank[j] = |{j' : keys[j'] < keys[j]}| + |{j' < j : keys[j'] == keys[j]}|
+    — each row's STABLE sorted position (a permutation of 0..n-1), computed
+    as a dense masked reduction instead of an argsort. Within one key group
+    the ranks are contiguous and in buffer order, so rank[j] - group_start
+    is the row's occurrence rank."""
+    n = keys.shape[0]
+    j_all = jnp.arange(n, dtype=jnp.int32)
+
+    def count(blk, base):
+        j = base + jnp.arange(blk.shape[0], dtype=jnp.int32)
+        lt = keys[None, :] < blk[:, None]
+        eq = blk[:, None] == keys[None, :]
+        before = j_all[None, :] < j[:, None]
+        return jnp.sum(lt | (eq & before), axis=1, dtype=jnp.int32)
+
+    if n * max(n, 1) <= ONE_SHOT_ELEMS:
+        return count(keys, 0)
+
+    n_pad = ((n + BLOCK_ROWS - 1) // BLOCK_ROWS) * BLOCK_ROWS
+    kp = jnp.pad(keys, (0, n_pad - n))
+    out0 = jnp.zeros((n_pad,), jnp.int32)
+
+    def body(b, acc):
+        base = b * BLOCK_ROWS
+        blk = jax.lax.dynamic_slice(kp, (base,), (BLOCK_ROWS,))
+        return jax.lax.dynamic_update_slice(acc, count(blk, base), (base,))
+
+    return jax.lax.fori_loop(0, n_pad // BLOCK_ROWS, body, out0)[:n]

@@ -309,10 +309,19 @@ class QueryEngine:
     compiled: bool = True  # one-dispatch compiled pipeline vs eager loop
     plan_cache_entries: int = 256
     optimize: bool = True  # cost-based optimizer (False: legacy greedy)
+    # physical join algebra: None = per-node cost-based choice (the
+    # optimizer's selectivity x skew rule), "mr" / "matrix" = force every
+    # join slot onto that backend (differential tests, benchmarks)
+    join_backend: str | None = None
     warmup_path: str | None = None  # saved bucket signatures (save_cache)
     max_batch_width: int = 64  # lane cap per stacked run_batch dispatch
 
     def __post_init__(self):
+        if self.join_backend not in (None, "mr", "matrix"):
+            raise ValueError(
+                f"join_backend must be None, 'mr' or 'matrix' "
+                f"(got {self.join_backend!r})"
+            )
         self._jit_join = jax.jit(
             mj.mr_join, static_argnames=("capacity", "use_kernel")
         )
@@ -334,6 +343,18 @@ class QueryEngine:
             p = pathlib.Path(self.warmup_path)
             if p.exists():
                 data = json.loads(p.read_text())
+                # v3 files carry the writer's statistics catalog: seed the
+                # store's lazy cache with it so backend choices (hence plan
+                # shapes) match the saved signatures exactly. Older files
+                # (v1/v2) have no catalog — the store computes its own,
+                # which is identical for the same triples.
+                stats_blob = data.get("statistics")
+                if stats_blob is not None and self.store._statistics is None:
+                    from repro.sparql.store import StoreStatistics
+
+                    self.store._statistics = StoreStatistics.from_jsonable(
+                        stats_blob
+                    )
                 for e in data["entries"]:
                     shape = plan_ir.shape_from_jsonable(e["shape"])
                     self._warm_caps[shape] = tuple(
@@ -370,7 +391,17 @@ class QueryEngine:
             self._entry_jsonable(e) for e in self.plan_cache.entries()
         ]
         pathlib.Path(path).write_text(
-            json.dumps({"version": 2, "entries": entries})
+            json.dumps(
+                {
+                    "version": 3,
+                    # the statistics catalog (incl. per-predicate degree
+                    # skew) rides along so a restarted process makes the
+                    # SAME backend decisions — shapes keep hashing to the
+                    # saved signatures even if it recomputes nothing
+                    "statistics": self.store.statistics.to_jsonable(),
+                    "entries": entries,
+                }
+            )
         )
         return len(entries)
 
@@ -727,6 +758,12 @@ class QueryEngine:
             (stage, plan_ir.rename_expr(expr, r))
             for stage, expr in prog.filters
         )
+        # per-slot physical algebra rides in the shape (a backend flip is
+        # a different compiled program); an engine-level override forces
+        # every slot, otherwise the optimizer's per-node choice stands
+        backends = prog.plan.join_backends
+        if self.join_backend is not None:
+            backends = (self.join_backend,) * len(backends)
         return plan_ir.make_shape(
             tuple(tuple(rn(v) for v in s) for s in schemas),
             caps,
@@ -740,6 +777,7 @@ class QueryEngine:
             n_consts=prog.n_consts,
             has_slice=prog.has_slice,
             prune=prog.plan.prune,
+            join_backends=backends,
         )
 
     # -- execution ---------------------------------------------------------
@@ -1210,6 +1248,7 @@ class QueryEngine:
         rename = plan_ir.canonical_renaming(tuple(schemas))
         shape = self._shape_for(prog, tuple(schemas), tuple(caps), rename)
         ests = prog.plan.join_ests
+        backends = shape.join_backends
         ji = 0
 
         def est_str() -> str:
@@ -1220,24 +1259,36 @@ class QueryEngine:
             ji += 1
             return out
 
+        def bk() -> str:
+            """Physical algebra of the CURRENT join slot (pre-est_str)."""
+            if ji < len(backends) and backends[ji] == "matrix":
+                return "matrix_join"
+            return "mr_join"
+
         for i, is_cross in enumerate(shape.cross_flags):
-            kind = "cross_join" if is_cross else "mr_join"
+            kind = "cross_join" if is_cross else bk()
             lines.append(f"  join[{i}] {kind}{est_str()}")
         for gi, g in enumerate(shape.opt_groups):
             for _ in g.cross_flags:
                 est_str()  # group-internal joins ride in the group line
+            kind = bk()
             lines.append(
-                f"  left_join[{gi}] OPTIONAL group of {g.n_scans} "
+                f"  left_join[{gi}] ({kind}) OPTIONAL group of {g.n_scans} "
                 f"pattern(s), unmatched rows padded UNBOUND,"
                 f" inner{est_str()}"
             )
         for bi, g in enumerate(shape.union_groups):
             for _ in g.cross_flags:
                 est_str()
+            kind = bk()
             tail = est_str() if prog.has_required else ""
             lines.append(
                 f"  union_branch[{bi}] {g.n_scans} pattern(s)"
-                + (f", joined with required chain,{tail}" if tail else "")
+                + (
+                    f", joined with required chain ({kind}),{tail}"
+                    if tail
+                    else ""
+                )
             )
         if shape.union_groups:
             lines.append(
@@ -1311,6 +1362,15 @@ class ShardedQueryEngine(QueryEngine):
 
         from repro.sparql.sharded_store import ShardedTripleStore
 
+        # the distributed executor lowers MRJoin only (shuffle + local MR
+        # join); pin every slot to "mr" so the optimizer's matrix picks
+        # never reach dist_executor
+        if self.join_backend == "matrix":
+            raise ValueError(
+                "join_backend='matrix' is not supported by the sharded "
+                "executor (MR joins only)"
+            )
+        self.join_backend = "mr"
         if self.mesh is None:
             self.mesh = jax.make_mesh(
                 (jax.device_count(),), (self.axis_name,)

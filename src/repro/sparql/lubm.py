@@ -61,16 +61,51 @@ def join_shape_triples() -> list[tuple[str, str, str]]:
     return out
 
 
-def generate(scale: int = 1, seed: int = 0, join_shapes: bool = False):
+def skewed_shape_triples() -> list[tuple[str, str, str]]:
+    """The S1 skewed-predicate subgraph (deterministic).
+
+    A 2-hop chain `?x p1 ?y . ?y p2 ?z` engineered so the join key is
+    dominated by ONE hot value: p1 has 500 edges into a single hot object
+    plus 100 degree-1 objects (o_skew ≈ 84), and p2 hangs 40 edges off
+    that hot subject plus 20 degree-1 subjects. The join output (~20k
+    rows) is within a constant factor of the dense |L|·|R| compare grid,
+    which is exactly where the matrix (masked-SpMM) backend's
+    argsort-free pipeline beats the MR join — the optimizer must pick it
+    from σ·skew alone (see sparql/optimizer._choose_backend).
+    """
+    out: list[tuple[str, str, str]] = []
+    t = out.append
+    hot = _e("S/hub")
+    for i in range(500):
+        t((_e(f"S/x{i}"), _e("S/p1"), hot))
+    for i in range(100):
+        t((_e(f"S/u{i}"), _e("S/p1"), _e(f"S/v{i}")))
+    for k in range(40):
+        t((hot, _e("S/p2"), _e(f"S/z{k}")))
+    for i in range(20):
+        t((_e(f"S/w{i}"), _e("S/p2"), _e(f"S/q{i}")))
+    return out
+
+
+def generate(
+    scale: int = 1,
+    seed: int = 0,
+    join_shapes: bool = False,
+    skew_shapes: bool = False,
+):
     """~scale × (15 departments × ~70 people) university graph.
 
     `join_shapes=True` additionally embeds the J1/J2 bad-join-order
-    subgraphs (`join_shape_triples`) used to benchmark the optimizer."""
+    subgraphs (`join_shape_triples`) used to benchmark the optimizer;
+    `skew_shapes=True` embeds the S1 skewed-predicate subgraph
+    (`skewed_shape_triples`) used to benchmark backend selection."""
     rng = np.random.default_rng(seed)
     triples: list[tuple[str, str, str]] = []
     t = triples.append
     if join_shapes:
         triples.extend(join_shape_triples())
+    if skew_shapes:
+        triples.extend(skewed_shape_triples())
     for ui in range(scale):
         uni = _e(f"University{ui}")
         t((uni, RDF_TYPE, _u("University")))
@@ -162,5 +197,16 @@ J_QUERIES: dict[str, str] = {
         ?a <http://example.org/J/k1> ?b .
         ?b <http://example.org/J/k2> ?c .
         ?c <http://example.org/J/k3> ?d .
+    }""",
+}
+
+# Skewed-predicate shape over skewed_shape_triples(): a hot join key puts
+# the output within a constant factor of the dense |L|·|R| grid, so the
+# cost model (selectivity × skew) routes the join to the matrix backend.
+# Only valid on generate(..., skew_shapes=True).
+S_QUERIES: dict[str, str] = {
+    "S1": """SELECT ?x ?y ?z WHERE {
+        ?x <http://example.org/S/p1> ?y .
+        ?y <http://example.org/S/p2> ?z .
     }""",
 }

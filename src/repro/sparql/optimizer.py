@@ -67,6 +67,9 @@ class OptimizedProgram:
     branch_cross_flags: tuple[tuple[bool, ...], ...]
     filters: tuple[tuple[Stage, algebra.FilterExpr], ...]
     join_ests: tuple[float, ...]
+    # physical algebra per join slot ("mr" | "matrix"), aligned with
+    # join_ests; cross slots always carry "mr"
+    join_backends: tuple[str, ...]
     prune: bool
     trace: tuple[str, ...]
 
@@ -89,10 +92,29 @@ class OptimizedProgram:
 
 @dataclasses.dataclass
 class _State:
-    """Estimated intermediate: row count + per-variable distinct counts."""
+    """Estimated intermediate: row count, per-variable distinct counts and
+    per-variable degree skew (max/avg join fan-out of the predicate
+    position that bound the variable — the matrix backend's signal)."""
 
     card: float
     dv: dict[str, float]
+    skew: dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _filter_selectivity(expr: algebra.FilterExpr, dv: dict[str, float]) -> float:
+    """Textbook selectivity of a pushed filter over a single pattern:
+    `=` 1/distinct, range comparisons 1/3, `!=` 1 (conservative), `&&`
+    multiplies, `||` adds (clamped)."""
+    if isinstance(expr, algebra.Compare):
+        if expr.op == "=":
+            return 1.0 / max(1.0, dv.get(expr.lhs, 1.0))
+        if expr.op == "!=":
+            return 1.0
+        return 1.0 / 3.0
+    sels = [_filter_selectivity(c, dv) for c in expr.children]
+    if isinstance(expr, algebra.And):
+        return math.prod(sels)
+    return min(1.0, sum(sels))
 
 
 def _pattern_state(
@@ -100,13 +122,34 @@ def _pattern_state(
     leaf_card: Callable[[TriplePattern], float],
     stats: StoreStatistics,
     lookup,
+    filters: Sequence[algebra.FilterExpr] = (),
 ) -> _State:
     card = float(leaf_card(tp))
     dv = {
         v: max(1.0, min(stats.distinct_values(tp, v, lookup), card))
         for v in tp.variables()
     }
-    return _State(card, dv)
+    skew: dict[str, float] = {}
+    ps = None
+    if not tp.p.startswith("?"):
+        pid = lookup(tp.p)
+        ps = stats.predicates.get(pid) if pid is not None else None
+    for v in tp.variables():
+        if ps is not None and v == tp.s:
+            skew[v] = ps.s_skew
+        elif ps is not None and v == tp.o:
+            skew[v] = ps.o_skew
+        else:
+            skew[v] = 1.0
+    # fold pushed-filter selectivity into the leaf estimate: a filter whose
+    # variables the pattern binds will mask the scan before it joins, so
+    # the join ordering should see the filtered cardinality
+    tp_vars = set(tp.variables())
+    for expr in filters:
+        if tp_vars and set(expr.variables()) <= tp_vars:
+            card *= _filter_selectivity(expr, dv)
+    dv = {v: max(1.0, min(d, card)) for v, d in dv.items()}
+    return _State(card, dv, skew)
 
 
 def _join_states(a: _State, b: _State) -> tuple[_State, bool]:
@@ -120,17 +163,45 @@ def _join_states(a: _State, b: _State) -> tuple[_State, bool]:
     for v in set(a.dv) | set(b.dv):
         d = min(a.dv.get(v, math.inf), b.dv.get(v, math.inf))
         dv[v] = max(1.0, min(d, est)) if est > 0 else 1.0
-    return _State(est, dv), bool(shared)
+    skew = {
+        v: max(a.skew.get(v, 1.0), b.skew.get(v, 1.0))
+        for v in set(a.skew) | set(b.skew)
+    }
+    return _State(est, dv, skew), bool(shared)
+
+
+# -- backend selection: MR join vs matrix (masked SpMM) join ------------------
+
+# choose "matrix" when selectivity x skew says the join output is within a
+# constant factor of the dense |L| x |R| compare grid the matrix backend
+# walks: there the MR backend's two argsorts are pure overhead, while a hot
+# (skewed) key makes its expansion scale with the dense product anyway
+MATRIX_THRESHOLD = 0.5
+# never go dense past this |L| x |R| work bound, whatever the skew
+MATRIX_DENSE_CAP = 1 << 22
+
+
+def _choose_backend(a: _State, b: _State, est: float) -> str:
+    shared = set(a.dv) & set(b.dv)
+    if not shared:
+        return "mr"  # cross join: one algebra, slot value is padding
+    work = a.card * b.card
+    if work <= 0 or work > MATRIX_DENSE_CAP:
+        return "mr"
+    sigma = est / work
+    skew = max(max(a.skew.get(v, 1.0), b.skew.get(v, 1.0)) for v in shared)
+    return "matrix" if sigma * skew >= MATRIX_THRESHOLD else "mr"
 
 
 def _greedy_from(
     states: list[_State], start: int
-) -> tuple[list[int], list[bool], list[float], _State]:
+) -> tuple[list[int], list[bool], list[float], list[str], _State]:
     """Left-deep greedy order from a fixed head, minimising the estimated
     output of each next join (cross joins last, smallest first)."""
     order = [start]
     flags: list[bool] = []
     ests: list[float] = []
+    backends: list[str] = []
     cur = states[start]
     remaining = [i for i in range(len(states)) if i != start]
     while remaining:
@@ -148,9 +219,10 @@ def _greedy_from(
         order.append(nxt)
         flags.append(not shared)
         ests.append(new.card)
+        backends.append(_choose_backend(cur, states[nxt], new.card))
         cur = new
         remaining.remove(nxt)
-    return order, flags, ests, cur
+    return order, flags, ests, backends, cur
 
 
 # starts tried exhaustively up to this many patterns (n × O(n²) greedy
@@ -163,29 +235,35 @@ def order_patterns(
     leaf_card: Callable[[TriplePattern], float],
     stats: StoreStatistics,
     lookup,
-) -> tuple[list[int], tuple[bool, ...], list[float], _State]:
+    filters: Sequence[algebra.FilterExpr] = (),
+) -> tuple[list[int], tuple[bool, ...], list[float], list[str], _State]:
     """Statistics-backed join ordering for one BGP.
 
     Tries every pattern as the chain head and keeps the greedy order with
     the smallest (max, sum) of estimated intermediate cardinalities —
     deterministic for a given store, so structurally-equal queries keep
-    hashing to one PlanShape.
+    hashing to one PlanShape. `filters` (the query's FILTER conjuncts)
+    sharpen the leaf estimates: a conjunct a single pattern binds is
+    treated as a scan-stage mask, scaling that leaf by its selectivity.
     """
-    states = [_pattern_state(tp, leaf_card, stats, lookup) for tp in patterns]
+    states = [
+        _pattern_state(tp, leaf_card, stats, lookup, filters)
+        for tp in patterns
+    ]
     if len(patterns) == 1:
-        return [0], (), [], states[0]
+        return [0], (), [], [], states[0]
     if len(patterns) <= _MAX_EXHAUSTIVE_STARTS:
         starts = range(len(patterns))
     else:
         starts = [min(range(len(patterns)), key=lambda i: states[i].card)]
     best = None
     for s in starts:
-        order, flags, ests, final = _greedy_from(states, s)
+        order, flags, ests, backends, final = _greedy_from(states, s)
         key = (max(ests), sum(ests), tuple(order))
         if best is None or key < best[0]:
-            best = (key, order, flags, ests, final)
-    _, order, flags, ests, final = best
-    return order, tuple(flags), ests, final
+            best = (key, order, flags, ests, backends, final)
+    _, order, flags, ests, backends, final = best
+    return order, tuple(flags), ests, backends, final
 
 
 # -- the pass pipeline --------------------------------------------------------
@@ -205,7 +283,10 @@ def _order_bgp(
     enabled: bool,
     label: str,
     trace: list[str],
-) -> tuple[list[TriplePattern], tuple[bool, ...], list[float], _State]:
+    filters: Sequence[algebra.FilterExpr] = (),
+) -> tuple[
+    list[TriplePattern], tuple[bool, ...], list[float], list[str], _State
+]:
     """One BGP through the join_order pass (or the legacy greedy)."""
     leaf = store.estimate_cardinality
     lookup = store.dictionary.lookup
@@ -213,7 +294,8 @@ def _order_bgp(
         steps = plan_bgp(patterns, leaf)
         ordered = [patterns[st.pattern_index] for st in steps]
         flags = tuple(st.is_cross for st in steps[1:])
-        # estimates still reported for explain(), just not acted on
+        # estimates still reported for explain(), just not acted on; the
+        # legacy path always lowers to the MR backend
         states = [
             _pattern_state(tp, leaf, store.statistics, lookup)
             for tp in ordered
@@ -222,9 +304,9 @@ def _order_bgp(
         for st in states[1:]:
             cur, _ = _join_states(cur, st)
             ests.append(cur.card)
-        return ordered, flags, ests, cur
-    order, flags, ests, final = order_patterns(
-        patterns, leaf, store.statistics, lookup
+        return ordered, flags, ests, ["mr"] * len(ests), cur
+    order, flags, ests, backends, final = order_patterns(
+        patterns, leaf, store.statistics, lookup, filters
     )
     ordered = [patterns[i] for i in order]
     trace.append(
@@ -238,7 +320,14 @@ def _order_bgp(
             else ""
         )
     )
-    return ordered, flags, ests, final
+    if "matrix" in backends:
+        picked = [i for i, b in enumerate(backends) if b == "matrix"]
+        trace.append(
+            f"join_backend[{label}]: matrix join at step(s) "
+            + ", ".join(str(i) for i in picked)
+            + " (selectivity x skew >= threshold)"
+        )
+    return ordered, flags, ests, backends, final
 
 
 def _validate_optionals(
@@ -414,39 +503,54 @@ def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
     _validate_optionals(q, required_vars)
 
     join_ests: list[float] = []
+    join_backends: list[str] = []
+    est_filters = tuple(q.filters) if enabled else ()
     req_state: _State | None = None
     if q.patterns:
-        required, cross_flags, ests, req_state = _order_bgp(
-            q.patterns, store, enabled, "required", trace
+        required, cross_flags, ests, bks, req_state = _order_bgp(
+            q.patterns, store, enabled, "required", trace, est_filters
         )
         join_ests.extend(ests)
+        join_backends.extend(bks)
     else:
         required, cross_flags = [], ()
 
     opt_groups: list[tuple[TriplePattern, ...]] = []
     opt_cross_flags: list[tuple[bool, ...]] = []
     for gi, group in enumerate(q.optionals):
-        ordered, flags, ests, g_state = _order_bgp(
-            list(group), store, enabled, f"optional[{gi}]", trace
+        ordered, flags, ests, bks, g_state = _order_bgp(
+            list(group), store, enabled, f"optional[{gi}]", trace, est_filters
         )
         opt_groups.append(tuple(ordered))
         opt_cross_flags.append(flags)
         join_ests.extend(ests)
+        join_backends.extend(bks)
         joined, _ = _join_states(req_state, g_state)
         join_ests.append(joined.card)  # the left join's inner-join bucket
+        join_backends.append(
+            _choose_backend(req_state, g_state, joined.card)
+            if enabled
+            else "mr"
+        )
 
     branches: list[tuple[TriplePattern, ...]] = []
     branch_cross_flags: list[tuple[bool, ...]] = []
     for bi, branch in enumerate(q.unions):
-        ordered, flags, ests, b_state = _order_bgp(
-            list(branch), store, enabled, f"union[{bi}]", trace
+        ordered, flags, ests, bks, b_state = _order_bgp(
+            list(branch), store, enabled, f"union[{bi}]", trace, est_filters
         )
         branches.append(tuple(ordered))
         branch_cross_flags.append(flags)
         join_ests.extend(ests)
+        join_backends.extend(bks)
         if req_state is not None:
             joined, _ = _join_states(req_state, b_state)
             join_ests.append(joined.card)
+            join_backends.append(
+                _choose_backend(req_state, b_state, joined.card)
+                if enabled
+                else "mr"
+            )
 
     specs = _attach_filters(
         q, required, opt_groups, branches, enabled, trace
@@ -471,6 +575,7 @@ def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
         branch_cross_flags=tuple(branch_cross_flags),
         filters=specs,
         join_ests=tuple(join_ests),
+        join_backends=tuple(join_backends),
         prune=enabled,
         trace=tuple(trace),
     )

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -51,11 +52,39 @@ _CHOICE = {
 
 @dataclasses.dataclass(frozen=True)
 class PredicateStats:
-    """Per-predicate catalog row: triple count and distinct-term counts."""
+    """Per-predicate catalog row: triple count, distinct-term counts and
+    degree-skew metrics.
+
+    `max_s_degree` / `max_o_degree` are the largest per-subject fan-out /
+    per-object fan-in inside the predicate; the averages derive from the
+    counts. Their ratio (`s_skew` / `o_skew`) is the skew signal the
+    optimizer combines with join selectivity to pick the matrix join
+    backend: a hot key makes the MR backend's sort + expansion scale with
+    the dense product anyway, at which point the sort is pure overhead.
+    Defaults keep catalogs from before the skew fields loading (skew 1 =
+    uniform = never prefer the matrix backend on stale data)."""
 
     count: int
     n_subjects: int
     n_objects: int
+    max_s_degree: int = 1
+    max_o_degree: int = 1
+
+    @property
+    def avg_s_degree(self) -> float:
+        return self.count / max(1, self.n_subjects)
+
+    @property
+    def avg_o_degree(self) -> float:
+        return self.count / max(1, self.n_objects)
+
+    @property
+    def s_skew(self) -> float:
+        return self.max_s_degree / max(1.0, self.avg_s_degree)
+
+    @property
+    def o_skew(self) -> float:
+        return self.max_o_degree / max(1.0, self.avg_o_degree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,10 +120,14 @@ class StoreStatistics:
         bounds = list(starts) + [n]
         for k, pid in enumerate(pids):
             seg = ts[bounds[k]:bounds[k + 1]]
+            s_deg = np.unique(seg[:, 0], return_counts=True)[1]
+            o_deg = np.unique(seg[:, 2], return_counts=True)[1]
             preds[int(pid)] = PredicateStats(
                 count=len(seg),
-                n_subjects=int(np.unique(seg[:, 0]).size),
-                n_objects=int(np.unique(seg[:, 2]).size),
+                n_subjects=int(s_deg.size),
+                n_objects=int(o_deg.size),
+                max_s_degree=int(s_deg.max()),
+                max_o_degree=int(o_deg.max()),
             )
         return cls(
             n_triples=n,
@@ -126,6 +159,12 @@ class StoreStatistics:
                         count=old.count + ps.count,
                         n_subjects=old.n_subjects + ps.n_subjects,
                         n_objects=max(old.n_objects, ps.n_objects),
+                        # subject degrees are exact under subject-hash
+                        # partitioning (a subject lives on one shard);
+                        # object degrees merge as a lower bound, like the
+                        # distinct-object counts above
+                        max_s_degree=max(old.max_s_degree, ps.max_s_degree),
+                        max_o_degree=max(old.max_o_degree, ps.max_o_degree),
                     )
         return cls(
             n_triples=sum(p.n_triples for p in parts),
@@ -188,6 +227,62 @@ class StoreStatistics:
             return float(ps.n_objects if ps else self.n_objects)
         return 1.0
 
+    # -- persistence (warmup files carry the catalog so backend decisions
+    # -- survive restarts) ------------------------------------------------
+    def to_jsonable(self) -> dict:
+        return {
+            "n_triples": self.n_triples,
+            "n_subjects": self.n_subjects,
+            "n_objects": self.n_objects,
+            "n_predicates": self.n_predicates,
+            "predicates": {
+                str(pid): [
+                    ps.count,
+                    ps.n_subjects,
+                    ps.n_objects,
+                    ps.max_s_degree,
+                    ps.max_o_degree,
+                ]
+                for pid, ps in self.predicates.items()
+            },
+        }
+
+    @classmethod
+    def from_jsonable(cls, obj: dict) -> "StoreStatistics":
+        preds: dict[int, PredicateStats] = {}
+        for pid, row in obj["predicates"].items():
+            # rows from before the skew fields have 3 entries: default the
+            # degrees to 1 (uniform — the conservative backend choice)
+            count, n_s, n_o = (int(v) for v in row[:3])
+            max_s = int(row[3]) if len(row) > 3 else 1
+            max_o = int(row[4]) if len(row) > 4 else 1
+            preds[int(pid)] = PredicateStats(count, n_s, n_o, max_s, max_o)
+        return cls(
+            n_triples=int(obj["n_triples"]),
+            n_subjects=int(obj["n_subjects"]),
+            n_objects=int(obj["n_objects"]),
+            n_predicates=int(obj["n_predicates"]),
+            predicates=preds,
+        )
+
+
+class PredicateSparse(NamedTuple):
+    """A predicate's triples as a device-resident sparse matrix.
+
+    `coo` is the upload-once (subject, object) partial-match block in scan
+    order — the SAME device buffers `match_pattern_device` hands the
+    executor for a `(?s <p> ?o)` pattern, so caching it here adds no
+    staging. The CSR view rides alongside: `order` permutes the COO rows
+    into subject-sorted order, `subj_ids` are the distinct subjects and
+    `row_ptr` their segment bounds in that order — the adjacency structure
+    the masked-SpMM backend's reductions are defined over.
+    """
+
+    coo: Relation  # schema ("?0", "?1"), bucketed capacity, valid mask
+    subj_ids: jnp.ndarray  # (n_subj,) sorted distinct subject ids
+    row_ptr: jnp.ndarray  # (n_subj + 1,) CSR indptr into sorted order
+    order: jnp.ndarray  # (nnz,) COO row -> subject-sorted position
+
 
 @dataclasses.dataclass
 class TripleStore:
@@ -218,6 +313,9 @@ class TripleStore:
         self._stacked_hits = 0
         self._stacked_misses = 0
         self._num_vals = None  # device numeric-value table (FILTER support)
+        # per-predicate device CSR/COO (matrix join backend), FIFO like the
+        # scan caches; shares its COO buffers with _device_cache entries
+        self._sparse_cache: OrderedDict[int, PredicateSparse] = OrderedDict()
         self._statistics: StoreStatistics | None = None
 
     @property
@@ -339,23 +437,62 @@ class TripleStore:
         The device arrays are uploaded once per pattern structure and shared
         by every subsequent call (and across queries differing only in
         variable spelling); the returned Relation just rebinds the schema to
-        this pattern's variable names.
+        this pattern's variable names. A `(?s <p> ?o)` pattern shares its
+        buffers with the predicate's sparse representation
+        (`predicate_sparse`) instead of uploading a second copy.
         """
         key = self._scan_key(tp)
         entry = self._device_cache.get(key)
         if entry is None:
             self._scan_misses += 1
-            vars_, mat = self._pattern_columns(tp, self.match_rows(tp))
-            placeholder = tuple(f"?{i}" for i in range(len(vars_)))
-            entry = Relation.from_numpy(
-                placeholder, mat, capacity=bucket_capacity(len(mat))
-            )
+            if key[0] == "?0" and key[2] == "?1" and not key[1].startswith("?"):
+                # (?s <p> ?o) with distinct vars: reuse the predicate COO
+                sp = self.predicate_sparse(tp.p)
+                entry = sp.coo if sp is not None else Relation.from_numpy(
+                    ("?0", "?1"), np.zeros((0, 2), np.int32),
+                    capacity=bucket_capacity(0),
+                )
+            else:
+                vars_, mat = self._pattern_columns(tp, self.match_rows(tp))
+                placeholder = tuple(f"?{i}" for i in range(len(vars_)))
+                entry = Relation.from_numpy(
+                    placeholder, mat, capacity=bucket_capacity(len(mat))
+                )
             self._put(self._device_cache, key, entry, self.scan_cache_entries)
-            actual = vars_
         else:
             self._scan_hits += 1
-            actual, _ = self._pattern_columns(tp, np.zeros((0, 3), np.int32))
+        actual, _ = self._pattern_columns(tp, np.zeros((0, 3), np.int32))
         return Relation(tuple(actual), entry.cols, entry.valid)
+
+    def predicate_sparse(self, pred: str) -> "PredicateSparse | None":
+        """The predicate's device CSR/COO bundle (None for an unknown
+        predicate term), built on first use and cached FIFO. The COO block
+        is in scan order — identical rows, order and capacity to the
+        `match_pattern_device` entry for `(?s <p> ?o)` — so both caches
+        point at one device allocation."""
+        pid = self.dictionary.lookup(pred)
+        if pid is None:
+            return None
+        entry = self._sparse_cache.get(pid)
+        if entry is not None:
+            return entry
+        rows = self.match_rows(TriplePattern("?s", pred, "?o"))
+        mat = rows[:, [0, 2]] if len(rows) else np.zeros((0, 2), np.int32)
+        coo = Relation.from_numpy(
+            ("?0", "?1"), mat, capacity=bucket_capacity(len(mat))
+        )
+        order = np.argsort(mat[:, 0], kind="stable").astype(np.int32)
+        subj_ids, seg_counts = np.unique(mat[:, 0], return_counts=True)
+        row_ptr = np.zeros(len(subj_ids) + 1, np.int32)
+        np.cumsum(seg_counts, out=row_ptr[1:])
+        entry = PredicateSparse(
+            coo=coo,
+            subj_ids=jnp.asarray(subj_ids.astype(np.int32)),
+            row_ptr=jnp.asarray(row_ptr),
+            order=jnp.asarray(order),
+        )
+        self._put(self._sparse_cache, pid, entry, self.scan_cache_entries)
+        return entry
 
     def stacked_scan_device(
         self, tps: "tuple[TriplePattern, ...]"

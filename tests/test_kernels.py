@@ -125,3 +125,135 @@ def test_mr_join_with_kernel_expansion_matches_jnp():
     out_k, tot_k, _ = mj.mr_join(left, right, 2048, use_kernel=True)
     assert int(tot_j) == int(tot_k)
     assert out_j.to_set() == out_k.to_set()
+
+
+# ----------------------------------------------------------- spmm join ----
+from repro.kernels.spmm_join import ops as spmm_ops  # noqa: E402
+from repro.kernels.spmm_join import ref as spmm_ref  # noqa: E402
+
+
+def _layout_oracle(lk: np.ndarray, rk: np.ndarray):
+    eq = lk[:, None] == rk[None, :]
+    counts = eq.sum(1).astype(np.int32)
+    first = (rk[None, :] < lk[:, None]).sum(1).astype(np.int32)
+    b = (eq * (np.cumsum(eq, axis=0) - eq)).sum(1).astype(np.int32)
+    cl = eq.sum(0).astype(np.int32)
+    return counts, first, b, cl
+
+
+@pytest.mark.parametrize("n_l,n_r", [(1, 1), (2, 3), (40, 7), (130, 70),
+                                     (700, 80), (1024, 256), (1100, 300)])
+def test_match_layout_shapes(n_l, n_r):
+    rng = np.random.RandomState(n_l + n_r)
+    lk = rng.randint(0, 11, size=n_l).astype(np.int32)
+    rk = rng.randint(0, 11, size=n_r).astype(np.int32)
+    want = _layout_oracle(lk, rk)
+    for use_kernel in (False, True):
+        got = spmm_ops.match_layout(jnp.asarray(lk), jnp.asarray(rk),
+                                    use_kernel=use_kernel, interpret=True)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_match_layout_blocked_ref_matches_one_shot():
+    # force the blocked fori_loop path (n_l * n_r above the one-shot cap)
+    rng = np.random.RandomState(3)
+    n_l = spmm_ref.ONE_SHOT_ELEMS // 64 + 200  # not a BLOCK_ROWS multiple
+    lk = rng.randint(0, 13, size=n_l).astype(np.int32)
+    rk = rng.randint(0, 13, size=64).astype(np.int32)
+    got = spmm_ref.match_layout(jnp.asarray(lk), jnp.asarray(rk))
+    want = _layout_oracle(lk, rk)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+@pytest.mark.parametrize("n", [1, 2, 17, 255, 256, 1000, 1024, 1300])
+def test_sort_ranks_is_stable_sorted_position(n):
+    rng = np.random.RandomState(n)
+    keys = rng.randint(0, max(2, n // 3), size=n).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    want = np.empty(n, np.int64)
+    want[order] = np.arange(n)
+    for use_kernel in (False, True):
+        pos = spmm_ops.sort_ranks(jnp.asarray(keys), use_kernel=use_kernel,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(pos), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=120),
+       st.lists(st.integers(0, 9), min_size=1, max_size=120))
+def test_match_layout_hypothesis(ls, rs):
+    lk = np.array(ls, np.int32)
+    rk = np.array(rs, np.int32)
+    got = spmm_ops.match_layout(jnp.asarray(lk), jnp.asarray(rk),
+                                use_kernel=True, interpret=True)
+    for g, w in zip(got, _layout_oracle(lk, rk)):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_match_layout_vmaps():
+    rng = np.random.RandomState(5)
+    lks = rng.randint(0, 6, size=(4, 33)).astype(np.int32)
+    rks = rng.randint(0, 6, size=(4, 21)).astype(np.int32)
+    fn = jax.vmap(lambda a, b: spmm_ops.match_layout(a, b, use_kernel=False))
+    counts, first, b, cl = fn(jnp.asarray(lks), jnp.asarray(rks))
+    for i in range(4):
+        want = _layout_oracle(lks[i], rks[i])
+        for g, w in zip((counts[i], first[i], b[i], cl[i]), want):
+            np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def _join_rows(rel):
+    return np.asarray(rel.cols)[np.asarray(rel.valid)]
+
+
+@pytest.mark.parametrize("capacity", [1, 3, 16, 64, 4096])
+def test_matrix_join_matches_mr_join_exactly(capacity):
+    """Bit-identical output (order included) at every capacity, including
+    overflowing ones — the regrow loop depends on exact truncation."""
+    from repro.core import matrix_join as mxj
+    from repro.core import mr_join as mj
+    from repro.core.relation import Relation
+
+    rng = np.random.RandomState(11)
+    left = Relation.from_numpy(
+        ("?k", "?a"), rng.randint(0, 5, size=(50, 2)).astype(np.int32))
+    right = Relation.from_numpy(
+        ("?k", "?b"), rng.randint(0, 5, size=(41, 2)).astype(np.int32))
+    out_m, tot_m, ovf_m = mj.mr_join(left, right, capacity)
+    out_x, tot_x, ovf_x = mxj.matrix_join(left, right, capacity)
+    assert int(tot_m) == int(tot_x)
+    assert bool(ovf_m) == bool(ovf_x)
+    np.testing.assert_array_equal(_join_rows(out_m), _join_rows(out_x))
+
+
+def test_matrix_left_join_matches_mr_left_join():
+    from repro.core import matrix_join as mxj
+    from repro.core import mr_join as mj
+    from repro.core.relation import Relation
+
+    rng = np.random.RandomState(13)
+    left = Relation.from_numpy(
+        ("?k", "?a"), rng.randint(0, 9, size=(40, 2)).astype(np.int32))
+    right = Relation.from_numpy(
+        ("?k", "?b"), rng.randint(0, 9, size=(30, 2)).astype(np.int32))
+    out_m, tot_m, _ = mj.left_join(left, right, 512)
+    out_x, tot_x, _ = mxj.matrix_left_join(left, right, 512)
+    assert int(tot_m) == int(tot_x)
+    assert out_m.to_set() == out_x.to_set()
+
+
+def test_matrix_join_kernel_path_matches_ref_path():
+    from repro.core import matrix_join as mxj
+    from repro.core.relation import Relation
+
+    rng = np.random.RandomState(17)
+    left = Relation.from_numpy(
+        ("?k", "?a"), rng.randint(0, 7, size=(60, 2)).astype(np.int32))
+    right = Relation.from_numpy(
+        ("?k", "?b"), rng.randint(0, 7, size=(44, 2)).astype(np.int32))
+    out_r, tot_r, _ = mxj.matrix_join(left, right, 1024, use_kernel=False)
+    out_k, tot_k, _ = mxj.matrix_join(left, right, 1024, use_kernel=True)
+    assert int(tot_r) == int(tot_k)
+    np.testing.assert_array_equal(_join_rows(out_r), _join_rows(out_k))

@@ -123,7 +123,7 @@ def test_exhaustive_start_orders_from_selective_tail(j_store):
     """order_patterns starts J1 from the 12-row tail, not the 10-row type
     scan the greedy heuristic picks (whose only join explodes)."""
     q = parse(lubm.J_QUERIES["J1"])
-    order, flags, ests, _ = optimizer.order_patterns(
+    order, flags, ests, _backends, _ = optimizer.order_patterns(
         q.patterns,
         j_store.estimate_cardinality,
         j_store.statistics,
@@ -505,3 +505,236 @@ def test_compiled_matches_oracle_per_shape(shape):
     want = rows_as_sets(reference_rows(store, q))
     got = rows_as_sets(QueryEngine(store).query(text))
     assert got == want, text
+
+
+# ------------------------------------------- dual physical join algebra
+
+
+def _skew_store():
+    """One hot object on <hot>: 40 subjects point at it; plus singletons."""
+    triples = []
+    for i in range(40):
+        triples.append((f"<s{i}>", "<hot>", "<obj>"))
+    for i in range(10):
+        triples.append((f"<u{i}>", "<hot>", f"<v{i}>"))
+        triples.append((f"<obj>", "<next>", f"<w{i}>"))
+    return store_from_string_triples(triples)
+
+
+def test_predicate_skew_statistics():
+    stats = _skew_store().statistics
+    by_name = {}
+    lookup = _skew_store().dictionary  # only for readability below
+    for pid, ps in stats.predicates.items():
+        by_name[pid] = ps
+    hot = max(stats.predicates.values(), key=lambda ps: ps.max_o_degree)
+    assert hot.count == 50 and hot.max_o_degree == 40
+    assert hot.o_skew == pytest.approx(40 / (50 / 11))
+    assert hot.max_s_degree == 1 and hot.s_skew == pytest.approx(1.0)
+
+
+def test_skew_statistics_json_roundtrip():
+    stats = _skew_store().statistics
+    back = StoreStatistics.from_jsonable(
+        json.loads(json.dumps(stats.to_jsonable()))
+    )
+    assert back == stats
+    # pre-skew catalogs (3-entry rows) default the degrees to uniform
+    old = stats.to_jsonable()
+    old["predicates"] = {
+        pid: row[:3] for pid, row in old["predicates"].items()
+    }
+    degraded = StoreStatistics.from_jsonable(old)
+    assert all(
+        ps.max_s_degree == 1 and ps.max_o_degree == 1
+        for ps in degraded.predicates.values()
+    )
+
+
+def test_optimizer_routes_skewed_join_to_matrix_backend():
+    """S1's hot-key join must be routed to the matrix backend from the
+    store statistics alone — no override — and the trace must say so."""
+    store = lubm.generate(scale=1, seed=0, skew_shapes=True)
+    eng = QueryEngine(store)
+    text = lubm.S_QUERIES["S1"]
+    prog = eng._build_program(eng.prepare(text).query)
+    assert prog.plan.join_backends == ("matrix",)
+    assert "matrix_join" in eng.explain(text)
+    assert "join_backend[required]: matrix join" in eng.explain(text)
+
+
+def test_uniform_joins_stay_on_mr_backend():
+    """Plain LUBM joins have no hot key: every slot keeps the MR backend
+    and explain() renders mr_join."""
+    store = lubm.generate(scale=1, seed=0)
+    eng = QueryEngine(store)
+    for name in ("Q2", "Q9"):
+        prog = eng._build_program(eng.prepare(lubm.QUERIES[name]).query)
+        assert set(prog.plan.join_backends) <= {"mr"}, name
+        assert "matrix_join" not in eng.explain(lubm.QUERIES[name])
+
+
+def test_join_backend_override_validation():
+    store = student_store()
+    with pytest.raises(ValueError, match="join_backend"):
+        QueryEngine(store, join_backend="gpu")
+    # valid values pass through to every join slot
+    eng = QueryEngine(store, join_backend="matrix")
+    q = PREFIX + "SELECT ?x ?a WHERE { ?x a ub:Student . ?x ub:age ?a . }"
+    pq = eng.prepare(q)
+    shape = eng._shape_for(
+        pq._program,
+        tuple(store.match_pattern(tp).schema for tp in pq._program.patterns),
+        tuple(store.match_pattern(tp).capacity
+              for tp in pq._program.patterns),
+    )
+    assert set(shape.join_backends) == {"matrix"}
+
+
+def test_sharded_engine_rejects_matrix_backend():
+    from repro.sparql.engine import ShardedQueryEngine
+
+    store = student_store()
+    with pytest.raises(ValueError, match="matrix"):
+        ShardedQueryEngine(store, join_backend="matrix")
+
+
+@pytest.mark.parametrize("seed", [0, 2, 5])
+@pytest.mark.parametrize("shape", ["bgp", "filter", "optional", "union"])
+def test_backends_agree_with_oracle_per_shape(seed, shape):
+    """Differential (acceptance): MR backend == matrix backend == NumPy
+    oracle on every operator shape, compiled single-dispatch pipeline."""
+    store = _mini_store(seed)
+    text = _query_text(shape, p1=seed % 3, p2=(seed + 1) % 3,
+                       cmp_op=">=" if seed % 2 else "<", cut=19 + seed)
+    want = rows_as_sets(reference_rows(store, parse(text)))
+    got_mr = rows_as_sets(QueryEngine(store, join_backend="mr").query(text))
+    got_mx = rows_as_sets(
+        QueryEngine(store, join_backend="matrix").query(text))
+    assert got_mr == want, text
+    assert got_mx == want, text
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=7),
+    shape=st.sampled_from(["bgp", "filter", "optional", "union"]),
+    p1=st.integers(min_value=0, max_value=2),
+    p2=st.integers(min_value=0, max_value=2),
+)
+def test_backends_agree_property(seed, shape, p1, p2):
+    store = _mini_store(seed)
+    text = _query_text(shape, p1, p2, ">=", 20)
+    want = rows_as_sets(reference_rows(store, parse(text)))
+    assert rows_as_sets(
+        QueryEngine(store, join_backend="mr").query(text)) == want, text
+    assert rows_as_sets(
+        QueryEngine(store, join_backend="matrix").query(text)) == want, text
+
+
+def test_matrix_backend_warm_single_dispatch():
+    store = lubm.generate(scale=1, seed=0, skew_shapes=True)
+    eng = QueryEngine(store)  # auto: picks matrix for S1 from stats
+    pq = eng.prepare(lubm.S_QUERIES["S1"])
+    pq.run()
+    warm = pq.run()
+    assert warm.stats.n_compiles == 0
+    assert warm.stats.n_dispatches == 1
+    assert len(warm.rows) == 20000
+
+
+# -------------------------------------- filter-selectivity cost model
+
+
+def _filter_order_store():
+    """p1 is the biggest leaf (200 distinct subjects) but an `=` filter
+    collapses it to ~1 row; blind ordering leads with the tiny p2-p3 tail
+    instead (better sum of intermediates) and drags the full 200-row p1
+    relation through the chain."""
+    triples = []
+    for i in range(200):
+        triples.append((f"<x{i}>", "<p1>", f"<y{i % 4}>"))
+    for i in range(4):
+        triples.append((f"<y{i}>", "<p2>", f"<z{i}>"))
+    for i in range(4):
+        triples.append((f"<z{i}>", "<p3>", f"<w{i}>"))
+    return store_from_string_triples(triples)
+
+
+def test_filter_selectivity_changes_join_order():
+    import dataclasses
+
+    store = _filter_order_store()
+    text = ("SELECT ?x ?y ?z ?w WHERE { ?x <p1> ?y . ?y <p2> ?z . "
+            "?z <p3> ?w . FILTER (?x = <x3>) }")
+    q = parse(text)
+    aware = optimizer.optimize(q, store)
+    blind = optimizer.optimize(dataclasses.replace(q, filters=()), store)
+    # the equality filter collapses p1's leaf estimate, so the aware
+    # order leads with it; blind ordering starts elsewhere
+    assert aware.required[0].p == "<p1>"
+    assert blind.required[0].p != "<p1>"
+    assert max(aware.join_ests) * 4 <= max(blind.join_ests)
+
+
+def test_filter_selectivity_shrinks_join_buckets():
+    """End-to-end regression: with the selectivity-aware model the
+    compiled pipeline's peak join bucket shrinks vs the legacy order
+    (which both ignores filters and orders greedily)."""
+    store = _filter_order_store()
+    text = ("SELECT ?x ?y ?z ?w WHERE { ?x <p1> ?y . ?y <p2> ?z . "
+            "?z <p3> ?w . FILTER (?x = <x3>) }")
+    r_opt = QueryEngine(store).prepare(text).run()
+    r_leg = QueryEngine(store, optimize=False).prepare(text).run()
+    assert rows_as_sets(r_opt.rows) == rows_as_sets(r_leg.rows)
+    assert r_opt.stats.peak_join_bucket < r_leg.stats.peak_join_bucket
+
+
+# ------------------------------------------ warmup with skew statistics
+
+
+def test_save_cache_v3_roundtrips_statistics_and_backends(tmp_path):
+    store = lubm.generate(scale=1, seed=0, skew_shapes=True)
+    eng = QueryEngine(store)
+    text = lubm.S_QUERIES["S1"]
+    eng.prepare(text).run()
+    path = tmp_path / "warmup.json"
+    assert eng.save_cache(str(path)) == 1
+    blob = json.loads(path.read_text())
+    assert blob["version"] == 3
+    assert "statistics" in blob
+    assert any(
+        "matrix" in e["shape"].get("join_backends", [])
+        for e in blob["entries"]
+    )
+    # a fresh engine on a fresh store object: statistics come from the
+    # file (no recompute) and the matrix plan replays without calibration
+    store2 = lubm.generate(scale=1, seed=0, skew_shapes=True)
+    assert store2._statistics is None
+    eng2 = QueryEngine(store2, warmup_path=str(path))
+    assert store2._statistics is not None
+    r = eng2.prepare(text).run()
+    assert r.stats.n_count_passes == 0
+    assert r.stats.n_compiles == 1 and r.stats.n_dispatches == 1
+    assert len(r.rows) == 20000
+
+
+def test_save_cache_v2_files_still_load(tmp_path):
+    """Warmup files from before the statistics block (version 2) load;
+    shapes without join_backends default every slot to the MR backend."""
+    store = student_store()
+    eng = QueryEngine(store)
+    q = PREFIX + "SELECT ?x ?a WHERE { ?x a ub:Student . ?x ub:age ?a . }"
+    eng.query(q)
+    path = tmp_path / "v2.json"
+    eng.save_cache(str(path))
+    blob = json.loads(path.read_text())
+    blob["version"] = 2
+    blob.pop("statistics", None)
+    for e in blob["entries"]:
+        e["shape"].pop("join_backends", None)
+    path.write_text(json.dumps(blob))
+    eng2 = QueryEngine(store, warmup_path=str(path))
+    r = eng2.prepare(q).run()
+    assert r.stats.n_count_passes == 0
+    assert rows_as_sets(r.rows) == rows_as_sets(eng.query(q))
