@@ -22,6 +22,12 @@ dispatches). The dispatch count is asserted — it is the structural win and
 is deterministic — and the timing ratio is reported; the batched records
 are also written to the BENCH_4.json artifact.
 
+W1 measures the live-update path: insert_triples ingest rate over a batch
+size sweep, warm-query latency before / after in-headroom writes / after
+compaction, and asserts the warm plan cache survives the whole sequence
+(0 compiles, 1 dispatch) with results equal to a store rebuilt from
+scratch. Records land in BENCH_7.json.
+
     PYTHONPATH=src python -m benchmarks.bench_query [scale] [repeats]
     PYTHONPATH=src python -m benchmarks.bench_query --quick
 """
@@ -265,6 +271,118 @@ def bench_backend(repeats: int, seed: int = 0) -> list[dict]:
     return out
 
 
+def bench_updates(scale: int, repeats: int, seed: int = 0) -> dict:
+    """W1: the live-update path — ingest rate, warm-query latency across
+    writes, and compaction.
+
+    Sweeps insert_triples batch sizes for triples/sec, then warms the F1
+    filter shape, applies inserts sized within the warm pattern's bucket
+    headroom (reusing existing dictionary terms, so neither the scan
+    buckets nor the pow-2 numeric table change shape) plus a few deletes
+    of original base rows, and measures warm latency before the writes,
+    after the writes, and after compact(). Asserts the acceptance
+    property: the previously-warm shape re-runs at 0 compiles / 1
+    dispatch after writes AND after compaction, and its rows equal a
+    store rebuilt from scratch from the post-update triples.
+    """
+    from repro.core.planner import TriplePattern
+    from repro.sparql.store import store_from_string_triples
+
+    store = lubm.generate(scale=scale, seed=seed)
+
+    # ingest-rate sweep: fresh subjects/objects under a bench-only
+    # predicate, so the query shapes below are untouched
+    ingest = []
+    k = 0
+    for batch in (64, 256, 1024):
+        rows = []
+        for _ in range(batch):
+            rows.append((f"<w1:s{k}>", "<w1:ingest>", f"<w1:o{k}>"))
+            k += 1
+        t0 = time.perf_counter()
+        applied = store.insert_triples(rows)
+        dt = time.perf_counter() - t0
+        assert applied == batch
+        ingest.append({
+            "batch_size": batch,
+            "ms": dt * 1e3,
+            "triples_per_s": batch / dt,
+        })
+
+    eng = QueryEngine(store)
+    text = EXTRA_QUERIES["F1"]
+    pq = eng.prepare(text)
+    pq.run()  # calibrate + compile
+    warm0 = pq.run()
+    assert warm0.stats.n_compiles == 0 and warm0.stats.n_dispatches == 1
+    t_before = _time(lambda: pq.run(), repeats)
+
+    # writes sized within the warm name-pattern's bucket headroom, built
+    # from existing terms only (cross-pairing professors with other
+    # professors' names) so no dictionary growth can force a recompile
+    d = store.dictionary
+    name_tp = TriplePattern("?p", f"<{lubm.UB}name>", "?n")
+    matches = store.match_rows(name_tp)
+    headroom = store.scan_capacity(name_tp) - len(matches)
+    have = {(int(s), int(o)) for s, _, o in matches}
+    pid = d.lookup(f"<{lubm.UB}name>")
+    new_rows = []
+    for s, _, _ in matches:
+        o = int(matches[(len(new_rows) * 7 + 3) % len(matches)][2])
+        if (int(s), o) not in have and len(new_rows) < max(0, headroom - 2):
+            new_rows.append(
+                (d.decode(int(s)), d.decode(pid), d.decode(o)))
+            have.add((int(s), o))
+    inserted = store.insert_triples(new_rows)
+    deleted = store.delete_triples([
+        (d.decode(int(s)), d.decode(int(p)), d.decode(int(o)))
+        for s, p, o in matches[:2]
+    ])
+    warm1 = pq.run()
+    assert warm1.stats.n_compiles == 0 and warm1.stats.n_dispatches == 1, (
+        "W1: warm shape recompiled after in-headroom writes "
+        f"({warm1.stats.n_compiles} compiles)"
+    )
+    t_after_writes = _time(lambda: pq.run(), repeats)
+    ws_before_compact = store.write_stats()
+
+    t0 = time.perf_counter()
+    store.compact()
+    compact_ms = (time.perf_counter() - t0) * 1e3
+    warm2 = pq.run()
+    assert warm2.stats.n_compiles == 0 and warm2.stats.n_dispatches == 1, (
+        "W1: warm shape recompiled after compaction "
+        f"({warm2.stats.n_compiles} compiles)"
+    )
+    t_after_compact = _time(lambda: pq.run(), repeats)
+
+    # differential acceptance: post-update rows == a store rebuilt from
+    # scratch from the effective triples
+    rebuilt = store_from_string_triples(sorted(
+        (d.decode(int(s)), d.decode(int(p)), d.decode(int(o)))
+        for s, p, o in store.triples
+    ))
+    key = lambda rows: sorted(tuple(sorted(r.items())) for r in rows)
+    assert key(warm2.rows) == key(QueryEngine(rebuilt).query(text)), (
+        "W1: post-update results diverge from a rebuilt store"
+    )
+
+    return {
+        "query": "W1",
+        "rows": len(warm2.rows),
+        "ingest": ingest,
+        "inserted": inserted,
+        "deleted": deleted,
+        "warm_ms_before_writes": t_before * 1e3,
+        "warm_ms_after_writes": t_after_writes * 1e3,
+        "warm_ms_after_compact": t_after_compact * 1e3,
+        "compact_ms": compact_ms,
+        "write_stats_before_compact": ws_before_compact,
+        "write_stats_after_compact": store.write_stats(),
+        "warm_cache_preserved": True,  # asserted above
+    }
+
+
 def bench(scale: int = 2, repeats: int = 20, seed: int = 0) -> list[dict]:
     store = lubm.generate(scale=scale, seed=seed, join_shapes=True)
     eager = QueryEngine(store, compiled=False)
@@ -344,6 +462,22 @@ def main() -> None:
             json.dump({"repeats": repeats,
                        "backend": backend_records}, f, indent=2)
         print("# wrote BENCH_6.json")
+        # W1: live updates — ingest rate, warm latency across writes and
+        # compaction, warm-cache-preserved + differential assertions
+        w1 = bench_updates(scale, repeats)
+        for rec in w1["ingest"]:
+            print(f"# W1 ingest: batch={rec['batch_size']} "
+                  f"{rec['triples_per_s']:.0f} triples/s")
+        print(f"# W1: rows={w1['rows']} inserted={w1['inserted']} "
+              f"deleted={w1['deleted']} "
+              f"warm_before={w1['warm_ms_before_writes']:.2f}ms "
+              f"warm_after_writes={w1['warm_ms_after_writes']:.2f}ms "
+              f"warm_after_compact={w1['warm_ms_after_compact']:.2f}ms "
+              f"compact={w1['compact_ms']:.2f}ms")
+        with open("BENCH_7.json", "w") as f:
+            json.dump({"scale": scale, "repeats": repeats,
+                       "updates": w1}, f, indent=2)
+        print("# wrote BENCH_7.json")
     # D1: sharded vs single-device execution, 1 vs 4 forced host devices.
     # Runs on CPU too (subprocesses force the device count); prints the
     # shard-count scaling and asserts the per-shard bucket win.

@@ -24,6 +24,14 @@ parsing and planning entirely. The first request of a given query shape
 pays calibration + compilation, every later request (from any client) is a
 cache hit dispatching a single precompiled device program. `stats()`
 reports the cache hit rates so operators can watch the warm fraction.
+
+The store is live: `update(text)` applies `INSERT DATA` / `DELETE DATA`
+requests through the delta-block write path. Cached prepared handles stay
+valid across updates — each run re-stages its scans at the store's current
+version, so warm plan shapes keep dispatching precompiled programs as long
+as writes stay within their capacity buckets. `stats()["store"]` and
+`stats()["updates"]` report store version, tail/tombstone sizes, and the
+server's cumulative write counters.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ import dataclasses
 from collections import OrderedDict
 
 from repro.serve.batcher import MicroBatcher
-from repro.sparql.engine import PreparedQuery, QueryEngine
+from repro.sparql.engine import PreparedQuery, QueryEngine, UpdateResult
 from repro.sparql.parser import ParseError
 
 
@@ -101,6 +109,10 @@ class SPARQLServer:
         self._prepared: OrderedDict[str, PreparedQuery] = OrderedDict()
         self._prepared_hits = 0
         self._prepared_misses = 0
+        # update-endpoint counters (stats()["updates"])
+        self._update_requests = 0
+        self._rows_inserted = 0
+        self._rows_deleted = 0
 
     def _prepared_handle(self, text: str) -> tuple[PreparedQuery, bool]:
         pq = self._prepared.get(text)
@@ -159,6 +171,28 @@ class SPARQLServer:
         failures) on this thread if the request failed."""
         return self._batcher.submit(text)
 
+    def update(self, text: str) -> UpdateResult:
+        """Apply a SPARQL UPDATE request (`INSERT DATA` / `DELETE DATA`,
+        `;`-separated) against the live store.
+
+        Updates run synchronously on the caller's thread under the store's
+        snapshot lock — in-flight query batches that already staged their
+        scans keep their pinned snapshot, later requests see the new store
+        version. Prepared handles cached by the server stay valid: they
+        re-stage scans at the current version on their next run (a query
+        whose scan outgrows its capacity bucket simply compiles one new
+        plan-cache entry). Parse failures raise ParseQueryError."""
+        try:
+            res = self.engine.update(text)
+        except ParseQueryError:
+            raise
+        except ParseError as e:
+            raise ParseQueryError(str(e), query=text) from e
+        self._update_requests += 1
+        self._rows_inserted += res.inserted
+        self._rows_deleted += res.deleted
+        return res
+
     def explain(self, text: str) -> str:
         """Host-side plan report (algebra, optimizer trace, physical plan,
         cache state) for a query, through the prepared-handle cache."""
@@ -184,6 +218,12 @@ class SPARQLServer:
             "requests": self._batcher.n_requests,
             "plan_cache": self.engine.cache_stats(),
             "scan_cache": self.engine.store.scan_cache_stats(),
+            "store": self.engine.store.write_stats(),
+            "updates": {
+                "requests": self._update_requests,
+                "rows_inserted": self._rows_inserted,
+                "rows_deleted": self._rows_deleted,
+            },
             "prepared_cache": {
                 "entries": len(self._prepared),
                 "hits": self._prepared_hits,

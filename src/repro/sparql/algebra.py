@@ -240,6 +240,39 @@ AlgebraNode = Union[
 ]
 
 
+# -- update surface (SPARQL Update ground-data operations) --------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertData:
+    """INSERT DATA { ... }: ground triples appended to the store's mutable
+    delta tail. Triples are TriplePatterns with no variables (the parser
+    enforces groundness)."""
+
+    triples: tuple[TriplePattern, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeleteData:
+    """DELETE DATA { ... }: ground triples removed from the store — matching
+    tail rows drop immediately, matching base rows are tombstoned until the
+    next compaction."""
+
+    triples: tuple[TriplePattern, ...]
+
+
+UpdateOp = Union[InsertData, DeleteData]
+
+
+def format_update(ops: tuple[UpdateOp, ...]) -> str:
+    """One line per operation, mirroring format_algebra's report style."""
+    lines = []
+    for op in ops:
+        kind = "InsertData" if isinstance(op, InsertData) else "DeleteData"
+        lines.append(f"{kind}({len(op.triples)} triple(s))")
+    return "\n".join(lines)
+
+
 def format_algebra(node: AlgebraNode, indent: int = 0) -> str:
     """Indented one-node-per-line rendering (used by PreparedQuery.explain)."""
     pad = "  " * indent

@@ -20,6 +20,11 @@ The public API is layered around prepared queries:
                                           (vmapped) device dispatches —
                                           N warm same-shape queries cost
                                           ceil(N / width) launches
+  engine.update(text)  -> UpdateResult    INSERT DATA / DELETE DATA against
+                                          the store's delta blocks; warm
+                                          plan shapes survive the write
+  engine.stats()       -> dict            plan cache + scan cache + the
+                                          store's write-path health
 
 Two execution modes share one planner:
 
@@ -61,7 +66,7 @@ from repro.core import plan_ir
 from repro.core.planner import TriplePattern
 from repro.core.relation import UNBOUND, Relation
 from repro.sparql import algebra, optimizer
-from repro.sparql.parser import Query, parse
+from repro.sparql.parser import Query, UpdateRequest, parse, parse_update
 from repro.sparql.store import TripleStore, _next_pow2
 
 # LIMIT stand-in when only OFFSET was given (far above max_capacity, safe
@@ -85,6 +90,9 @@ class ExecStats:
     # this run (0 = solo). Batchmates share one dispatch, so their
     # n_dispatches/n_compiles report the chunk's shared counts.
     batch_width: int = 0
+    # the store version this run's scans were staged at (-1 = not set):
+    # the snapshot the results are consistent with
+    store_version: int = -1
 
     def add(self, other: "ExecStats") -> None:
         self.n_joins += other.n_joins
@@ -99,6 +107,7 @@ class ExecStats:
         self.n_compiles += other.n_compiles
         self.n_dispatches += other.n_dispatches
         self.batch_width = max(self.batch_width, other.batch_width)
+        self.store_version = max(self.store_version, other.store_version)
 
 
 @dataclasses.dataclass
@@ -116,6 +125,11 @@ class PlanCacheEntry:
     # round-trips them even before this process serves a stacked batch);
     # pre-layout files carried widths only — those load as all-stacked
     warm_layouts: tuple[tuple, ...] = ()
+    # numeric-value table length the executable was lowered against
+    # (0 = unchecked). Inserts that grow the dictionary past a pow-2
+    # boundary change that shape; the engine recompiles the entry at the
+    # same join caps when it notices the mismatch.
+    num_cap: int = 0
 
     def widths(self) -> tuple[int, ...]:
         """Known stacked widths for this signature: compiled this process
@@ -229,11 +243,14 @@ class _BatchCtx:
     key and the canonical->original name mapping. Deliberately holds no
     device arrays — scans are re-fetched from the store's bounded caches
     per batch, so a cached PreparedQuery handle never pins device buffers
-    past the scan cache's eviction policy."""
+    past the scan cache's eviction policy. `store_version` records the
+    version the shape was computed at: a write can move a pattern into a
+    bigger capacity bucket, so a stale ctx is recomputed before grouping."""
 
     prog: _Program
     shape: plan_ir.PlanShape
     inverse: dict[str, str]
+    store_version: int = -1
 
 
 class ResultSet:
@@ -286,6 +303,25 @@ class PreparedQuery:
         self.stats = ExecStats()  # accumulated across runs
         self.last_stats: ExecStats | None = None
         self.n_runs = 0
+        # the store version this handle was planned against. Runs stay
+        # CORRECT regardless (scans re-stage at the current version each
+        # run, under the store's snapshot lock); the pin records which
+        # statistics the optimizer's choices reflect — see refresh().
+        self.planned_version = engine.store.version
+
+    def refresh(self) -> bool:
+        """Re-plan against the store's current statistics if data changed
+        since this handle was planned (or last refreshed).
+
+        Optional: run() results are always computed on the live snapshot;
+        refresh only updates the optimizer's join-order/backend choices
+        (and this handle's pinned version). Returns True if re-planned."""
+        if self.planned_version == self.engine.store.version:
+            return False
+        self._program = self.engine._build_program(self.query)
+        self._batch_ctx = None
+        self.planned_version = self.engine.store.version
+        return True
 
     def run(self) -> ResultSet:
         stats = ExecStats()
@@ -298,6 +334,18 @@ class PreparedQuery:
 
     def explain(self) -> str:
         return self.engine._explain_program(self, self._program)
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """Outcome of engine.update(): rows actually applied (set semantics —
+    duplicate inserts and absent deletes are skipped) and the store
+    version the update committed at."""
+
+    inserted: int
+    deleted: int
+    n_ops: int
+    version: int
 
 
 @dataclasses.dataclass
@@ -434,8 +482,41 @@ class QueryEngine:
     def explain(self, text: str) -> str:
         return self.prepare(text).explain()
 
+    def update(self, text: str) -> UpdateResult:
+        """Parse and apply `INSERT DATA { ... }` / `DELETE DATA { ... }`
+        operations, in request order, atomically against queries (the
+        whole request holds the store's write lock, so no run observes a
+        half-applied request).
+
+        Warm plan shapes survive the write: inserted rows and tombstone
+        masks ride inside the existing pow-2 scan buckets, so previously
+        compiled programs keep re-running at 0 compiles / 1 dispatch until
+        a pattern outgrows its bucket."""
+        req: UpdateRequest = parse_update(text)
+        inserted = deleted = 0
+        with self.store.snapshot_lock():
+            for op in req.ops:
+                rows = [(tp.s, tp.p, tp.o) for tp in op.triples]
+                if isinstance(op, algebra.InsertData):
+                    inserted += self.store.insert_triples(rows)
+                else:
+                    deleted += self.store.delete_triples(rows)
+        return UpdateResult(
+            inserted, deleted, len(req.ops), self.store.version
+        )
+
     def cache_stats(self) -> dict:
         return self.plan_cache.stats()
+
+    def stats(self) -> dict:
+        """One observability snapshot: plan cache, scan cache, and the
+        store's write-path health (version, tail size, tombstone count,
+        compaction count)."""
+        return {
+            "plan_cache": self.plan_cache.stats(),
+            "scan_cache": self.store.scan_cache_stats(),
+            "store": self.store.write_stats(),
+        }
 
     def run_batch(self, prepared: list[PreparedQuery]) -> list[ResultSet]:
         """Execute a micro-batch, coalescing same-shape queries.
@@ -475,9 +556,14 @@ class QueryEngine:
         groups: OrderedDict[plan_ir.PlanShape, list[int]] = OrderedDict()
         for i, pq in enumerate(prepared):
             try:
-                # staging is immutable per handle (program, device scans,
-                # cache key) — compute once, reuse across micro-batches
-                if pq._batch_ctx is None:
+                # staging is stable per handle between writes (program,
+                # cache key) — compute once, reuse across micro-batches,
+                # recompute after a store version bump (a write can move a
+                # pattern into a bigger capacity bucket = a new shape)
+                if (
+                    pq._batch_ctx is None
+                    or pq._batch_ctx.store_version != self.store.version
+                ):
                     pq._batch_ctx = self._batch_context(pq._program)
                 ctxs[i] = pq._batch_ctx
             except Exception as e:
@@ -490,8 +576,12 @@ class QueryEngine:
 
     # -- batched execution internals ---------------------------------------
     def _batch_context(self, prog: _Program) -> "_BatchCtx":
-        _, shape, inverse = self._canonicalize(prog)
-        return _BatchCtx(prog=prog, shape=shape, inverse=inverse)
+        with self.store.snapshot_lock():
+            _, shape, inverse = self._canonicalize(prog)
+            version = self.store.version
+        return _BatchCtx(
+            prog=prog, shape=shape, inverse=inverse, store_version=version
+        )
 
     def _run_single(
         self, pq: PreparedQuery, group: BatchGroupStats
@@ -566,22 +656,24 @@ class QueryEngine:
         # staging W stacked copies
         scans_b: list[Relation] = []
         axes: list[int | None] = []
-        for j in range(len(shape.scan_schemas)):
-            tps = tuple(c.prog.patterns[j] for c in lanes)
-            if len({self.store._scan_key(tp) for tp in tps}) == 1:
-                rel = self.store.match_pattern_device(tps[0])
-                scans_b.append(
-                    Relation(shape.scan_schemas[j], rel.cols, rel.valid)
-                )
-                axes.append(None)
-            else:
-                scans_b.append(
-                    Relation(
-                        shape.scan_schemas[j],
-                        *self.store.stacked_scan_device(tps),
+        with self.store.snapshot_lock():  # one store version per chunk
+            for j in range(len(shape.scan_schemas)):
+                tps = tuple(c.prog.patterns[j] for c in lanes)
+                if len({self.store._scan_key(tp) for tp in tps}) == 1:
+                    rel = self.store.match_pattern_device(tps[0])
+                    scans_b.append(
+                        Relation(shape.scan_schemas[j], rel.cols, rel.valid)
                     )
-                )
-                axes.append(0)
+                    axes.append(None)
+                else:
+                    scans_b.append(
+                        Relation(
+                            shape.scan_schemas[j],
+                            *self.store.stacked_scan_device(tps),
+                        )
+                    )
+                    axes.append(0)
+            staged_version = self.store.version
         scans_b = tuple(scans_b)
         scan_axes = tuple(axes)
         group.n_broadcast_scans += sum(1 for a in scan_axes if a is None)
@@ -590,9 +682,19 @@ class QueryEngine:
         active = jnp.asarray(np.arange(width) < n)
         num_vals = self.store.numeric_values_device()
         stats = ExecStats(
-            n_joins=shape.n_joins(), cache_hits=1, batch_width=width
+            n_joins=shape.n_joins(),
+            cache_hits=1,
+            batch_width=width,
+            store_version=staged_version,
         )
         self.plan_cache.hits += n
+        if entry.num_cap not in (0, int(num_vals.shape[-1])):
+            # dictionary growth crossed a pow-2 boundary since the entry
+            # compiled: recompile at the same join caps (shape unchanged)
+            template_scans, _, _ = self._canonicalize(lanes[0].prog)
+            entry = self._compile_entry(
+                shape, entry.join_caps, template_scans, None, stats
+            )
         try:
             while True:
                 bexec = entry.batched.get((width, scan_axes))
@@ -784,7 +886,11 @@ class QueryEngine:
     def _execute_program(self, prog: _Program, stats: ExecStats) -> Relation:
         if self.compiled:
             return self._execute_compiled(prog, stats)
-        scans = tuple(self.store.match_pattern(tp) for tp in prog.patterns)
+        with self.store.snapshot_lock():  # consistent version across scans
+            scans = tuple(
+                self.store.match_pattern(tp) for tp in prog.patterns
+            )
+            stats.store_version = self.store.version
         shape = self._shape_for(
             prog,
             tuple(s.schema for s in scans),
@@ -961,10 +1067,14 @@ class QueryEngine:
         (bucketed pow-2 capacities), variable names canonicalised so
         structurally-equal queries share one compiled program (constants
         live in the scan data and the runtime-constant inputs, not here).
-        Returns (canonical scans, shape, canonical -> original names)."""
-        scans = tuple(
-            self.store.match_pattern_device(tp) for tp in prog.patterns
-        )
+        Returns (canonical scans, shape, canonical -> original names).
+
+        Staging runs under the store's snapshot lock so every scan reflects
+        ONE store version even while concurrent updates land."""
+        with self.store.snapshot_lock():
+            scans = tuple(
+                self.store.match_pattern_device(tp) for tp in prog.patterns
+            )
         schemas = tuple(s.schema for s in scans)
         rename = plan_ir.canonical_renaming(schemas)
         inverse = {c: o for o, c in rename.items()}
@@ -1001,11 +1111,23 @@ class QueryEngine:
         return tuple(plan_ir.bucket_capacity(t) for t in totals)
 
     def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
-        canon_scans, shape, inverse = self._canonicalize(prog)
+        with self.store.snapshot_lock():
+            canon_scans, shape, inverse = self._canonicalize(prog)
+            stats.store_version = self.store.version
         stats.n_joins = shape.n_joins()
         consts_i, consts_f, num_vals = self._device_consts(prog)
 
         entry = self.plan_cache.get(shape)
+        if entry is not None and entry.num_cap not in (
+            0,
+            int(num_vals.shape[-1]),
+        ):
+            # dictionary growth crossed a pow-2 boundary since the entry
+            # compiled (the numeric table is an input shape the executable
+            # is specialised on): recompile at the same join caps
+            entry = self._compile_entry(
+                shape, entry.join_caps, canon_scans, prog, stats
+            )
         if entry is None:
             rel = self._compiled_cold(shape, canon_scans, prog, stats)
         else:
@@ -1146,6 +1268,7 @@ class QueryEngine:
             join_caps,
             compiled,
             warm_layouts=self._warm_layouts.get(shape, ()),
+            num_cap=int(self.store.numeric_values_device().shape[-1]),
         )
         if prog is not None:
             # cold-compile path only: a regrow retry (prog=None) must not
@@ -1232,9 +1355,9 @@ class QueryEngine:
         n_req = len(prog.cross_flags) + 1 if prog.has_required else 0
         n_opt = sum(g.n_scans for g in prog.opt_groups)
         for i, tp in enumerate(prog.patterns):
-            schema, n_rows = self.store.pattern_scan_info(tp)
+            schema, _ = self.store.pattern_scan_info(tp)
             schemas.append(schema)
-            caps.append(plan_ir.bucket_capacity(n_rows))
+            caps.append(self.store.scan_capacity(tp))
             if i < n_req:
                 kind = "required"
             elif i < n_req + n_opt:
@@ -1319,6 +1442,17 @@ class QueryEngine:
             f"plan-cache: {len(self.plan_cache)} entries, "
             f"hit_rate={self.plan_cache.hit_rate:.0%}"
         )
+        stale = pq.planned_version != self.store.version
+        lines.append(
+            f"store: version={self.store.version}, planned against "
+            f"v{pq.planned_version}"
+            + (
+                " (stale: refresh() re-plans on current statistics; "
+                "runs are snapshot-consistent either way)"
+                if stale
+                else ""
+            )
+        )
         lines.append(
             f"handle: {pq.n_runs} run(s)"
             + (
@@ -1399,6 +1533,7 @@ class ShardedQueryEngine(QueryEngine):
         self._rep_sharding = NamedSharding(self.mesh, P())
         self.store.row_sharding = self._row_sharding
         self._num_vals_rep = None
+        self._num_vals_src = None  # store table the replica was built from
         # shuffle bucket signatures persisted by a previous process (the
         # sharded extension of the warmup file; absent in older files)
         self._warm_shuffle: dict[plan_ir.PlanShape, tuple[int, ...]] = {}
@@ -1416,10 +1551,13 @@ class ShardedQueryEngine(QueryEngine):
         return jax.device_put(arr, self._rep_sharding)
 
     def _num_vals(self) -> jax.Array:
-        if self._num_vals_rep is None:
-            self._num_vals_rep = self._replicated(
-                np.asarray(self.store.numeric_values_device())
-            )
+        # the store rebuilds its table when inserts grow the dictionary;
+        # rebuild the mesh replica whenever the source array changes (an
+        # identity check — the store caches one array object per build)
+        base = self.store.numeric_values_device()
+        if self._num_vals_rep is None or self._num_vals_src is not base:
+            self._num_vals_src = base
+            self._num_vals_rep = self._replicated(np.asarray(base))
         return self._num_vals_rep
 
     def _device_consts(self, prog: _Program):
@@ -1529,7 +1667,12 @@ class ShardedQueryEngine(QueryEngine):
         )
         stats.n_compiles += 1
         self.plan_cache.compiles += 1
-        entry = PlanCacheEntry(shape, join_caps, compiled)
+        entry = PlanCacheEntry(
+            shape,
+            join_caps,
+            compiled,
+            num_cap=int(self._num_vals().shape[-1]),
+        )
         self.plan_cache.put(shape, entry)
         return entry
 
@@ -1616,9 +1759,9 @@ class ShardedQueryEngine(QueryEngine):
         caps: list[int] = []
         for i, tp in enumerate(prog.patterns):
             counts = self.store.per_shard_counts(tp)
-            schema, worst = self.store.pattern_scan_info(tp)
+            schema, _ = self.store.pattern_scan_info(tp)
             schemas.append(schema)
-            caps.append(plan_ir.bucket_capacity(worst))
+            caps.append(self.store.scan_capacity(tp))
             lines.append(
                 f"  scan[{i}] per-shard rows={counts} "
                 f"per-shard bucket={caps[-1]}"

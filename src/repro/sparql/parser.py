@@ -12,6 +12,13 @@ The result is a `Query`: the WHERE group decomposed into a required BGP,
 OPTIONAL groups, UNION branches and filter conjuncts, plus the solution
 modifiers. `Query.algebra()` assembles the logical-algebra tree
 (sparql/algebra.py) that the optimizer rewrites and the engine compiles.
+
+`parse_update` covers the write side of the protocol: a SPARQL Update
+request of one or more `INSERT DATA { ... }` / `DELETE DATA { ... }`
+operations (ground triples only, `;`-separated, shared PREFIX prologue),
+returned as an `UpdateRequest` of algebra.InsertData / algebra.DeleteData
+ops in request order — the input `QueryEngine.update` applies against the
+store's delta blocks.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ _TOKEN = re.compile(
       | (?P<pdecl>[A-Za-z_][\w\-]*:)
       | (?P<op><=|>=|!=|&&|\|\||[=<>()])
       | (?P<kw>PREFIX|SELECT|DISTINCT|WHERE|FILTER|OPTIONAL|UNION|LIMIT
-              |OFFSET|\{|\}|\.|;|\*|a\b)
+              |OFFSET|INSERT|DELETE|DATA|\{|\}|\.|;|\*|a\b)
     )""",
     re.VERBOSE | re.IGNORECASE,
 )
@@ -334,3 +341,113 @@ def parse(text: str) -> Query:
         if loose:
             raise ParseError(f"FILTER vars not in WHERE clause: {loose}")
     return q
+
+
+# -- SPARQL Update ------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """A parsed update: InsertData / DeleteData ops in request order."""
+
+    ops: tuple[algebra.UpdateOp, ...]
+
+    def n_triples(self) -> int:
+        return sum(len(op.triples) for op in self.ops)
+
+
+def parse_update(text: str) -> UpdateRequest:
+    """Parse `INSERT DATA { ... }` / `DELETE DATA { ... }` operations.
+
+    Grammar (the ground-data subset of SPARQL 1.1 Update):
+
+        update  := PREFIX* op ( ';' op )* ';'?
+        op      := ('INSERT' | 'DELETE') 'DATA' '{' triples '}'
+
+    Data blocks hold ground triples only — variables (and the braces of
+    GRAPH blocks) are rejected. `a` and `;` predicate-object lists resolve
+    exactly as in queries; the shared PREFIX prologue applies to every op.
+    """
+    tokens = _tokenize(text)
+    i = 0
+    prefixes: dict[str, str] = {}
+
+    def peek() -> str:
+        return tokens[i] if i < len(tokens) else ""
+
+    def eat(expect: str | None = None) -> str:
+        nonlocal i
+        if i >= len(tokens):
+            raise ParseError(f"unexpected end of update (wanted {expect})")
+        tok = tokens[i]
+        if expect and tok.upper() != expect.upper():
+            raise ParseError(f"expected {expect}, got {tok!r}")
+        i += 1
+        return tok
+
+    while peek().upper() == "PREFIX":
+        eat()
+        pname = eat()
+        if not pname.endswith(":"):
+            raise ParseError(f"malformed PREFIX declaration near {pname!r}")
+        iri = eat()
+        if not (iri.startswith("<") and iri.endswith(">")):
+            raise ParseError(f"PREFIX needs an IRI, got {iri!r}")
+        prefixes[pname[:-1]] = iri[1:-1]
+
+    def resolve(tok: str) -> str:
+        if tok.startswith("?"):
+            raise ParseError(
+                f"variables are not allowed in DATA blocks: {tok!r}"
+            )
+        if tok == "a":
+            return _RDF_TYPE
+        if tok.startswith("<") or tok.startswith('"') or _NUM.fullmatch(tok):
+            return tok
+        ns, colon, local = tok.partition(":")
+        if not colon or ns not in prefixes:
+            raise ParseError(f"unknown prefix {ns!r} in {tok!r}")
+        return f"<{prefixes[ns]}{local}>"
+
+    def parse_data_block() -> tuple[TriplePattern, ...]:
+        eat("{")
+        triples: list[TriplePattern] = []
+        while peek() != "}":
+            s = resolve(eat())
+            triples.append(TriplePattern(s, resolve(eat()), resolve(eat())))
+            while peek() == ";":  # predicate-object lists share the subject
+                eat()
+                if peek() in (".", "}"):
+                    break
+                triples.append(
+                    TriplePattern(s, resolve(eat()), resolve(eat()))
+                )
+            if peek() == ".":
+                eat()
+        eat("}")
+        if not triples:
+            raise ParseError("empty DATA block")
+        return tuple(triples)
+
+    ops: list[algebra.UpdateOp] = []
+    while True:
+        head = eat().upper()
+        if head not in ("INSERT", "DELETE"):
+            raise ParseError(
+                f"expected INSERT DATA or DELETE DATA, got {head!r}"
+            )
+        eat("DATA")
+        block = parse_data_block()
+        ops.append(
+            algebra.InsertData(block) if head == "INSERT"
+            else algebra.DeleteData(block)
+        )
+        if peek() == ";":
+            eat()
+            if not peek():  # trailing `;` after the last op is legal
+                break
+            continue
+        break
+    if peek():
+        raise ParseError(f"trailing input after update: {peek()!r}")
+    return UpdateRequest(tuple(ops))

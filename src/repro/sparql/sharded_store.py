@@ -21,10 +21,19 @@ upload-once discipline as the single-device store, now per shard).
 The `statistics` catalog the cost-based optimizer plans against is the
 per-shard catalogs aggregated by `StoreStatistics.merge` — exact on all
 additive counts for a subject-hash partitioning (see merge's docstring).
+
+Writes reuse the single-device delta design per shard: inserts are routed
+to their owner shard by the same subject hash, deletes tombstone inside
+the owning shard, and `compact()` compacts every shard. The flat stacked
+scan cache is versioned like the per-shard caches — a write bumps the
+store version and stale flat blocks are evicted on their next lookup —
+and per-pattern capacity floors keep the shared per-shard bucket from
+shrinking, so compiled sharded programs survive updates too.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 
 import jax
@@ -85,10 +94,18 @@ class ShardedTripleStore:
             for k in range(self.n_shards)
         ]
         # flat stacked (n_shards * cap) device scans, keyed like the
-        # single-device cache: one upload per pattern structure, per shard
-        self._device_cache: OrderedDict[tuple, Relation] = OrderedDict()
+        # single-device cache: one upload per pattern structure, per shard.
+        # Entries are (version, Relation) pairs; stale versions are evicted
+        # (and counted) on lookup, mirroring the per-shard caches.
+        self._device_cache: OrderedDict[tuple, tuple] = OrderedDict()
         self._scan_hits = 0
         self._scan_misses = 0
+        self._evictions = 0
+        # shared per-shard capacity floors (see TripleStore._device_capacity)
+        self._cap_floor: dict[tuple, int] = {}
+        self.version = 0
+        self.compactions = 0
+        self._lock = threading.RLock()
         self._statistics: StoreStatistics | None = None
 
     def __len__(self) -> int:
@@ -96,13 +113,104 @@ class ShardedTripleStore:
 
     @property
     def statistics(self) -> StoreStatistics:
-        """Per-shard catalogs aggregated across the mesh (computed once;
-        partitions are immutable after construction)."""
+        """Per-shard catalogs aggregated across the mesh. Re-merged lazily
+        after each write batch (the per-shard catalogs themselves are
+        maintained incrementally, so the merge is the only repeated work)."""
         if self._statistics is None:
             self._statistics = StoreStatistics.merge(
                 [s.statistics for s in self.shards]
             )
         return self._statistics
+
+    # -- write path (routed per-shard deltas) -----------------------------
+    def snapshot_lock(self) -> threading.RLock:
+        """Store-wide writer/staging lock (see TripleStore.snapshot_lock).
+        Writers take this before the per-shard locks, staging takes only
+        this — one consistent order, no deadlocks."""
+        return self._lock
+
+    def insert_triples(self, triples) -> int:
+        rows = np.array(
+            [
+                [
+                    self.dictionary.encode(s),
+                    self.dictionary.encode(p),
+                    self.dictionary.encode(o),
+                ]
+                for s, p, o in triples
+            ],
+            np.int32,
+        ).reshape(-1, 3)
+        return self.insert_rows(rows)
+
+    def delete_triples(self, triples) -> int:
+        rows = []
+        for s, p, o in triples:
+            ids = [self.dictionary.lookup(t) for t in (s, p, o)]
+            if None not in ids:
+                rows.append(ids)
+        return self.delete_rows(np.asarray(rows, np.int32).reshape(-1, 3))
+
+    def insert_rows(self, rows: np.ndarray) -> int:
+        """Route encoded rows to their owner shard (same subject hash as
+        the device shuffle) and insert into each shard's delta tail.
+        Set-semantics dedup stays exact: a triple's duplicates always hash
+        to the same shard. Returns the number added."""
+        rows = np.asarray(rows, np.int32).reshape(-1, 3)
+        n_added = 0
+        with self._lock:
+            owner = subject_shard(rows[:, 0], self.n_shards)
+            for k, shard in enumerate(self.shards):
+                part = rows[owner == k]
+                if len(part):
+                    n_added += shard.insert_rows(part)
+            if n_added:
+                self._commit_write()
+        return n_added
+
+    def delete_rows(self, rows: np.ndarray) -> int:
+        rows = np.asarray(rows, np.int32).reshape(-1, 3)
+        n_deleted = 0
+        with self._lock:
+            owner = subject_shard(rows[:, 0], self.n_shards)
+            for k, shard in enumerate(self.shards):
+                part = rows[owner == k]
+                if len(part):
+                    n_deleted += shard.delete_rows(part)
+            if n_deleted:
+                self._commit_write()
+        return n_deleted
+
+    def compact(self) -> None:
+        """Compact every shard (fold tails, drop tombstones, rebuild the
+        per-shard indexes) and invalidate the flat stacked scan cache.
+        Capacity floors are kept, so warm sharded plan shapes survive."""
+        with self._lock:
+            for shard in self.shards:
+                shard.compact()
+            self._evictions += len(self._device_cache)
+            self._device_cache.clear()
+            self.version += 1
+            self.compactions += 1
+            self.triples = np.concatenate([s.triples for s in self.shards])
+            self._statistics = None
+
+    def write_stats(self) -> dict:
+        parts = [s.write_stats() for s in self.shards]
+        return {
+            "version": self.version,
+            "base_rows": sum(p["base_rows"] for p in parts),
+            "tail_rows": sum(p["tail_rows"] for p in parts),
+            "tombstones": sum(p["tombstones"] for p in parts),
+            "compactions": self.compactions,
+            "total_rows": int(len(self.triples)),
+            "n_shards": self.n_shards,
+        }
+
+    def _commit_write(self) -> None:
+        self.version += 1
+        self.triples = np.concatenate([s.triples for s in self.shards])
+        self._statistics = None  # re-merge the per-shard catalogs lazily
 
     # -- planning surface -------------------------------------------------
     def estimate_cardinality(self, tp: TriplePattern) -> int:
@@ -113,15 +221,22 @@ class ShardedTripleStore:
     def pattern_scan_info(
         self, tp: TriplePattern
     ) -> tuple[tuple[str, ...], int]:
-        """(schema, max per-shard match count): bucketing that count gives
-        the per-shard scan capacity a compiled sharded program uses, so
-        explain()'s cache probing hashes to the right PlanShape."""
+        """(schema, max per-shard effective match count) — display data for
+        explain(); the plan-cache probe uses scan_capacity()."""
         schema: tuple[str, ...] = ()
         worst = 0
         for s in self.shards:
             schema, n = s.pattern_scan_info(tp)
             worst = max(worst, n)
         return schema, worst
+
+    def scan_capacity(self, tp: TriplePattern) -> int:
+        """The shared per-shard bucket `match_pattern_device` would stage
+        this pattern at right now (staged rows incl. tombstone-masked base
+        rows, floored by the pattern's high-water mark)."""
+        key = self.shards[0]._scan_key(tp)
+        worst = max(len(s._staged_columns(tp)[1]) for s in self.shards)
+        return max(bucket_capacity(worst), self._cap_floor.get(key, 0))
 
     # -- device scans ------------------------------------------------------
     def per_shard_counts(self, tp: TriplePattern) -> list[int]:
@@ -137,26 +252,38 @@ class ShardedTripleStore:
         upload-once-per-shard contract.
         """
         key = self.shards[0]._scan_key(tp)
-        entry = self._device_cache.get(key)
+        entry = None
+        slot = self._device_cache.get(key)
+        if slot is not None:
+            ver, cached = slot
+            if ver == self.version:
+                entry = cached
+            else:
+                del self._device_cache[key]  # stale version: rebuild below
+                self._evictions += 1
         if entry is None:
             self._scan_misses += 1
             per_shard = []
             schema: tuple[str, ...] = ()
             for s in self.shards:
-                schema, mat = s._pattern_columns(tp, s.match_rows(tp))
-                per_shard.append(mat)
-            cap = bucket_capacity(max(len(m) for m in per_shard))
+                schema, mat, valid = s._staged_columns(tp)
+                per_shard.append((mat, valid))
+            cap = max(
+                bucket_capacity(max(len(m) for m, _ in per_shard)),
+                self._cap_floor.get(key, 0),
+            )
+            self._cap_floor[key] = cap
             n_cols = len(schema)
             cols = np.zeros((self.n_shards * cap, n_cols), np.int32)
             valid = np.zeros((self.n_shards * cap,), bool)
-            for k, mat in enumerate(per_shard):
+            for k, (mat, v) in enumerate(per_shard):
                 cols[k * cap : k * cap + len(mat)] = mat
-                valid[k * cap : k * cap + len(mat)] = True
+                valid[k * cap : k * cap + len(mat)] = v
             placeholder = tuple(f"?{i}" for i in range(n_cols))
             entry = Relation(
                 placeholder, self._place(cols), self._place(valid)
             )
-            self._device_cache[key] = entry
+            self._device_cache[key] = (self.version, entry)
             while len(self._device_cache) > self.scan_cache_entries:
                 self._device_cache.popitem(last=False)
             actual = schema
@@ -184,6 +311,7 @@ class ShardedTripleStore:
             "hits": self._scan_hits,
             "misses": self._scan_misses,
             "entries": len(self._device_cache),
+            "evictions": self._evictions,
         }
 
     def shard_sizes(self) -> list[int]:

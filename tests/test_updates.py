@@ -1,0 +1,520 @@
+"""Mutable store / SPARQL UPDATE path: parser grammar for INSERT DATA /
+DELETE DATA, delta-block write semantics (tail + tombstones, set
+semantics, revival), compaction, versioned scan-cache eviction,
+incremental statistics vs full recompute, snapshot-pinned prepared
+handles, and the differential guarantee — after any sequence of updates,
+query results equal both the NumPy oracle and a store rebuilt from
+scratch, across operator shapes, join backends, eager/compiled and
+sharded execution. Warm plan shapes re-run at 0 compiles / 1 dispatch
+across writes and compaction as long as scans stay inside their
+capacity buckets."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    from _hypothesis_compat import given, settings, st  # noqa: F401
+    HAVE_HYPOTHESIS = False
+
+from repro.core.planner import TriplePattern
+from repro.sparql import algebra
+from repro.sparql.baseline import reference_rows
+from repro.sparql.engine import QueryEngine, ShardedQueryEngine
+from repro.sparql.parser import ParseError, parse, parse_update
+from repro.sparql.sharded_store import sharded_store_from_string_triples
+from repro.sparql.store import StoreStatistics, store_from_string_triples
+
+RDF_TYPE = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
+
+
+def rows_as_sets(rows):
+    return sorted(tuple(sorted(r.items())) for r in rows)
+
+
+def decoded_triples(store):
+    d = store.dictionary
+    return {
+        (d.decode(int(s)), d.decode(int(p)), d.decode(int(o)))
+        for s, p, o in np.asarray(store.triples)
+    }
+
+
+def _mini_triples(seed: int):
+    rng = np.random.default_rng(seed)
+    ents = [f"<e{i}>" for i in range(6)]
+    triples = set()
+    for _ in range(40):
+        triples.add((
+            ents[rng.integers(6)],
+            f"<p{rng.integers(3)}>",
+            ents[rng.integers(6)],
+        ))
+    for i in range(6):
+        triples.add((ents[i], "<age>", str(15 + 3 * i)))
+    return sorted(triples)
+
+
+def _query_text(shape, p1=0, p2=1, cmp_op=">=", cut=21):
+    base = f"?x <p{p1}> ?y"
+    if shape == "bgp":
+        return f"SELECT ?x ?y ?z WHERE {{ {base} . ?y <p{p2}> ?z . }}"
+    if shape == "filter":
+        return (f"SELECT ?x ?y ?a WHERE {{ {base} . ?x <age> ?a . "
+                f"FILTER (?a {cmp_op} {cut} || ?x = <e1>) }}")
+    if shape == "optional":
+        return (f"SELECT ?x ?y ?z WHERE {{ {base} . "
+                f"OPTIONAL {{ ?x <p{p2}> ?z }} }}")
+    assert shape == "union"
+    return (f"SELECT ?x ?v WHERE {{ {{ ?x <p{p1}> ?v }} UNION "
+            f"{{ ?x <p{p2}> ?v }} }}")
+
+
+# A fixed update script over the _mini_triples universe: inserts reuse
+# existing entities (new edges), deletes hit rows every seed generates.
+def _apply_script(store):
+    ins1 = [("<e0>", "<p0>", "<e5>"), ("<e5>", "<p1>", "<e0>"),
+            ("<e4>", "<p2>", "<e4>")]
+    dels = [t for t in _mini_triples(3)[:6]]
+    ins2 = [("<e2>", "<p0>", "<e2>"), ("<e1>", "<p2>", "<e5>")]
+    store.insert_triples(ins1)
+    store.delete_triples(dels)
+    store.insert_triples(ins2)
+
+
+# ------------------------------------------------------- parser grammar
+
+
+def test_parse_update_insert_data():
+    req = parse_update('INSERT DATA { <a> <p> <b> . <b> <p> "x" }')
+    assert len(req.ops) == 1
+    assert isinstance(req.ops[0], algebra.InsertData)
+    assert req.n_triples() == 2
+    assert req.ops[0].triples[0] == TriplePattern("<a>", "<p>", "<b>")
+
+
+def test_parse_update_ops_in_order_with_trailing_semicolon():
+    req = parse_update(
+        "INSERT DATA { <a> <p> <b> } ; DELETE DATA { <c> <p> <d> } ;"
+    )
+    assert [type(op) for op in req.ops] == [
+        algebra.InsertData, algebra.DeleteData
+    ]
+
+
+def test_parse_update_prefix_and_rdf_type_keyword():
+    req = parse_update(
+        "PREFIX ex: <http://ex.org/>\n"
+        "INSERT DATA { ex:a a ex:T ; ex:p ex:b . ex:c ex:p ex:a }"
+    )
+    (op,) = req.ops
+    assert op.triples[0] == TriplePattern(
+        "<http://ex.org/a>", RDF_TYPE, "<http://ex.org/T>"
+    )
+    # the `;` predicate-object list shares its subject
+    assert op.triples[1] == TriplePattern(
+        "<http://ex.org/a>", "<http://ex.org/p>", "<http://ex.org/b>"
+    )
+    assert len(op.triples) == 3
+
+
+@pytest.mark.parametrize("bad", [
+    "INSERT DATA { ?x <p> <b> }",        # variables are not ground
+    "INSERT { <a> <p> <b> }",            # DATA keyword required
+    "DELETE DATA { <a> <p> }",           # triple needs three terms
+    "SELECT ?x WHERE { ?x <p> ?y }",     # queries are not updates
+])
+def test_parse_update_rejects(bad):
+    with pytest.raises(ParseError):
+        parse_update(bad)
+
+
+def test_format_update_names_ops():
+    req = parse_update(
+        "INSERT DATA { <a> <p> <b> } ; DELETE DATA { <a> <p> <b> }"
+    )
+    out = algebra.format_update(req.ops)
+    assert "InsertData" in out and "DeleteData" in out
+
+
+# -------------------------------------------------- store write semantics
+
+
+def test_insert_delete_set_semantics():
+    store = store_from_string_triples([("<a>", "<p>", "<b>")])
+    assert store.insert_triples([("<a>", "<p>", "<b>")]) == 0  # dup
+    assert store.insert_triples([("<a>", "<p>", "<c>")]) == 1
+    assert store.delete_triples([("<z>", "<p>", "<q>")]) == 0  # absent
+    assert store.delete_triples([("<a>", "<p>", "<c>")]) == 1  # tail row
+    assert store.delete_triples([("<a>", "<p>", "<b>")]) == 1  # base row
+    ws = store.write_stats()
+    assert ws["tombstones"] == 1 and ws["tail_rows"] == 0
+    assert ws["total_rows"] == 0
+    assert decoded_triples(store) == set()
+
+
+def test_reinsert_revives_tombstoned_base_row():
+    store = store_from_string_triples([("<a>", "<p>", "<b>")])
+    store.delete_triples([("<a>", "<p>", "<b>")])
+    assert store.insert_triples([("<a>", "<p>", "<b>")]) == 1
+    ws = store.write_stats()
+    # revival un-tombstones the base row instead of appending a tail dup
+    assert ws["tombstones"] == 0 and ws["tail_rows"] == 0
+    assert decoded_triples(store) == {("<a>", "<p>", "<b>")}
+
+
+def test_compact_folds_tail_and_clears_tombstones():
+    store = store_from_string_triples(_mini_triples(0))
+    _apply_script(store)
+    before = decoded_triples(store)
+    v = store.version
+    store.compact()
+    ws = store.write_stats()
+    assert ws["tail_rows"] == 0 and ws["tombstones"] == 0
+    assert ws["compactions"] == 1 and ws["version"] == v + 1
+    assert ws["base_rows"] == ws["total_rows"] == len(before)
+    assert decoded_triples(store) == before
+
+
+def test_version_monotonic_per_committed_write():
+    store = store_from_string_triples([("<a>", "<p>", "<b>")])
+    v0 = store.version
+    store.insert_triples([("<a>", "<p>", "<c>")])
+    v1 = store.version
+    assert v1 == v0 + 1
+    store.insert_triples([("<a>", "<p>", "<c>")])  # no-op: dup
+    assert store.version == v1
+    store.delete_triples([("<a>", "<p>", "<c>")])
+    assert store.version == v1 + 1
+
+
+def test_scan_capacity_floor_survives_writes_and_compaction():
+    store = store_from_string_triples(_mini_triples(0))
+    tp = TriplePattern("?x", "<p0>", "?y")
+    store.match_pattern_device(tp)  # establish the bucket floor
+    cap0 = store.scan_capacity(tp)
+    # deletes shrink the match count but not the floored capacity
+    dels = [t for t in _mini_triples(0) if t[1] == "<p0>"][:3]
+    store.delete_triples(dels)
+    assert store.scan_capacity(tp) == cap0
+    store.compact()
+    assert store.scan_capacity(tp) == cap0
+
+
+def test_stale_scan_cache_entries_evicted_not_leaked():
+    store = store_from_string_triples(_mini_triples(0))
+    tp = TriplePattern("?x", "<p0>", "?y")
+    store.match_pattern_device(tp)
+    entries0 = store.scan_cache_stats()["entries"]
+    assert store.insert_triples([("<e0>", "<p0>", "<zz>")]) == 1
+    store.match_pattern_device(tp)  # stale hit -> evict + restage
+    st1 = store.scan_cache_stats()
+    assert st1["evictions"] >= 1
+    assert st1["entries"] == entries0  # replaced in place, no growth
+    rel = store.match_pattern_device(tp)
+    assert store.scan_cache_stats()["hits"] >= 1  # current-version hit
+    assert rel is not None
+
+
+def test_tombstoned_rows_masked_not_removed_from_staged_block():
+    # plan-shape stability: a tombstoned base row keeps its slot with
+    # valid=False, so the block shape (and compiled program) is unchanged
+    store = store_from_string_triples(
+        [("<a>", "<p>", "<b>"), ("<c>", "<p>", "<d>")]
+    )
+    tp = TriplePattern("?x", "<p>", "?y")
+    r0 = store.match_pattern_device(tp)
+    n_valid0 = int(np.asarray(r0.valid).sum())
+    store.delete_triples([("<a>", "<p>", "<b>")])
+    r1 = store.match_pattern_device(tp)
+    assert r1.capacity == r0.capacity
+    assert int(np.asarray(r1.valid).sum()) == n_valid0 - 1
+
+
+# ----------------------------------------------- incremental statistics
+
+
+def _assert_stats_match(inc, full, exact_degrees):
+    assert inc.n_triples == full.n_triples
+    assert inc.n_subjects == full.n_subjects
+    assert inc.n_objects == full.n_objects
+    assert inc.n_predicates == full.n_predicates
+    assert set(inc.predicates) == set(full.predicates)
+    for pid, ps in full.predicates.items():
+        ips = inc.predicates[pid]
+        assert ips.count == ps.count
+        assert ips.n_subjects == ps.n_subjects
+        assert ips.n_objects == ps.n_objects
+        if exact_degrees:
+            assert ips.max_s_degree == ps.max_s_degree
+            assert ips.max_o_degree == ps.max_o_degree
+        else:  # after deletes the max degree is an upper bound
+            assert ips.max_s_degree >= ps.max_s_degree
+            assert ips.max_o_degree >= ps.max_o_degree
+
+
+def test_incremental_statistics_exact_on_inserts():
+    store = store_from_string_triples(_mini_triples(1))
+    _ = store.statistics  # materialize, then maintain incrementally
+    store.insert_triples([
+        ("<e0>", "<p0>", "<e5>"), ("<n1>", "<p9>", "<n2>"),
+        ("<e0>", "<p0>", "<e4>"),
+    ])
+    _assert_stats_match(
+        store.statistics, StoreStatistics.from_triples(store.triples),
+        exact_degrees=True,
+    )
+
+
+def test_incremental_statistics_bounds_after_deletes():
+    store = store_from_string_triples(_mini_triples(1))
+    _ = store.statistics
+    _apply_script(store)
+    _assert_stats_match(
+        store.statistics, StoreStatistics.from_triples(store.triples),
+        exact_degrees=False,
+    )
+    store.compact()  # compaction schedules a full recompute
+    _assert_stats_match(
+        store.statistics, StoreStatistics.from_triples(store.triples),
+        exact_degrees=True,
+    )
+
+
+# ----------------------------------------------- differential guarantee
+
+
+def _check_against_oracle_and_rebuild(engine, store, texts):
+    rebuilt = store_from_string_triples(sorted(decoded_triples(store)))
+    fresh = QueryEngine(rebuilt, compiled=False)
+    for text in texts:
+        want = rows_as_sets(reference_rows(store, parse(text)))
+        assert rows_as_sets(engine.query(text)) == want, text
+        assert rows_as_sets(fresh.query(text)) == want, text
+
+
+@pytest.mark.parametrize("shape", ["bgp", "filter", "optional", "union"])
+def test_updates_differential_compiled(shape):
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    text = _query_text(shape)
+    before = rows_as_sets(eng.query(text))  # warm the shape pre-update
+    _apply_script(store)
+    _check_against_oracle_and_rebuild(eng, store, [text])
+    store.compact()
+    _check_against_oracle_and_rebuild(eng, store, [text])
+    assert before == rows_as_sets(
+        QueryEngine(store_from_string_triples(_mini_triples(0)),
+                    compiled=False).query(text))
+
+
+@pytest.mark.parametrize("backend", ["mr", "matrix"])
+def test_updates_differential_join_backends(backend):
+    store = store_from_string_triples(_mini_triples(2))
+    eng = QueryEngine(store, join_backend=backend)
+    text = _query_text("bgp", p1=1, p2=0)
+    eng.query(text)
+    _apply_script(store)
+    _check_against_oracle_and_rebuild(eng, store, [text])
+
+
+def test_updates_differential_eager():
+    store = store_from_string_triples(_mini_triples(4))
+    eng = QueryEngine(store, compiled=False)
+    texts = [_query_text(s) for s in ("bgp", "filter", "union")]
+    _apply_script(store)
+    _check_against_oracle_and_rebuild(eng, store, texts)
+
+
+def test_updates_differential_sharded():
+    store = sharded_store_from_string_triples(_mini_triples(5), n_shards=1)
+    eng = ShardedQueryEngine(store)
+    text = _query_text("bgp")
+    eng.query(text)  # warm pre-update
+    _apply_script(store)
+    _check_against_oracle_and_rebuild(eng, store, [text])
+    ws = store.write_stats()
+    assert ws["n_shards"] == 1 and ws["tail_rows"] > 0
+    store.compact()
+    _check_against_oracle_and_rebuild(eng, store, [text])
+    assert store.write_stats()["compactions"] == 1
+
+
+# --------------------------------- warm shapes survive writes (acceptance)
+
+
+def test_warm_shape_zero_compiles_across_writes_and_compaction():
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    pq = eng.prepare(_query_text("bgp"))
+    pq.run()
+    warm = pq.run()
+    assert warm.stats.n_compiles == 0 and warm.stats.n_dispatches == 1
+    # write within every pattern's bucket headroom, reusing existing terms
+    # (a new term could grow the pow-2 numeric table = a legal recompile)
+    tp1 = TriplePattern("?x", "<p0>", "?y")
+    headroom = store.scan_capacity(tp1) - int(
+        np.asarray(store.match_pattern_device(tp1).valid).sum())
+    candidates = [(f"<e{i}>", "<p0>", f"<e{(i + 3) % 6}>")
+                  for i in range(6)]
+    new_rows = [t for t in candidates
+                if t not in decoded_triples(store)][:max(1, headroom // 2)]
+    assert store.insert_triples(new_rows) >= 1
+    dels = [t for t in _mini_triples(0) if t[1] == "<p0>"][:2]
+    assert store.delete_triples(dels) == 2
+    rs = pq.run()
+    assert rs.stats.n_compiles == 0 and rs.stats.n_dispatches == 1
+    assert rs.stats.store_version == store.version
+    store.compact()
+    rs2 = pq.run()
+    assert rs2.stats.n_compiles == 0 and rs2.stats.n_dispatches == 1
+    want = rows_as_sets(reference_rows(store, parse(pq.text)))
+    assert rows_as_sets(rs2.rows) == want
+    rebuilt = store_from_string_triples(sorted(decoded_triples(store)))
+    assert rows_as_sets(QueryEngine(rebuilt).query(pq.text)) == want
+
+
+def test_numeric_table_growth_recompiles_then_stays_warm():
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    pq = eng.prepare(_query_text("filter"))
+    pq.run()
+    # grow the dictionary past its pow-2 boundary: numeric-values table
+    # changes shape, the warm entry must recompile once, then stay warm
+    n0 = len(store.dictionary)
+    target = 1
+    while target <= n0:
+        target *= 2
+    fresh = [(f"<new{i}>", "<age>", str(100 + i))
+             for i in range(target - n0 + 1)]
+    store.insert_triples(fresh)
+    assert len(store.dictionary) > target
+    r1 = pq.run()
+    assert r1.stats.n_compiles >= 1
+    want = rows_as_sets(reference_rows(store, parse(pq.text)))
+    assert rows_as_sets(r1.rows) == want
+    r2 = pq.run()
+    assert r2.stats.n_compiles == 0 and r2.stats.n_dispatches == 1
+    assert rows_as_sets(r2.rows) == want
+
+
+# --------------------------------------------- engine + prepared handles
+
+
+def test_engine_update_and_stats():
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    res = eng.update(
+        'INSERT DATA { <e0> <p0> <zz> . <e0> <p0> <zz> } ; '
+        'DELETE DATA { <e0> <p0> <zz> }'
+    )
+    assert (res.inserted, res.deleted, res.n_ops) == (1, 1, 2)
+    assert res.version == store.version
+    st = eng.stats()
+    assert st["store"]["version"] == store.version
+    assert {"plan_cache", "scan_cache", "store"} <= set(st)
+    with pytest.raises(ParseError):
+        eng.update("INSERT DATA { ?x <p> <b> }")
+
+
+def test_prepared_refresh_repins_version():
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    pq = eng.prepare(_query_text("bgp"))
+    assert pq.refresh() is False  # nothing changed yet
+    eng.update("INSERT DATA { <e0> <p1> <e1> }")
+    assert pq.planned_version != store.version
+    assert pq.refresh() is True
+    assert pq.planned_version == store.version
+    want = rows_as_sets(reference_rows(store, parse(pq.text)))
+    assert rows_as_sets(pq.run().rows) == want
+
+
+def test_explain_reports_store_version():
+    store = store_from_string_triples(_mini_triples(0))
+    eng = QueryEngine(store)
+    pq = eng.prepare(_query_text("bgp"))
+    pq.run()
+    assert f"version={store.version}" in pq.explain()
+    eng.update("INSERT DATA { <e0> <p1> <e1> }")
+    assert "stale" in pq.explain()
+    pq.refresh()
+    assert "stale" not in pq.explain()
+
+
+# --------------------------------------------------------------- server
+
+
+def test_server_update_endpoint_and_stats():
+    from repro.serve.sparql_server import ParseQueryError, SPARQLServer
+    store = store_from_string_triples(_mini_triples(0))
+    srv = SPARQLServer(engine=QueryEngine(store))
+    try:
+        text = _query_text("bgp")
+        srv.query(text)
+        res = srv.update(
+            "INSERT DATA { <e0> <p0> <e5> } ; "
+            "DELETE DATA { <e0> <p0> <e5> }"
+        )
+        assert res.inserted == 1 and res.deleted == 1
+        want = rows_as_sets(reference_rows(store, parse(text)))
+        assert rows_as_sets(srv.query(text).rows) == want
+        st = srv.stats()
+        assert st["updates"] == {
+            "requests": 1, "rows_inserted": 1, "rows_deleted": 1,
+        }
+        assert st["store"]["version"] == store.version
+        with pytest.raises(ParseQueryError):
+            srv.update("INSERT DATA { ?x <p> <b> }")
+    finally:
+        srv.close()
+
+
+# --------------------------------------------- property-based round-trip
+
+
+_UNIVERSE = [(f"<e{i % 4}>", f"<p{i % 2}>", f"<e{(i * 3) % 5}>")
+             for i in range(10)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=5),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["insert", "delete", "compact"]),
+                  st.integers(min_value=0, max_value=9)),
+        min_size=1, max_size=12,
+    ),
+)
+def test_interleaved_updates_round_trip(seed, ops):
+    """Property: any interleaving of insert/delete/compact leaves the
+    store's effective triples equal to a plain python set model, with
+    version/compaction counters and write_stats invariants intact."""
+    base = _mini_triples(seed)
+    store = store_from_string_triples(base)
+    model = set(base)
+    for kind, i in ops:
+        t = _UNIVERSE[i]
+        if kind == "insert":
+            applied = store.insert_triples([t])
+            assert applied == (0 if t in model else 1)
+            model.add(t)
+        elif kind == "delete":
+            applied = store.delete_triples([t])
+            assert applied == (1 if t in model else 0)
+            model.discard(t)
+        else:
+            store.compact()
+            assert store.write_stats()["tail_rows"] == 0
+            assert store.write_stats()["tombstones"] == 0
+        ws = store.write_stats()
+        assert ws["total_rows"] == len(model)
+        assert ws["total_rows"] == ws["base_rows"] + ws["tail_rows"] \
+            - ws["tombstones"]
+    assert decoded_triples(store) == model
+    # and the store still answers queries correctly post-interleaving
+    text = "SELECT ?x ?y WHERE { ?x <p0> ?y . }"
+    want = rows_as_sets(reference_rows(store, parse(text)))
+    got = rows_as_sets(QueryEngine(store, compiled=False).query(text))
+    assert got == want
