@@ -86,7 +86,8 @@ def _shuffle_one_axis(cols, valid, dest_along_axis, axis_name, bucket_capacity):
 
 
 def shuffle_by_key(cols: jax.Array, valid: jax.Array, key_idx: list[int],
-                   axis_names: tuple[str, ...], bucket_capacity: int):
+                   axis_names: tuple[str, ...],
+                   bucket_capacity: "int | tuple[int, ...]"):
     """Hierarchical MapReduce shuffle: equal keys land on the same shard.
 
     axis_names are ordered outermost (inter-pod) first. The destination shard
@@ -98,14 +99,28 @@ def shuffle_by_key(cols: jax.Array, valid: jax.Array, key_idx: list[int],
     the destination is recomputed from the payload at each stage, cutting
     shuffle bytes by (k+1)/(c+k+1) (50% for the 2-col relations here).
 
-    Returns (cols, valid, overflowed, need) where `need` is this shard's
-    exact worst per-destination load across the stages — pmax it over the
-    mesh to get the bucket capacity a retry dispatch must compile at.
+    `bucket_capacity` is PER STAGE (an int applies to every stage): stage
+    k's per-destination load is ~rows/size_k, so the outer (pod) stage of
+    a hierarchical mesh genuinely needs a larger bucket than the inner
+    (chip) stage — sizing them together would inflate every stage's
+    buffer to the worst stage's load.
+
+    Returns (cols, valid, overflowed, need): `overflowed` and `need` are
+    (n_stages,) vectors — stage k's drop flag and this shard's exact
+    worst per-destination load at stage k — so an overflow regrows ONLY
+    the overflowing stage's bucket (pmax the need over the mesh to get
+    the capacity a retry dispatch must compile at).
     """
     sizes = [compat.axis_size(a) for a in axis_names]
     total = reduce(lambda a, b: a * b, sizes, 1)
-    overflow = jnp.bool_(False)
-    need = jnp.int32(0)
+    caps = (
+        (int(bucket_capacity),) * len(axis_names)
+        if isinstance(bucket_capacity, int)
+        else tuple(bucket_capacity)
+    )
+    assert len(caps) == len(axis_names), (caps, axis_names)
+    overflow: list[jax.Array] = []
+    need: list[jax.Array] = []
     # decompose dest into per-axis coordinates (row-major over axis_names)
     for k, axis in enumerate(axis_names):
         dest = (hash_keys(cols[:, key_idx]) % jnp.uint32(total)).astype(
@@ -113,10 +128,42 @@ def shuffle_by_key(cols: jax.Array, valid: jax.Array, key_idx: list[int],
         inner = reduce(lambda a, b: a * b, sizes[k + 1:], 1)
         coord = (dest // inner) % sizes[k]
         cols, valid, ov, max_load = _shuffle_one_axis(cols, valid, coord, axis,
-                                                      bucket_capacity)
-        overflow = overflow | ov
-        need = jnp.maximum(need, max_load.astype(jnp.int32))
-    return cols, valid, overflow, need
+                                                      caps[k])
+        overflow.append(ov)
+        need.append(max_load.astype(jnp.int32))
+    return cols, valid, jnp.stack(overflow), jnp.stack(need)
+
+
+class ShuffleSlots:
+    """Double-buffered shuffle staging: issue a shuffle collective AHEAD of
+    the join that consumes it.
+
+    The distributed lowering walks the plan twice: a prestage pass calls
+    `issue()` for every join input that (a) needs a shuffle and (b) is
+    produced by a collective-free subtree (scans/filters/projections), then
+    the join chain calls `take()` at each consuming site. Because the
+    issued all_to_alls have no data dependency on earlier joins, they sit
+    ahead of the whole join chain in program order — XLA's async
+    collectives + latency-hiding scheduler can then run the shuffle for
+    join step k+1 while step k's local Algorithm-1 join is still computing,
+    instead of serialising collective -> join -> collective -> join.
+    """
+
+    def __init__(self):
+        self._slots: dict = {}
+
+    def issue(self, slot, cols, valid, key_idx, axis_names, caps) -> None:
+        assert slot not in self._slots, slot
+        self._slots[slot] = shuffle_by_key(
+            cols, valid, key_idx, axis_names, caps
+        )
+
+    def ready(self, slot) -> bool:
+        return slot in self._slots
+
+    def take(self, slot):
+        """(cols, valid, overflowed, need) of a previously issued shuffle."""
+        return self._slots.pop(slot)
 
 
 def distributed_mr_join(
@@ -144,7 +191,7 @@ def distributed_mr_join(
     l_rel = Relation(left.schema, l_cols, l_valid)
     r_rel = Relation(right.schema, r_cols, r_valid)
     out, total, ov_j = mj.mr_join(l_rel, r_rel, join_capacity)
-    return out, total, ov_l | ov_r | ov_j
+    return out, total, jnp.any(ov_l) | jnp.any(ov_r) | ov_j
 
 
 def make_distributed_join_fn(mesh: jax.sharding.Mesh,

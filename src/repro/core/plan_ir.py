@@ -128,11 +128,22 @@ def bucket_width(n: int, max_width: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class Scan:
-    """A partial-match relation, fed in as executor input `scans[index]`."""
+    """A partial-match relation, fed in as executor input `scans[index]`.
+
+    `part_col` is the schema position the rows are hash-partitioned on
+    across a sharded store's mesh (-1 = none). A subject-variable scan of
+    the subject-hash sharded store is partitioned on its subject column:
+    shard k holds exactly the rows whose subject FNV-hashes to k — the
+    same hash and routing core/distributed.shuffle_by_key uses — which is
+    what lets the distributed lowering elide the shuffle of an already-
+    aligned join input (core/dist_executor.analyze_plan). Single-device
+    plans leave it at -1; it does not exist at runtime, only as lowering
+    metadata."""
 
     index: int
     schema: tuple[str, ...]
     capacity: int
+    part_col: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -353,6 +364,11 @@ class PlanShape:
     # order, len == n_joins(). Part of the shape: a backend flip is a
     # different compiled program. Cross-join slots carry "mr" (unused).
     join_backends: tuple[str, ...] = ()
+    # Per scan, the schema position the sharded store's rows are hash-
+    # partitioned on (-1 = none; single-device shapes are all -1). Part of
+    # the shape: the distributed lowering elides shuffles from it, so a
+    # different partitioning is a different compiled program.
+    scan_parts: tuple[int, ...] = ()
 
     @property
     def n_required(self) -> int:
@@ -404,6 +420,7 @@ def make_shape(
     has_slice: bool = False,
     prune: bool = False,
     join_backends: tuple[str, ...] = (),
+    scan_parts: tuple[int, ...] = (),
 ) -> PlanShape:
     n_group_scans = sum(g.n_scans for g in opt_groups)
     n_union_scans = sum(g.n_scans for g in union_groups)
@@ -426,14 +443,21 @@ def make_shape(
         has_slice,
         prune,
     )
-    # Normalise the backend vector so shapes differing only in "explicit
-    # all-mr" vs "default" compare (and hash) equal — that equality is the
-    # plan-cache key.
+    # Normalise the backend and partitioning vectors so shapes differing
+    # only in "explicit default" vs "omitted" compare (and hash) equal —
+    # that equality is the plan-cache key.
     if not join_backends:
         join_backends = ("mr",) * shape.n_joins()
     assert len(join_backends) == shape.n_joins(), (join_backends, shape)
     assert all(b in ("mr", "matrix") for b in join_backends)
-    return dataclasses.replace(shape, join_backends=tuple(join_backends))
+    if not scan_parts:
+        scan_parts = (-1,) * len(scan_schemas)
+    assert len(scan_parts) == len(scan_schemas), (scan_parts, scan_schemas)
+    return dataclasses.replace(
+        shape,
+        join_backends=tuple(join_backends),
+        scan_parts=tuple(scan_parts),
+    )
 
 
 def narrowed_schema(
@@ -495,7 +519,8 @@ def build_plan(shape: PlanShape, join_caps: tuple[int, ...]) -> PhysicalPlan:
     def next_scan() -> PlanNode:
         nonlocal scan_idx
         i = scan_idx
-        s = Scan(i, shape.scan_schemas[i], shape.scan_caps[i])
+        part = shape.scan_parts[i] if shape.scan_parts else -1
+        s = Scan(i, shape.scan_schemas[i], shape.scan_caps[i], part)
         scan_idx += 1
         return apply_filters(s, ("scan", i))
 
@@ -637,6 +662,7 @@ def shape_to_jsonable(shape: PlanShape) -> dict:
         "has_slice": shape.has_slice,
         "prune": shape.prune,
         "join_backends": list(shape.join_backends),
+        "scan_parts": list(shape.scan_parts),
     }
 
 
@@ -665,4 +691,13 @@ def shape_from_jsonable(obj: dict) -> PlanShape:
     backends = obj.get("join_backends")
     if backends is None:
         backends = ["mr"] * shape.n_joins()
-    return dataclasses.replace(shape, join_backends=tuple(backends))
+    # files predating partitioning-aware lowering carry none: unpartitioned
+    # (a sharded engine computes real parts, so such entries simply miss)
+    parts = obj.get("scan_parts")
+    if parts is None:
+        parts = [-1] * len(shape.scan_schemas)
+    return dataclasses.replace(
+        shape,
+        join_backends=tuple(backends),
+        scan_parts=tuple(int(p) for p in parts),
+    )

@@ -93,6 +93,13 @@ class ExecStats:
     # the store version this run's scans were staged at (-1 = not set):
     # the snapshot the results are consistent with
     store_version: int = -1
+    # sharded-execution data movement (zero on the single-device engine):
+    # shuffle collectives the lowering emitted vs elided because the input
+    # was already hash-partitioned on the join key, and small-side
+    # broadcast (all_gather) joins
+    n_shuffles_emitted: int = 0
+    n_shuffles_elided: int = 0
+    n_broadcast_joins: int = 0
 
     def add(self, other: "ExecStats") -> None:
         self.n_joins += other.n_joins
@@ -108,6 +115,9 @@ class ExecStats:
         self.n_dispatches += other.n_dispatches
         self.batch_width = max(self.batch_width, other.batch_width)
         self.store_version = max(self.store_version, other.store_version)
+        self.n_shuffles_emitted += other.n_shuffles_emitted
+        self.n_shuffles_elided += other.n_shuffles_elided
+        self.n_broadcast_joins += other.n_broadcast_joins
 
 
 @dataclasses.dataclass
@@ -801,7 +811,12 @@ class QueryEngine:
         )
 
     def _build_program(self, q: Query) -> _Program:
-        plan = optimizer.optimize(q, self.store, enabled=self.optimize)
+        # the sharded engine reports its mesh size so the join ordering
+        # can weigh shuffle cost; single-device engines pass 1 (no-op)
+        plan = optimizer.optimize(
+            q, self.store, enabled=self.optimize,
+            n_shards=getattr(self, "n_shards", 1),
+        )
         patterns = list(plan.all_patterns())
         opt_groups = tuple(
             plan_ir.GroupSpec(len(g), plan.opt_cross_flags[i])
@@ -880,7 +895,20 @@ class QueryEngine:
             has_slice=prog.has_slice,
             prune=prog.plan.prune,
             join_backends=backends,
+            scan_parts=self._scan_parts(prog, schemas),
         )
+
+    def _scan_parts(
+        self,
+        prog: _Program,
+        schemas: tuple[tuple[str, ...], ...],
+    ) -> tuple[int, ...]:
+        """Per-scan partition column (index into the scan's schema; -1 =
+        unpartitioned). The single-device store is one shard, so nothing
+        is partitioned; the sharded engine overrides with the store's
+        subject-hash placement. Column positions are invariant under the
+        canonical rename, so the shape stays structurally hashable."""
+        return ()
 
     # -- execution ---------------------------------------------------------
     def _execute_program(self, prog: _Program, stats: ExecStats) -> Relation:
@@ -1477,11 +1505,17 @@ class ShardedQueryEngine(QueryEngine):
       * scans come up as flat per-shard partitions (upload-once per shard)
         and the PlanShape's scan/join capacities are PER-SHARD buckets;
       * the compiled executable is core/dist_executor.py's one
-        shard_map-wrapped dispatch — every MRJoin hash-shuffles both sides
-        over the mesh then joins locally, results gather to host;
+        shard_map-wrapped dispatch — PARTITIONING-AWARE: a join input
+        already hash-partitioned on the join key (subject-variable scans
+        start that way) joins map-side with NO collective, a small
+        misaligned side is broadcast (all_gather) instead of shuffling
+        both, and only genuinely misaligned sides pay the hash shuffle;
+        shuffles whose inputs are collective-free are issued ahead of the
+        join chain so the interconnect overlaps the local joins;
       * overflow handling grows the worst SHARD's flagged bucket (join or
-        shuffle) from the exact numbers that ride back with the dispatch,
-        recompiles, and retries — the single-device discipline per shard.
+        shuffle — per mesh-axis stage) from the exact numbers that ride
+        back with the dispatch, recompiles, and retries — the
+        single-device discipline per shard.
 
     `mesh=None` builds a 1-axis mesh over every local device. Warm queries
     are exactly one dispatch and zero compiles, same as the base engine.
@@ -1496,15 +1530,10 @@ class ShardedQueryEngine(QueryEngine):
 
         from repro.sparql.sharded_store import ShardedTripleStore
 
-        # the distributed executor lowers MRJoin only (shuffle + local MR
-        # join); pin every slot to "mr" so the optimizer's matrix picks
-        # never reach dist_executor
-        if self.join_backend == "matrix":
-            raise ValueError(
-                "join_backend='matrix' is not supported by the sharded "
-                "executor (MR joins only)"
-            )
-        self.join_backend = "mr"
+        # the distributed executor lowers both local-join algebras (MR and
+        # masked-SpMM matrix), so the optimizer's per-slot backend picks —
+        # and an engine-level override — pass straight through: shard-local
+        # joins after a shuffle/elision are ordinary joins
         if self.mesh is None:
             self.mesh = jax.make_mesh(
                 (jax.device_count(),), (self.axis_name,)
@@ -1576,6 +1605,24 @@ class ShardedQueryEngine(QueryEngine):
         its per-shard slice is capacity // n_shards)."""
         return tuple(s.capacity // self.n_shards for s in scans)
 
+    def _scan_parts(
+        self,
+        prog: _Program,
+        schemas: tuple[tuple[str, ...], ...],
+    ) -> tuple[int, ...]:
+        """The store shards rows by subject hash — the SAME FNV-1a route
+        the shuffle uses — so a subject-VARIABLE scan arrives already
+        hash-partitioned on that column; the lowering elides every
+        shuffle this placement satisfies. A constant subject pins all
+        matches to one shard (not a hash placement of any variable)."""
+        return tuple(
+            schema.index(tp.s) if tp.s.startswith("?") else -1
+            for tp, schema in zip(prog.patterns, schemas)
+        )
+
+    def _axis_sizes(self) -> tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.axis_names)
+
     def _caps_from_totals(self, totals: list[int]) -> tuple[int, ...]:
         """Per-shard join buckets from the calibration run's exact GLOBAL
         totals: the uniform-hash share, pow-2 bucketed. Key skew shows up
@@ -1635,17 +1682,21 @@ class ShardedQueryEngine(QueryEngine):
         from repro.core import dist_executor as dx
 
         plan = plan_ir.build_plan(shape, join_caps)
-        n_sites = dx.n_shuffle_sites(plan)
+        # one shuffle slot per site per mesh-axis stage (stages of a
+        # hierarchical shuffle size and regrow independently); warmup
+        # files from before the per-stage split carry the wrong length
+        # and fall through to fresh estimates
+        n_slots = dx.n_shuffle_slots(plan, len(self.axis_names))
         if shuffle_caps is None:
             prev = self.plan_cache.get(shape)
             if prev is not None and len(
                 prev.compiled.shuffle_caps
-            ) == n_sites:
+            ) == n_slots:
                 shuffle_caps = prev.compiled.shuffle_caps
             else:
                 shuffle_caps = self._warm_shuffle.get(shape)
-        if shuffle_caps is None or len(shuffle_caps) != n_sites:
-            shuffle_caps = dx.initial_shuffle_caps(plan, self.n_shards)
+        if shuffle_caps is None or len(shuffle_caps) != n_slots:
+            shuffle_caps = dx.initial_shuffle_caps(plan, self._axis_sizes())
         n_i = shape.n_consts[0] + (2 if shape.has_slice else 0)
         n_f = shape.n_consts[1]
         consts_i = self._replicated(
@@ -1688,6 +1739,7 @@ class ShardedQueryEngine(QueryEngine):
     ) -> Relation:
         while True:
             stats.n_dispatches += 1
+            self._count_shuffles(entry, stats)
             res = entry.compiled(canon_scans, consts_i, consts_f, num_vals)
             caps = entry.compiled.plan.join_caps
             stats.peak_capacity = max(
@@ -1707,7 +1759,7 @@ class ShardedQueryEngine(QueryEngine):
             totals_np = np.asarray(res.totals)
             needs_np = np.asarray(res.shuffle_needs)
             n_j = flags_np.shape[1]
-            n_s = sh_flags_np.shape[1]  # join sites + Distinct sites
+            n_s = sh_flags_np.shape[1]  # (site x mesh-axis stage) slots
             new_caps = plan_ir.grow_join_caps(
                 entry.join_caps,
                 [int(totals_np[:, j].max()) for j in range(n_j)],
@@ -1727,17 +1779,166 @@ class ShardedQueryEngine(QueryEngine):
                 shuffle_caps=new_shuffle,
             )
 
+    def _count_shuffles(self, entry: PlanCacheEntry, stats: ExecStats):
+        """Fold the compiled program's static data-movement choices into
+        the run's stats, once per mesh dispatch."""
+        from repro.core import dist_executor as dx
+
+        cnt = dx.strategy_counts(entry.compiled.strategies)
+        stats.n_shuffles_emitted += cnt["emitted"]
+        stats.n_shuffles_elided += cnt["elided"]
+        stats.n_broadcast_joins += cnt["broadcast"]
+
     # -- batching ----------------------------------------------------------
-    def run_batch_outcomes(
-        self, prepared: list[PreparedQuery]
-    ) -> list["ResultSet | Exception"]:
-        """Sharded execution keeps the device axis for SHARDS, so micro-
-        batches run per query (each still one warm mesh dispatch) instead
-        of stacking lanes."""
-        self.last_batch = []
-        group = BatchGroupStats(n_queries=len(prepared), fallback=True)
-        self.last_batch.append(group)
-        return [self._run_single(pq, group) for pq in prepared]
+    def _run_chunk_stacked(
+        self,
+        shape: plan_ir.PlanShape,
+        chunk: list[int],
+        ctxs: list["_BatchCtx | None"],
+        prepared: list[PreparedQuery],
+        out: list,
+        group: BatchGroupStats,
+    ) -> None:
+        """ONE stacked mesh dispatch (lanes x shards) for a chunk of warm
+        same-shape queries — the distributed mirror of the base engine's
+        stacked path: the per-shard program is vmapped over lanes inside
+        shard_map, so a micro-batch's shuffles/joins for every lane ride
+        one launch. Grouping, chunking and the sequential-fallback safety
+        net are the inherited run_batch machinery."""
+        from repro.core import dist_executor as dx
+
+        entry = self.plan_cache.get(shape)
+        n = len(chunk)
+        width = plan_ir.bucket_width(n, self.max_batch_width)
+        lanes = [ctxs[i] for i in chunk] + [ctxs[chunk[0]]] * (width - n)
+        # per scan position: identical pattern across lanes -> ship the
+        # row-sharded buffer once (vmap broadcasts it); else a stacked
+        # (width, n_shards * cap) buffer — the mesh splits rows (dim 1),
+        # vmap splits lanes (dim 0)
+        scans_b: list[Relation] = []
+        axes: list[int | None] = []
+        with self.store.snapshot_lock():  # one store version per chunk
+            for j in range(len(shape.scan_schemas)):
+                tps = tuple(c.prog.patterns[j] for c in lanes)
+                if len({self.store._scan_key(tp) for tp in tps}) == 1:
+                    rel = self.store.match_pattern_device(tps[0])
+                    scans_b.append(
+                        Relation(shape.scan_schemas[j], rel.cols, rel.valid)
+                    )
+                    axes.append(None)
+                else:
+                    scans_b.append(
+                        Relation(
+                            shape.scan_schemas[j],
+                            *self.store.stacked_scan_device(tps),
+                        )
+                    )
+                    axes.append(0)
+            staged_version = self.store.version
+        scans_b = tuple(scans_b)
+        scan_axes = tuple(axes)
+        group.n_broadcast_scans += sum(1 for a in scan_axes if a is None)
+        consts_i = self._replicated(
+            np.stack([c.prog.consts_i for c in lanes])
+        )
+        consts_f = self._replicated(
+            np.stack([c.prog.consts_f for c in lanes])
+        )
+        active = self._replicated(np.arange(width) < n)
+        num_vals = self._num_vals()
+        stats = ExecStats(
+            n_joins=shape.n_joins(),
+            cache_hits=1,
+            batch_width=width,
+            store_version=staged_version,
+        )
+        self.plan_cache.hits += n
+        if entry.num_cap not in (0, int(num_vals.shape[-1])):
+            template_scans, _, _ = self._canonicalize(lanes[0].prog)
+            entry = self._compile_entry(
+                shape, entry.join_caps, template_scans, None, stats
+            )
+        try:
+            while True:
+                bexec = entry.batched.get((width, scan_axes))
+                if bexec is None:
+                    bexec = dx.compile_sharded_plan_batched(
+                        entry.compiled.plan,
+                        self.mesh,
+                        self.axis_names,
+                        entry.compiled.shuffle_caps,
+                        scans_b,
+                        consts_i,
+                        consts_f,
+                        num_vals,
+                        active,
+                        scan_axes,
+                        use_kernel=self.use_kernel,
+                    )
+                    entry.batched[(width, scan_axes)] = bexec
+                    stats.n_compiles += 1
+                    self.plan_cache.compiles += 1
+                stats.n_dispatches += 1
+                self._count_shuffles(entry, stats)
+                res = bexec(scans_b, consts_i, consts_f, num_vals, active)
+                # the single host sync: join AND shuffle flags, every
+                # (lane, shard) pair
+                flags_np = np.asarray(res.overflows)
+                sh_flags_np = np.asarray(res.shuffle_flags)
+                if not flags_np.any() and not sh_flags_np.any():
+                    break
+                # a bucket overflowed in some lane on some shard: grow the
+                # flagged ones to the worst (lane, shard)'s exact numbers,
+                # recompile (solo entry + this width), retry the chunk
+                stats.n_retries += 1
+                totals_np = np.asarray(res.totals)
+                needs_np = np.asarray(res.shuffle_needs)
+                n_j = flags_np.shape[-1]
+                n_s = sh_flags_np.shape[-1]
+                new_caps = plan_ir.grow_join_caps(
+                    entry.join_caps,
+                    [int(totals_np[..., j].max()) for j in range(n_j)],
+                    [bool(flags_np[..., j].any()) for j in range(n_j)],
+                )
+                new_shuffle = plan_ir.grow_join_caps(
+                    entry.compiled.shuffle_caps,
+                    [int(needs_np[..., j].max()) for j in range(n_s)],
+                    [bool(sh_flags_np[..., j].any()) for j in range(n_s)],
+                )
+                if max(new_caps + new_shuffle) > self.max_capacity:
+                    raise MemoryError(
+                        f"join result exceeds {self.max_capacity}"
+                    )
+                template_scans, _, _ = self._canonicalize(lanes[0].prog)
+                entry = self._compile_entry(
+                    shape, new_caps, template_scans, None, stats,
+                    shuffle_caps=new_shuffle,
+                )
+        finally:
+            group.n_dispatches += stats.n_dispatches
+            group.n_compiles += stats.n_compiles
+        group.widths = group.widths + (width,)
+        self.stacked_dispatches += stats.n_dispatches
+        self.batch_width_hist[width] = (
+            self.batch_width_hist.get(width, 0) + stats.n_dispatches
+        )
+        self.stacked_queries += n
+        caps = entry.compiled.plan.join_caps
+        stats.peak_join_bucket = max(caps) if caps else 0
+        stats.peak_capacity = entry.compiled.plan.max_capacity()
+        rel_b = res.relation
+        cols_np = np.asarray(rel_b.cols)
+        valid_np = np.asarray(rel_b.valid)
+        schema = rel_b.schema
+        for k, i in enumerate(chunk):
+            names = tuple(ctxs[i].inverse[v] for v in schema)
+            rows = self._decode_numpy(names, cols_np[k][valid_np[k]])
+            q_stats = dataclasses.replace(stats)
+            pq = prepared[i]
+            pq.stats.add(q_stats)
+            pq.last_stats = q_stats
+            pq.n_runs += 1
+            out[i] = ResultSet(names, rows, q_stats)
 
     # -- persistence -------------------------------------------------------
     def _entry_jsonable(self, e: PlanCacheEntry) -> dict:
@@ -1774,4 +1975,42 @@ class ShardedQueryEngine(QueryEngine):
                 f"  per-shard join buckets={entry.join_caps}, "
                 f"shuffle buckets={entry.compiled.shuffle_caps}"
             )
+            strategies = entry.compiled.strategies
+        else:
+            # not compiled yet: derive the strategies the lowering WILL
+            # choose (pure static analysis over the would-be plan)
+            from repro.core import dist_executor as dx
+
+            plan = plan_ir.build_plan(
+                shape, (plan_ir.MIN_BUCKET,) * shape.n_joins()
+            )
+            strategies = dx.analyze_plan(plan, self.n_shards)
+        from repro.core import dist_executor as dx
+
+        for i, st in enumerate(strategies):
+            if st.op == "cross_join":
+                move = "right side replicated (all_gather)"
+            elif st.op == "distinct":
+                move = (
+                    "shuffle by all columns (emitted)"
+                    if st.left == "shuffle"
+                    else "co-located already (shuffle elided)"
+                )
+            else:
+                sides = []
+                for name, action in (("left", st.left), ("right", st.right)):
+                    if action == "local":
+                        sides.append(f"{name} map-side (shuffle elided)")
+                    elif action == "shuffle":
+                        sides.append(f"{name} shuffle emitted")
+                    elif action == "broadcast":
+                        sides.append(f"{name} broadcast (all_gather)")
+                move = ", ".join(sides)
+                move += f" on key ({', '.join(st.key)})"
+            lines.append(f"  shuffle[{i}] {st.op}: {move}")
+        cnt = dx.strategy_counts(strategies)
+        lines.append(
+            f"  shuffles: {cnt['emitted']} emitted, {cnt['elided']} "
+            f"elided, {cnt['broadcast']} broadcast join(s)"
+        )
         return "\n".join(lines)

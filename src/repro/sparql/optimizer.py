@@ -94,11 +94,20 @@ class OptimizedProgram:
 class _State:
     """Estimated intermediate: row count, per-variable distinct counts and
     per-variable degree skew (max/avg join fan-out of the predicate
-    position that bound the variable — the matrix backend's signal)."""
+    position that bound the variable — the matrix backend's signal).
+
+    `schema` is the relation's column order (the physical plan derives
+    each join key from it, so the optimizer can mirror the lowering's key
+    exactly); `part` is the hash-partitioning columns under a sharded
+    store (None = unknown placement) — the host-side mirror of
+    core/dist_executor's Partitioning property, driving the shuffle-cost
+    term of the join ordering."""
 
     card: float
     dv: dict[str, float]
     skew: dict[str, float] = dataclasses.field(default_factory=dict)
+    schema: tuple[str, ...] = ()
+    part: "tuple[str, ...] | None" = None
 
 
 def _filter_selectivity(expr: algebra.FilterExpr, dv: dict[str, float]) -> float:
@@ -149,7 +158,12 @@ def _pattern_state(
         if tp_vars and set(expr.variables()) <= tp_vars:
             card *= _filter_selectivity(expr, dv)
     dv = {v: max(1.0, min(d, card)) for v, d in dv.items()}
-    return _State(card, dv, skew)
+    # scan-order column schema (s,p,o first appearance — the store's scan
+    # column order); a variable subject means the sharded store hands this
+    # scan out already subject-hash partitioned
+    schema = tuple(dict.fromkeys(tp.variables()))
+    part = (tp.s,) if tp.s.startswith("?") else None
+    return _State(card, dv, skew, schema, part)
 
 
 def _join_states(a: _State, b: _State) -> tuple[_State, bool]:
@@ -167,7 +181,45 @@ def _join_states(a: _State, b: _State) -> tuple[_State, bool]:
         v: max(a.skew.get(v, 1.0), b.skew.get(v, 1.0))
         for v in set(a.skew) | set(b.skew)
     }
-    return _State(est, dv, skew), bool(shared)
+    schema = a.schema + tuple(v for v in b.schema if v not in a.schema)
+    return _State(est, dv, skew, schema), bool(shared)
+
+
+def _dist_step(
+    a: _State, b: _State, n_shards: int
+) -> tuple[float, "tuple[str, ...] | None"]:
+    """Shuffle cost of the sharded join a ⋈ b: (estimated rows moved over
+    the interconnect, output partitioning). Mirrors the strategy rules of
+    core/dist_executor.analyze_plan on the estimates: an aligned side
+    moves nothing; a misaligned side shuffles card × (n-1)/n rows; a
+    small doubly-misaligned right side broadcasts (card × (n-1)) and the
+    left partitioning survives. Zero at n_shards == 1, so single-device
+    join ordering is unchanged."""
+    key = tuple(v for v in a.schema if v in set(b.schema))
+    if n_shards <= 1:
+        return 0.0, (key or a.part)
+    if not key:  # cross join: the right side is replicated
+        return b.card * (n_shards - 1), a.part
+    left_ok = a.part == key
+    right_ok = b.part == key
+    if left_ok and right_ok:
+        return 0.0, key
+    if (
+        not left_ok
+        and not right_ok
+        and b.card * n_shards <= _BROADCAST_ROWS
+    ):
+        return b.card * (n_shards - 1), a.part
+    frac = (n_shards - 1) / n_shards
+    moved = (0.0 if left_ok else a.card) + (0.0 if right_ok else b.card)
+    return moved * frac, key
+
+
+# mirrors core/dist_executor.DEFAULT_BROADCAST_ROWS (kept as a literal so
+# the optimizer stays importable without the executor stack; the actual
+# broadcast decision is re-made from real capacities at lowering time —
+# this copy only shapes the cost model)
+_BROADCAST_ROWS = 2048
 
 
 # -- backend selection: MR join vs matrix (masked SpMM) join ------------------
@@ -194,35 +246,47 @@ def _choose_backend(a: _State, b: _State, est: float) -> str:
 
 
 def _greedy_from(
-    states: list[_State], start: int
-) -> tuple[list[int], list[bool], list[float], list[str], _State]:
-    """Left-deep greedy order from a fixed head, minimising the estimated
-    output of each next join (cross joins last, smallest first)."""
+    states: list[_State], start: int, n_shards: int = 1
+) -> tuple[
+    list[int], list[bool], list[float], list[str], _State, list[float]
+]:
+    """Left-deep greedy order from a fixed head, minimising each next
+    join's estimated output PLUS its shuffle cost (rows moved over the
+    interconnect — zero at n_shards == 1, so single-device ordering is
+    bit-identical). Cross joins go last, smallest first. Also returns the
+    per-step costs (est + moved) the start-selection compares."""
     order = [start]
     flags: list[bool] = []
     ests: list[float] = []
+    costs: list[float] = []
     backends: list[str] = []
     cur = states[start]
     remaining = [i for i in range(len(states)) if i != start]
+
+    def step_cost(i: int) -> float:
+        new, _ = _join_states(cur, states[i])
+        moved, _ = _dist_step(cur, states[i], n_shards)
+        return new.card + moved
+
     while remaining:
         connected = [
             i for i in remaining if set(states[i].dv) & set(cur.dv)
         ]
         if connected:
-            nxt = min(
-                connected,
-                key=lambda i: (_join_states(cur, states[i])[0].card, i),
-            )
+            nxt = min(connected, key=lambda i: (step_cost(i), i))
         else:  # disconnected component: cheapest pattern first
             nxt = min(remaining, key=lambda i: (states[i].card, i))
         new, shared = _join_states(cur, states[nxt])
+        moved, out_part = _dist_step(cur, states[nxt], n_shards)
+        new.part = out_part
         order.append(nxt)
         flags.append(not shared)
         ests.append(new.card)
+        costs.append(new.card + moved)
         backends.append(_choose_backend(cur, states[nxt], new.card))
         cur = new
         remaining.remove(nxt)
-    return order, flags, ests, backends, cur
+    return order, flags, ests, backends, cur, costs
 
 
 # starts tried exhaustively up to this many patterns (n × O(n²) greedy
@@ -236,34 +300,47 @@ def order_patterns(
     stats: StoreStatistics,
     lookup,
     filters: Sequence[algebra.FilterExpr] = (),
-) -> tuple[list[int], tuple[bool, ...], list[float], list[str], _State]:
+    n_shards: int = 1,
+) -> tuple[
+    list[int], tuple[bool, ...], list[float], list[str], _State,
+    list[float],
+]:
     """Statistics-backed join ordering for one BGP.
 
     Tries every pattern as the chain head and keeps the greedy order with
-    the smallest (max, sum) of estimated intermediate cardinalities —
-    deterministic for a given store, so structurally-equal queries keep
-    hashing to one PlanShape. `filters` (the query's FILTER conjuncts)
-    sharpen the leaf estimates: a conjunct a single pattern binds is
-    treated as a scan-stage mask, scaling that leaf by its selectivity.
+    the smallest (max, sum) of per-step COSTS — estimated intermediate
+    cardinality plus, when `n_shards` > 1, the shuffle term (rows moved ×
+    (n_shards-1)/n_shards), which steers toward alignment-preserving
+    orders (a subject-star chain keeps every join map-side). At
+    n_shards == 1 cost == cardinality, so single-device plans are
+    unchanged. Deterministic for a given store, so structurally-equal
+    queries keep hashing to one PlanShape. `filters` (the query's FILTER
+    conjuncts) sharpen the leaf estimates: a conjunct a single pattern
+    binds is treated as a scan-stage mask, scaling that leaf by its
+    selectivity. Also returns the per-step shuffle cost (cost − est) for
+    the trace.
     """
     states = [
         _pattern_state(tp, leaf_card, stats, lookup, filters)
         for tp in patterns
     ]
     if len(patterns) == 1:
-        return [0], (), [], [], states[0]
+        return [0], (), [], [], states[0], []
     if len(patterns) <= _MAX_EXHAUSTIVE_STARTS:
         starts = range(len(patterns))
     else:
         starts = [min(range(len(patterns)), key=lambda i: states[i].card)]
     best = None
     for s in starts:
-        order, flags, ests, backends, final = _greedy_from(states, s)
-        key = (max(ests), sum(ests), tuple(order))
+        order, flags, ests, backends, final, costs = _greedy_from(
+            states, s, n_shards
+        )
+        key = (max(costs), sum(costs), tuple(order))
         if best is None or key < best[0]:
-            best = (key, order, flags, ests, backends, final)
-    _, order, flags, ests, backends, final = best
-    return order, tuple(flags), ests, backends, final
+            best = (key, order, flags, ests, backends, final, costs)
+    _, order, flags, ests, backends, final, costs = best
+    moved = [c - e for c, e in zip(costs, ests)]
+    return order, tuple(flags), ests, backends, final, moved
 
 
 # -- the pass pipeline --------------------------------------------------------
@@ -284,6 +361,7 @@ def _order_bgp(
     label: str,
     trace: list[str],
     filters: Sequence[algebra.FilterExpr] = (),
+    n_shards: int = 1,
 ) -> tuple[
     list[TriplePattern], tuple[bool, ...], list[float], list[str], _State
 ]:
@@ -305,8 +383,8 @@ def _order_bgp(
             cur, _ = _join_states(cur, st)
             ests.append(cur.card)
         return ordered, flags, ests, ["mr"] * len(ests), cur
-    order, flags, ests, backends, final = order_patterns(
-        patterns, leaf, store.statistics, lookup, filters
+    order, flags, ests, backends, final, moved = order_patterns(
+        patterns, leaf, store.statistics, lookup, filters, n_shards
     )
     ordered = [patterns[i] for i in order]
     trace.append(
@@ -320,6 +398,18 @@ def _order_bgp(
             else ""
         )
     )
+    if n_shards > 1 and moved:
+        trace.append(
+            f"shuffle_cost[{label}]: est rows moved per join "
+            f"({n_shards} shards): ["
+            + ", ".join(_fmt_est(m) for m in moved)
+            + "]"
+            + (
+                ""
+                if any(m > 0 for m in moved)
+                else "  (all joins map-side)"
+            )
+        )
     if "matrix" in backends:
         picked = [i for i, b in enumerate(backends) if b == "matrix"]
         trace.append(
@@ -490,13 +580,17 @@ def _prune_trace(
         )
 
 
-def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
+def optimize(
+    q, store: TripleStore, enabled: bool = True, n_shards: int = 1
+) -> OptimizedProgram:
     """Run the pass pipeline over a parsed query.
 
     `enabled=False` reproduces the pre-optimizer behaviour (legacy greedy
     join order, all filters evaluated at the top, no pruning) — the
     baseline the differential tests and the J1/J2 benchmarks compare
-    against.
+    against. `n_shards` > 1 (the sharded engine) adds the per-step
+    shuffle-cost term to the join ordering — communication the plan can
+    avoid by keeping joins on already-aligned keys.
     """
     trace: list[str] = []
     required_vars = {v for tp in q.patterns for v in tp.variables()}
@@ -508,7 +602,8 @@ def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
     req_state: _State | None = None
     if q.patterns:
         required, cross_flags, ests, bks, req_state = _order_bgp(
-            q.patterns, store, enabled, "required", trace, est_filters
+            q.patterns, store, enabled, "required", trace, est_filters,
+            n_shards,
         )
         join_ests.extend(ests)
         join_backends.extend(bks)
@@ -519,7 +614,8 @@ def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
     opt_cross_flags: list[tuple[bool, ...]] = []
     for gi, group in enumerate(q.optionals):
         ordered, flags, ests, bks, g_state = _order_bgp(
-            list(group), store, enabled, f"optional[{gi}]", trace, est_filters
+            list(group), store, enabled, f"optional[{gi}]", trace,
+            est_filters, n_shards,
         )
         opt_groups.append(tuple(ordered))
         opt_cross_flags.append(flags)
@@ -537,7 +633,8 @@ def optimize(q, store: TripleStore, enabled: bool = True) -> OptimizedProgram:
     branch_cross_flags: list[tuple[bool, ...]] = []
     for bi, branch in enumerate(q.unions):
         ordered, flags, ests, bks, b_state = _order_bgp(
-            list(branch), store, enabled, f"union[{bi}]", trace, est_filters
+            list(branch), store, enabled, f"union[{bi}]", trace,
+            est_filters, n_shards,
         )
         branches.append(tuple(ordered))
         branch_cross_flags.append(flags)

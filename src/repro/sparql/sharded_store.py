@@ -296,12 +296,64 @@ class ShardedTripleStore:
             tuple(actual), self._place(entry.cols), self._place(entry.valid)
         )
 
+    def _scan_key(self, tp: TriplePattern) -> tuple:
+        """Canonical pattern structure (see TripleStore._scan_key) — the
+        engine's batch grouping compares lanes' scan keys through us."""
+        return self.shards[0]._scan_key(tp)
+
+    def stacked_scan_device(
+        self, tps: "tuple[TriplePattern, ...]"
+    ) -> tuple:
+        """One scan position of a stacked sharded batch: (width,
+        n_shards * cap, n_cols) cols and (width, n_shards * cap) valid —
+        each lane's flat per-shard blocks stacked on a leading lane axis.
+        The mesh splits rows (dim 1) exactly as the solo flat buffer;
+        vmap splits lanes (dim 0). Lanes share one capacity bucket by
+        construction (capacity is part of the PlanShape they group on);
+        a floor drift between patterns surfaces as a stack error and the
+        engine falls back to sequential dispatch. Cached by the lane-key
+        tuple at the current store version, like the flat scans."""
+        key = ("stacked",) + tuple(self._scan_key(tp) for tp in tps)
+        slot = self._device_cache.get(key)
+        if slot is not None:
+            ver, cached = slot
+            if ver == self.version:
+                self._scan_hits += 1
+                return cached
+            del self._device_cache[key]
+            self._evictions += 1
+        self._scan_misses += 1
+        rels = [self.match_pattern_device(tp) for tp in tps]
+        entry = (
+            self._place_stacked(jnp.stack([r.cols for r in rels])),
+            self._place_stacked(jnp.stack([r.valid for r in rels])),
+        )
+        self._device_cache[key] = (self.version, entry)
+        while len(self._device_cache) > self.scan_cache_entries:
+            self._device_cache.popitem(last=False)
+        return entry
+
     def _place(self, arr):
         """Pin row blocks to their shard's device (no-op re-put on cache
         hits: equal shardings transfer nothing)."""
         if self.row_sharding is None:
             return jnp.asarray(arr)
         return jax.device_put(arr, self.row_sharding)
+
+    def _place_stacked(self, arr):
+        """Pin a lane-stacked buffer: lanes replicated over the lane axis'
+        None spec, rows split over the mesh like the flat buffers."""
+        if self.row_sharding is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return jax.device_put(
+            arr,
+            NamedSharding(
+                self.row_sharding.mesh,
+                PartitionSpec(None, *self.row_sharding.spec),
+            ),
+        )
 
     def numeric_values_device(self):
         return self.shards[0].numeric_values_device()

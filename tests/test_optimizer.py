@@ -123,7 +123,7 @@ def test_exhaustive_start_orders_from_selective_tail(j_store):
     """order_patterns starts J1 from the 12-row tail, not the 10-row type
     scan the greedy heuristic picks (whose only join explodes)."""
     q = parse(lubm.J_QUERIES["J1"])
-    order, flags, ests, _backends, _ = optimizer.order_patterns(
+    order, flags, ests, _backends, _, _moved = optimizer.order_patterns(
         q.patterns,
         j_store.estimate_cardinality,
         j_store.statistics,
@@ -591,12 +591,20 @@ def test_join_backend_override_validation():
     assert set(shape.join_backends) == {"matrix"}
 
 
-def test_sharded_engine_rejects_matrix_backend():
+def test_sharded_engine_accepts_matrix_backend():
+    """The shard-local join is the single-device algebra verbatim, so the
+    SpMM backend is valid inside shard_map too (it used to be pinned to
+    "mr"); matrix results must match the mr backend on a sharded store."""
     from repro.sparql.engine import ShardedQueryEngine
+    from repro.sparql.sharded_store import shard_store
 
-    store = student_store()
-    with pytest.raises(ValueError, match="matrix"):
-        ShardedQueryEngine(store, join_backend="matrix")
+    store = shard_store(student_store(), n_shards=1)
+    q = PREFIX + "SELECT ?x ?a WHERE { ?x a ub:Student . ?x ub:age ?a . }"
+    got_mr = rows_as_sets(ShardedQueryEngine(store, join_backend="mr").query(q))
+    got_mx = rows_as_sets(
+        ShardedQueryEngine(store, join_backend="matrix").query(q))
+    assert got_mx == got_mr
+    assert len(got_mx) > 0
 
 
 @pytest.mark.parametrize("seed", [0, 2, 5])

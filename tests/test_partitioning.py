@@ -1,0 +1,220 @@
+"""Partitioning-aware lowering: the propagation lattice and per-site
+shuffle strategies of core/dist_executor.analyze_plan.
+
+Pure host-side static analysis (schemas + capacities only) — no mesh, no
+device, so these run in tier-1. The device-level differential checks of
+the same machinery live in tests/distributed/sharded_query_prog.py.
+"""
+import pytest
+
+from repro.core import dist_executor as dx
+from repro.core.plan_ir import (
+    Distinct,
+    MatrixJoin,
+    MRJoin,
+    PhysicalPlan,
+    Project,
+    Scan,
+    UnionAll,
+)
+
+
+def scan(index, schema, cap=64, part_col=-1):
+    return Scan(index=index, schema=tuple(schema), capacity=cap,
+                part_col=part_col)
+
+
+def join(left, right, key, cap=128, cls=MRJoin):
+    schema = tuple(left.schema) + tuple(
+        v for v in right.schema if v not in left.schema
+    )
+    return cls(left=left, right=right, key_vars=tuple(key), schema=schema,
+               capacity=cap)
+
+
+def plan_of(root, n_scans=2, n_joins=1):
+    return PhysicalPlan(root=root, n_scans=n_scans,
+                        join_caps=(128,) * n_joins)
+
+
+# ------------------------------------------------------- the lattice itself
+
+
+def test_partitioning_singletons_and_str():
+    assert dx.UNKNOWN.kind == "unknown"
+    assert dx.REPLICATED.kind == "replicated"
+    p = dx.hash_part(("?x",))
+    assert p.kind == "hash" and p.cols == ("?x",)
+    assert str(p) == "hash(?x)"
+    with pytest.raises(AssertionError):
+        dx.hash_part(())
+
+
+def test_scan_partitioned_on_subject_column():
+    st = dx.analyze_plan(
+        plan_of(join(scan(0, ("?x", "?a"), part_col=0),
+                     scan(1, ("?x", "?b"), part_col=0), ("?x",))),
+        n_shards=4,
+    )
+    assert len(st) == 1
+
+
+# ----------------------------------------------- join alignment / elision
+
+
+def test_subject_star_elides_every_shuffle():
+    """Both sides subject-hash partitioned on the join key: the map-side
+    join — zero collectives emitted (the tentpole's headline case)."""
+    root = join(scan(0, ("?x", "?a"), part_col=0),
+                scan(1, ("?x", "?b"), part_col=0), ("?x",))
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=4)
+    assert (s.left, s.right) == ("local", "local")
+    assert s.emitted == 0 and s.elided == 2 and not s.broadcast
+    assert dx.strategy_counts([s]) == {
+        "emitted": 0, "elided": 2, "broadcast": 0
+    }
+
+
+def test_chain_join_shuffles_misaligned_side_only():
+    """?x<p>?y . ?y<q>?z joined on ?y: the right scan is subject-hash
+    partitioned on ?y (aligned), the left is partitioned on ?x — only the
+    left side's rows move."""
+    root = join(scan(0, ("?x", "?y"), part_col=0),
+                scan(1, ("?y", "?z"), part_col=0), ("?y",))
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=4)
+    assert (s.left, s.right) == ("shuffle", "local")
+    assert s.emitted == 1 and s.elided == 1
+
+
+def test_single_shard_everything_local():
+    root = join(scan(0, ("?x", "?y")), scan(1, ("?y", "?z")), ("?y",))
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=1)
+    assert (s.left, s.right) == ("local", "local")
+
+
+def test_alignment_is_column_order_sensitive():
+    """hash((?a,?b)) routes by FNV over the tuple IN ORDER — a join keyed
+    (?b,?a) must re-shuffle even though the column sets match."""
+    up = join(scan(0, ("?a", "?b"), part_col=0),
+              scan(1, ("?a", "?b", "?c"), part_col=0), ("?a", "?b"))
+    aligned_next = join(up, scan(2, ("?a", "?b", "?d")), ("?a", "?b"),
+                        cap=256)
+    st = dx.analyze_plan(plan_of(aligned_next, 3, 2), n_shards=4,
+                         broadcast_rows=0)
+    assert st[1].left == "local"  # output part hash(?a,?b) == key
+    swapped_next = join(up, scan(2, ("?a", "?b", "?d")), ("?b", "?a"),
+                        cap=256)
+    st = dx.analyze_plan(plan_of(swapped_next, 3, 2), n_shards=4,
+                         broadcast_rows=0)
+    assert st[1].left == "shuffle"
+
+
+def test_join_output_partitioned_on_key():
+    """A join's output is hash(key): the next join on the same key runs
+    map-side even when no scan was aligned to begin with."""
+    first = join(scan(0, ("?x", "?y"), part_col=0),
+                 scan(1, ("?z", "?y"), part_col=0), ("?y",))
+    second = join(first, scan(2, ("?y", "?w"), part_col=0), ("?y",),
+                  cap=256)
+    st = dx.analyze_plan(plan_of(second, 3, 2), n_shards=4,
+                         broadcast_rows=0)
+    assert st[0].emitted == 2  # both scans misaligned on ?y
+    assert st[1].left == "local"  # first join's output is hash(?y)
+    assert st[1].right == "local"  # subject-var scan of ?y aligned too
+
+
+def test_matrix_join_site_analyzed_same_as_mr():
+    root = join(scan(0, ("?x", "?a"), part_col=0),
+                scan(1, ("?x", "?b"), part_col=0), ("?x",),
+                cls=MatrixJoin)
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=4)
+    assert s.op == "matrix_join"
+    assert s.emitted == 0 and s.elided == 2
+
+
+# --------------------------------------------------------------- broadcast
+
+
+def test_small_misaligned_right_broadcasts():
+    root = join(scan(0, ("?x", "?y"), part_col=0),
+                scan(1, ("?z", "?y"), part_col=0, cap=16), ("?y",))
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=4, broadcast_rows=2048)
+    assert (s.left, s.right) == ("local", "broadcast")
+    assert s.broadcast and s.emitted == 0
+    # too big to replicate at this threshold: shuffle both sides instead
+    (s,) = dx.analyze_plan(plan_of(root), n_shards=4, broadcast_rows=32)
+    assert (s.left, s.right) == ("shuffle", "shuffle")
+
+
+def test_broadcast_keeps_left_partitioning():
+    """Under a broadcast the left rows never move, so the OUTPUT keeps the
+    left partitioning (hash(?x)), not hash(key) — a later subject-star
+    join on ?x stays map-side."""
+    first = join(scan(0, ("?x", "?y"), part_col=0),
+                 scan(1, ("?z", "?y"), part_col=0, cap=16), ("?y",))
+    second = join(first, scan(2, ("?x", "?w"), part_col=0), ("?x",),
+                  cap=256)
+    st = dx.analyze_plan(plan_of(second, 3, 2), n_shards=4)
+    assert st[0].broadcast
+    assert (st[1].left, st[1].right) == ("local", "local")
+
+
+# ------------------------------------------- project / distinct / union
+
+
+def test_project_keeps_part_when_columns_survive():
+    base = join(scan(0, ("?x", "?a"), part_col=0),
+                scan(1, ("?x", "?b"), part_col=0), ("?x",))
+    keep = Distinct(child=Project(child=base, schema=("?x", "?a")))
+    st = dx.analyze_plan(plan_of(keep), n_shards=4)
+    assert st[-1].op == "distinct" and st[-1].left == "local"
+
+
+def test_project_dropping_part_column_resets_to_unknown():
+    base = join(scan(0, ("?x", "?a"), part_col=0),
+                scan(1, ("?x", "?b"), part_col=0), ("?x",))
+    drop = Distinct(child=Project(child=base, schema=("?a", "?b")))
+    st = dx.analyze_plan(plan_of(drop), n_shards=4)
+    assert st[-1].left == "shuffle"  # ?x projected away -> unknown
+
+
+def test_distinct_local_iff_hash_cols_subset_of_schema():
+    aligned = Distinct(child=scan(0, ("?x", "?a"), part_col=0))
+    (s,) = dx.analyze_plan(plan_of(aligned, 1, 0), n_shards=4)
+    assert s.left == "local"  # equal rows agree on ?x -> co-located
+    arbitrary = Distinct(child=scan(0, ("?x", "?a")))
+    (s,) = dx.analyze_plan(plan_of(arbitrary, 1, 0), n_shards=4)
+    assert s.left == "shuffle"
+    (s,) = dx.analyze_plan(plan_of(arbitrary, 1, 0), n_shards=1)
+    assert s.left == "local"  # 1 shard: everything is trivially aligned
+
+
+def test_union_common_partitioning():
+    a = scan(0, ("?x", "?v"), part_col=0)
+    b = scan(1, ("?x", "?v"), part_col=0)
+    u = UnionAll(children=(a, b), schema=("?x", "?v"))
+    (s,) = dx.analyze_plan(plan_of(Distinct(child=u), 2, 0), n_shards=4)
+    assert s.left == "local"  # both branches hash(?x) -> union keeps it
+    mixed = UnionAll(children=(a, scan(1, ("?x", "?v"))),
+                     schema=("?x", "?v"))
+    (s,) = dx.analyze_plan(plan_of(Distinct(child=mixed), 2, 0),
+                           n_shards=4)
+    assert s.left == "shuffle"  # branches disagree -> unknown
+
+
+# --------------------------------------------- site enumeration / caps
+
+
+def test_site_enumeration_and_per_stage_caps():
+    first = join(scan(0, ("?x", "?y"), part_col=0),
+                 scan(1, ("?y", "?z"), part_col=0), ("?y",))
+    root = Distinct(child=first)
+    plan = plan_of(root)
+    sites = dx.shuffle_site_nodes(plan)
+    assert [type(n).__name__ for n in sites] == ["MRJoin", "Distinct"]
+    assert dx.n_shuffle_slots(plan, n_stages=2) == 4  # 2 sites x 2 stages
+    caps = dx.initial_shuffle_caps(plan, (2, 4))
+    assert len(caps) == 4
+    # stage caps scale with 1/axis_size: the 2-way stage's bucket is at
+    # least the 4-way stage's for the same site
+    assert caps[0] >= caps[1] and caps[2] >= caps[3]

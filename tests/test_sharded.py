@@ -197,7 +197,23 @@ def test_explain_shows_shard_buckets(engines):
     assert "shuffle buckets=" in out
 
 
-def test_run_batch_falls_back_sequentially(engines):
+def test_run_batch_stacks_same_shape_queries(engines):
+    """Warm same-shape queries ride ONE stacked mesh dispatch (lanes x
+    shards) — the sharded engine no longer falls back to sequential."""
+    store, _, sharded = engines
+    text = lubm.QUERIES["Q2"]
+    sharded.query(text)  # warm the shape
+    prepared = [sharded.prepare(text) for _ in range(3)]
+    out = sharded.run_batch(prepared)
+    want = rows_as_sets(reference_rows(store, parse(text)))
+    assert all(rows_as_sets(r.rows) == want for r in out)
+    group = sharded.last_batch[0]
+    assert not group.fallback
+    assert group.n_dispatches == 1  # one launch for the whole chunk
+    assert group.widths == (4,)  # 3 lanes bucketed to the pow-2 width
+
+
+def test_run_batch_mixed_shapes_isolated_per_group(engines):
     store, _, sharded = engines
     prepared = [sharded.prepare(lubm.QUERIES["Q1"]),
                 sharded.prepare(lubm.QUERIES["Q4"])]
@@ -206,7 +222,7 @@ def test_run_batch_falls_back_sequentially(engines):
         rows_as_sets(reference_rows(store, parse(p.text)))
         for p in prepared
     ]
-    assert sharded.last_batch[0].fallback
+    assert len(sharded.last_batch) == 2  # one group per plan shape
 
 
 def test_save_cache_roundtrips_shuffle_caps(tmp_path, engines):
