@@ -227,6 +227,13 @@ def lower_batched(
     same-query-different-FILTER batch ships each such scan's device buffer
     once instead of W stacked copies, cutting staging memory by the batch
     width at those positions. Default: all stacked.
+
+    Lanes need NOT stage at their natural scan capacities: cross-shape
+    padded stacking (engine._coalesce_groups) runs near-miss PlanShapes —
+    same plan DAG, smaller pow-2 scan caps — through one executable by
+    padding each lane's scans up to the group's max caps. Padding rows
+    arrive valid=False, and every operator here is masked on validity, so
+    a padded lane emits exactly the rows its natural shape would have.
     """
     base = lower(plan, use_kernel=use_kernel)
     axes = scan_axes if scan_axes is not None else (0,) * plan.n_scans

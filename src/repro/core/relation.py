@@ -104,6 +104,24 @@ class Relation:
         return cls(tuple(schema), jnp.asarray(cols), jnp.asarray(valid))
 
 
+def pad_to(rel: Relation, capacity: int) -> Relation:
+    """The same relation at a larger static capacity: appended rows are
+    zero ids with valid=False, so every masked operator treats them as
+    absent. This is the soundness basis of cross-shape padded stacking —
+    a scan padded up to a bigger pow-2 bucket computes exactly the same
+    result, just in a wider buffer. A no-op at equal capacity."""
+    cur = rel.capacity
+    if capacity == cur:
+        return rel
+    assert capacity > cur, (capacity, cur)
+    pad = [(0, 0)] * (rel.cols.ndim - 2) + [(0, capacity - cur), (0, 0)]
+    return Relation(
+        rel.schema,
+        jnp.pad(rel.cols, pad),
+        jnp.pad(rel.valid, [p for p in pad[:-1]]),
+    )
+
+
 def shared_vars(a: Relation | Sequence[str], b: Relation | Sequence[str]) -> list[str]:
     sa = a.schema if isinstance(a, Relation) else tuple(a)
     sb = b.schema if isinstance(b, Relation) else tuple(b)

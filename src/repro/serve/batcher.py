@@ -1,6 +1,18 @@
 """Request micro-batcher: collects requests into fixed-size device batches
 (pad-to-capacity, the serving analogue of the Mars static-shape discipline),
-dispatches when full or when max_wait elapses."""
+dispatches when full or when max_wait elapses.
+
+The batcher thread is the serving tier's CPU stage of the MapSQ
+coprocessing split: it must only GROUP and DISPATCH. Host-side result
+decode — the expensive Python loop that turns device buffers into row
+dicts — is handed off through `Deferred` slots: `batch_fn` may return, per
+request, a zero-argument callable wrapped in `Deferred`, and the batcher
+routes it to the configured decode pool (serve/decode.py) instead of
+running it inline. With a pool attached, dispatch of batch k+1 overlaps
+decode of batch k and per-request futures resolve from the decode side;
+without one, deferred slots are resolved inline (the synchronous
+pre-pipeline behaviour).
+"""
 from __future__ import annotations
 
 import copy
@@ -8,17 +20,53 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 
-def _safe_copy(e: BaseException) -> BaseException:
-    """copy.copy reconstructs exceptions via cls(*args), which TypeErrors
-    for classes whose __init__ signature diverges from their stored args;
-    fall back to sharing the original rather than killing the worker."""
+class BatchTimeout(TimeoutError):
+    """A submitter's wall-clock deadline expired before its request
+    resolved. The request itself is NOT cancelled — the batch it rides in
+    keeps running — but it is marked abandoned so the decode stage can
+    skip producing a result nobody will read."""
+
+
+def _exc_copy(e: BaseException) -> BaseException:
+    """An independent per-request copy of a batch failure, carrying the
+    original raise site's traceback.
+
+    Each request in a failed batch re-raises on its own submitter thread;
+    sharing one exception instance makes those re-raises race on
+    `__traceback__` (and lets one caller's handling mutate what another
+    sees). copy.copy reconstructs via cls(*args), which TypeErrors for
+    classes whose __init__ signature diverges from their stored args — for
+    those, clone the instance structurally (__new__ + __dict__ + args).
+    Only if even that fails is the original shared, as a last resort.
+    """
     try:
-        return copy.copy(e)
+        c = copy.copy(e)
     except Exception:
+        try:
+            c = e.__class__.__new__(e.__class__)
+            c.__dict__.update(e.__dict__)
+            c.args = e.args
+        except Exception:
+            return e
+    if c is e:
         return e
+    c.__cause__ = e.__cause__
+    c.__suppress_context__ = True  # the copy has no raise context of its own
+    return c.with_traceback(e.__traceback__)
+
+
+class Deferred:
+    """A batch_fn result slot whose finalisation (host decode) runs off the
+    batcher thread: `fn()` produces the request's final result (or returns/
+    raises an exception, which the submitter re-raises)."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: Callable[[], Any]):
+        self.fn = fn
 
 
 @dataclasses.dataclass
@@ -27,20 +75,29 @@ class Request:
     event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     result: Any = None
+    # submitter gave up (deadline expired): decode stages skip the work
+    abandoned: bool = False
 
 
 class MicroBatcher:
     def __init__(self, batch_fn: Callable[[list[Any]], list[Any]],
-                 max_batch: int, max_wait_s: float = 0.005):
+                 max_batch: int, max_wait_s: float = 0.005,
+                 decode_pool: Optional[Any] = None):
         self.batch_fn = batch_fn
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.decode_pool = decode_pool  # serve.decode.DecodePool (or None)
         self.q: queue.Queue[Request] = queue.Queue()
         self._stop = threading.Event()
         self.t = threading.Thread(target=self._loop, daemon=True)
         self.t.start()
         self.n_batches = 0
         self.n_requests = 0
+        self.n_deferred = 0  # result slots handed to the decode stage
+        # cumulative wall time the batcher thread spent inside batch_fn
+        # (group + dispatch; with a decode pool, decode is NOT in here) —
+        # the open-loop bench reads this to report dispatch-stage busyness
+        self.dispatch_s = 0.0
         # arrival-size histogram: batch size -> number of batches formed
         # (how much same-dispatch coalescing the traffic actually offers)
         self.batch_size_hist: dict[int, int] = {}
@@ -49,10 +106,28 @@ class MicroBatcher:
         r = Request(payload)
         self.q.put(r)
         if not r.event.wait(timeout):
-            raise TimeoutError("batcher timed out")
+            r.abandoned = True
+            raise BatchTimeout(
+                f"request did not resolve within {timeout:.3f}s"
+            )
         if isinstance(r.result, BaseException):
             raise r.result
         return r.result
+
+    def _resolve(self, r: Request, res: Any) -> None:
+        """Finalize one request: deferred slots go to the decode pool (or
+        run inline when none is attached), plain slots resolve now."""
+        if isinstance(res, Deferred):
+            self.n_deferred += 1
+            if self.decode_pool is not None:
+                self.decode_pool.submit(r, res.fn)
+                return
+            try:
+                res = res.fn()
+            except BaseException as e:
+                res = e
+        r.result = res
+        r.event.set()
 
     def _loop(self) -> None:
         while not self._stop.is_set():
@@ -70,20 +145,22 @@ class MicroBatcher:
                     batch.append(self.q.get(timeout=left))
                 except queue.Empty:
                     break
+            t0 = time.perf_counter()
             try:
                 results = self.batch_fn([r.payload for r in batch])
             except BaseException as e:  # keep the worker alive: fail the
-                # batch, not the server; per-request copies so concurrent
-                # re-raises in client threads don't race on __traceback__
-                results = [_safe_copy(e) for _ in batch]
+                # batch, not the server; independent per-request copies
+                # (original traceback attached) so concurrent re-raises in
+                # client threads never share one instance
+                results = [_exc_copy(e) for _ in batch]
+            self.dispatch_s += time.perf_counter() - t0
             self.n_batches += 1
             self.n_requests += len(batch)
             self.batch_size_hist[len(batch)] = (
                 self.batch_size_hist.get(len(batch), 0) + 1
             )
             for r, res in zip(batch, results):
-                r.result = res
-                r.event.set()
+                self._resolve(r, res)
 
     def close(self) -> None:
         self._stop.set()

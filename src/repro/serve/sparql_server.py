@@ -4,12 +4,23 @@ Requests (query strings) flow through the MicroBatcher; the engine executes
 each batch — partial matching per pattern, then the operator tree on
 device. Batching amortizes dispatch overhead exactly like the paper's
 CPU-assigns / GPU-computes split — and with `batch_execution` (default on)
-the batch is routed through `engine.run_batch`, which coalesces same-shape
-batchmates into single stacked (vmapped) device dispatches: N warm
-identical-shape requests cost ceil(N / width) launches, not N. Mixed
-batches fall back per plan group; `stats()["batched"]` reports the
-batch-width histogram and queries-per-dispatch so operators can watch the
-coalescing win.
+the batch is routed through `engine.run_batch_pipelined`, which coalesces
+same-shape batchmates into single stacked (vmapped) device dispatches: N
+warm identical-shape requests cost ceil(N / width) launches, not N — and
+cross-shape padded stacking merges near-miss plan shapes into those
+dispatches too. Mixed batches fall back per plan group; `stats()
+["batched"]` reports the batch-width histogram, queries-per-dispatch and
+the padding ledger so operators can watch the coalescing win.
+
+The hot path is a TWO-STAGE pipeline. The batcher thread only groups and
+dispatches: each request's host decode (device→host transfer + row
+materialisation) comes back as a PendingDecode and is handed to a bounded
+`DecodePool` (serve/decode.py), so dispatch of batch k+1 overlaps decode
+of batch k and per-request futures resolve from the decode side.
+`decode_workers=0` restores the synchronous batcher (decode inline on the
+batcher thread) — the bench's baseline. Per-request wall-clock deadlines
+(`query(text, timeout_ms=...)`) raise QueryTimeoutError and mark the
+request abandoned so the decode stage skips work nobody will read.
 
 Responses are typed: a successful request yields a `QueryResult` (which
 still compares/iterates like the plain row list for back-compat), a failed
@@ -38,8 +49,14 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 
-from repro.serve.batcher import MicroBatcher
-from repro.sparql.engine import PreparedQuery, QueryEngine, UpdateResult
+from repro.serve.batcher import BatchTimeout, Deferred, MicroBatcher
+from repro.serve.decode import DecodePool
+from repro.sparql.engine import (
+    PendingDecode,
+    PreparedQuery,
+    QueryEngine,
+    UpdateResult,
+)
 from repro.sparql.parser import ParseError
 
 
@@ -95,6 +112,16 @@ class ParseQueryError(QueryError, ParseError):
         QueryError.__init__(self, "parse", message, query)
 
 
+class QueryTimeoutError(QueryError, TimeoutError):
+    """The per-request wall-clock deadline expired before the result
+    resolved (kind="timeout"); also a TimeoutError. The batch the request
+    rode in keeps running and stays cached — only this caller gives up,
+    and the decode stage skips the abandoned slot."""
+
+    def __init__(self, message: str, query: str):
+        QueryError.__init__(self, "timeout", message, query)
+
+
 @dataclasses.dataclass
 class SPARQLServer:
     engine: QueryEngine
@@ -102,13 +129,24 @@ class SPARQLServer:
     max_wait_s: float = 0.002
     prepared_cache_entries: int = 256
     batch_execution: bool = True  # stack same-shape batchmates per dispatch
+    # decode pipeline: worker threads resolving PendingDecode slots off the
+    # batcher thread (0 = synchronous decode on the batcher thread)
+    decode_workers: int = 2
+    decode_queue: int = 64  # backpressure bound on undecoded results
+    default_timeout_s: float = 30.0  # per-request deadline when none given
 
     def __post_init__(self):
+        self._decode_pool = (
+            DecodePool(self.decode_workers, self.decode_queue)
+            if self.decode_workers > 0 else None
+        )
         self._batcher = MicroBatcher(self._run_batch, self.max_batch,
-                                     self.max_wait_s)
+                                     self.max_wait_s,
+                                     decode_pool=self._decode_pool)
         self._prepared: OrderedDict[str, PreparedQuery] = OrderedDict()
         self._prepared_hits = 0
         self._prepared_misses = 0
+        self._timeouts = 0  # per-request deadline expirations
         # update-endpoint counters (stats()["updates"])
         self._update_requests = 0
         self._rows_inserted = 0
@@ -127,13 +165,32 @@ class SPARQLServer:
             self._prepared.popitem(last=False)
         return pq, False
 
-    def _run_batch(self, queries: list[str]) -> list[QueryResult | QueryError]:
-        """Execute one micro-batch through engine.run_batch: same-shape
-        queries coalesce into stacked device dispatches, mixed batches fall
-        back per plan group, and every failure (parse, plan, execution)
-        stays isolated to its own slot — one bad query never fails its
-        batchmates or the worker thread."""
-        outs: list[QueryResult | QueryError | None] = [None] * len(queries)
+    def _deferred(self, pending: PendingDecode, text: str,
+                  cached: bool) -> Deferred:
+        """Wrap a dispatched-but-undecoded slot for the decode stage: the
+        callable resolves the decode and types the envelope; any decode
+        failure becomes a QueryError raised on the submitter's thread."""
+        def fn() -> QueryResult:
+            try:
+                rs = pending.resolve()
+            except Exception as e:
+                raise QueryError("decode", str(e), query=text) from e
+            return QueryResult(rows=rs.rows, vars=rs.vars, from_cache=cached)
+        return Deferred(fn)
+
+    def _run_batch(
+        self, queries: list[str]
+    ) -> "list[QueryResult | QueryError | Deferred]":
+        """The pipeline's DISPATCH stage, on the batcher thread: same-shape
+        (and padded near-miss-shape) queries coalesce into stacked device
+        dispatches via engine.run_batch_pipelined, and each successfully
+        dispatched slot returns as a Deferred whose decode runs on the
+        decode pool. Every failure (parse, plan, execution) stays isolated
+        to its own slot — one bad query never fails its batchmates or the
+        worker thread."""
+        outs: list[QueryResult | QueryError | Deferred | None] = (
+            [None] * len(queries)
+        )
         pending: list[tuple[int, "PreparedQuery", bool]] = []
         for i, text in enumerate(queries):
             try:
@@ -146,30 +203,49 @@ class SPARQLServer:
                 pending.append((i, pq, cached))
         if not pending:
             return outs
-        if self.batch_execution and len(pending) > 1:
-            outcomes = self.engine.run_batch_outcomes(
+        if self.batch_execution:
+            outcomes = self.engine.run_batch_pipelined(
                 [pq for _, pq, _ in pending]
             )
         else:
             outcomes = []
             for _, pq, _ in pending:
                 try:
-                    outcomes.append(pq.run())
+                    outcomes.append(pq._run_pending())
                 except Exception as e:
                     outcomes.append(e)
         for (i, pq, cached), oc in zip(pending, outcomes):
-            if isinstance(oc, Exception):
+            if isinstance(oc, PendingDecode):
+                outs[i] = self._deferred(oc, queries[i], cached)
+            elif isinstance(oc, Exception):
                 outs[i] = QueryError("execution", str(oc), query=queries[i])
             else:
+                # an inline-resolved ResultSet (e.g. a cold calibration run
+                # that decoded eagerly on a non-pipelined engine path)
                 outs[i] = QueryResult(
                     rows=oc.rows, vars=oc.vars, from_cache=cached
                 )
         return outs
 
-    def query(self, text: str) -> QueryResult:
+    def query(self, text: str,
+              timeout_ms: "float | None" = None) -> QueryResult:
         """Submit one query; raises QueryError (a ParseQueryError for parse
-        failures) on this thread if the request failed."""
-        return self._batcher.submit(text)
+        failures) on this thread if the request failed. `timeout_ms` caps
+        the request's wall-clock wait — dispatch queueing AND decode — and
+        raises QueryTimeoutError on expiry (the server keeps running the
+        batch; only this caller gives up)."""
+        timeout = (
+            timeout_ms / 1000.0 if timeout_ms is not None
+            else self.default_timeout_s
+        )
+        try:
+            return self._batcher.submit(text, timeout=timeout)
+        except BatchTimeout as e:
+            self._timeouts += 1
+            raise QueryTimeoutError(
+                f"query did not resolve within {timeout * 1000:.0f} ms",
+                query=text,
+            ) from e
 
     def update(self, text: str) -> UpdateResult:
         """Apply a SPARQL UPDATE request (`INSERT DATA` / `DELETE DATA`,
@@ -213,9 +289,11 @@ class SPARQLServer:
         # keys concurrently with a client thread reading stats
         width_hist = dict(eng.batch_width_hist)
         arrival_hist = dict(self._batcher.batch_size_hist)
+        pc, rc = eng.padded_cells, eng.real_cells
         return {
             "batches": self._batcher.n_batches,
             "requests": self._batcher.n_requests,
+            "timeouts": self._timeouts,
             "plan_cache": self.engine.cache_stats(),
             "scan_cache": self.engine.store.scan_cache_stats(),
             "store": self.engine.store.write_stats(),
@@ -231,15 +309,38 @@ class SPARQLServer:
                 "hit_rate": self._prepared_hits / total if total else 0.0,
             },
             # the coalescing win: how many device dispatches were stacked,
-            # how many queries each one carried, and at which lane widths
+            # how many queries each one carried, at which lane widths, and
+            # what cross-shape padding bought (merges taken/rejected and
+            # the padded-vs-real scan-cell waste ratio)
             "batched": {
                 "stacked_dispatches": sd,
                 "stacked_queries": sq,
                 "queries_per_dispatch": sq / sd if sd else 0.0,
                 "batch_width_hist": dict(sorted(width_hist.items())),
                 "arrival_batch_hist": dict(sorted(arrival_hist.items())),
+                "padding": {
+                    "padded_groups": eng.padded_groups,
+                    "pad_rejects": eng.pad_rejects,
+                    "padded_cells": pc,
+                    "real_cells": rc,
+                    "waste_ratio": (pc - rc) / rc if rc else 0.0,
+                },
+            },
+            # the two pipeline stages' health: slots handed to the decode
+            # side, batcher time spent in dispatch, device busy seconds
+            # (1 - Δdevice_time_s / wall is the bench's idle fraction)
+            "pipeline": {
+                "deferred": self._batcher.n_deferred,
+                "dispatch_s": self._batcher.dispatch_s,
+                "device_time_s": eng.device_time_s,
+                "decode": (
+                    self._decode_pool.stats()
+                    if self._decode_pool is not None else None
+                ),
             },
         }
 
     def close(self) -> None:
         self._batcher.close()
+        if self._decode_pool is not None:
+            self._decode_pool.close()

@@ -53,6 +53,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import threading
+import time
 from collections import OrderedDict
 
 import numpy as np
@@ -221,6 +223,11 @@ class BatchGroupStats:
     # pattern was identical — the same-query-different-FILTER win: those
     # buffers skip the W-copy stacking entirely
     n_broadcast_scans: int = 0
+    # cross-shape padding: this group coalesced `n_shapes` near-miss
+    # PlanShapes (same plan DAG, smaller pow-2 scan caps) into one stacked
+    # signature by padding every lane's scans up to the group's max caps
+    padded: bool = False
+    n_shapes: int = 1
 
 
 @dataclasses.dataclass
@@ -295,6 +302,69 @@ class ResultSet:
         return f"ResultSet(vars={self.vars}, n_rows={len(self.rows)})"
 
 
+class _SharedFetch:
+    """One device→host transfer shared by every lane of a stacked chunk.
+
+    The transfer is LAZY: the batcher thread hands lanes to the decode
+    pool holding only device references; whichever decode worker resolves
+    its lane first pays the (single) `np.asarray` sync, and the device
+    buffers are dropped immediately after so a slow decode queue never
+    pins a chunk's device memory longer than one transfer."""
+
+    __slots__ = ("_lock", "_rel", "cols", "valid")
+
+    def __init__(self, rel: Relation):
+        self._lock = threading.Lock()
+        self._rel: Relation | None = rel
+        self.cols: np.ndarray | None = None
+        self.valid: np.ndarray | None = None
+
+    def fetch(self) -> tuple[np.ndarray, np.ndarray]:
+        with self._lock:
+            if self._rel is not None:
+                self.cols = np.asarray(self._rel.cols)
+                self.valid = np.asarray(self._rel.valid)
+                self._rel = None
+        return self.cols, self.valid
+
+
+class PendingDecode:
+    """A dispatched query's undecoded result: result buffers (device-side
+    until the first consumer fetches) plus the lane metadata needed to
+    materialise rows.
+
+    This is the unit the serving pipeline passes from the dispatch stage
+    to the decode stage — `run_batch_pipelined` returns one per slot, and
+    `resolve()` (the transfer + row decode + per-handle accounting) runs
+    on a decode worker, overlapping the batcher thread's next dispatch.
+    `lane` selects this query's slice of a stacked chunk (None for a solo
+    run whose buffers are already 2-D)."""
+
+    __slots__ = ("engine", "pq", "vars", "names", "fetch", "lane", "stats")
+
+    def __init__(self, engine: "QueryEngine", pq: "PreparedQuery",
+                 vars: tuple[str, ...], names: tuple[str, ...],
+                 fetch: _SharedFetch, lane: "int | None", stats: ExecStats):
+        self.engine = engine
+        self.pq = pq
+        self.vars = vars
+        self.names = names
+        self.fetch = fetch
+        self.lane = lane
+        self.stats = stats
+
+    def resolve(self) -> ResultSet:
+        cols, valid = self.fetch.fetch()
+        if self.lane is not None:
+            cols, valid = cols[self.lane], valid[self.lane]
+        rows = self.engine._decode_numpy(self.names, cols[valid])
+        pq = self.pq
+        pq.stats.add(self.stats)
+        pq.last_stats = self.stats
+        pq.n_runs += 1
+        return ResultSet(self.vars, rows, self.stats)
+
+
 class PreparedQuery:
     """A parsed, validated and planned query, reusable across runs.
 
@@ -334,13 +404,19 @@ class PreparedQuery:
         return True
 
     def run(self) -> ResultSet:
+        return self._run_pending().resolve()
+
+    def _run_pending(self) -> PendingDecode:
+        """Dispatch the query, returning its result as a PendingDecode:
+        device work is enqueued, host decode is not yet paid. run() is
+        `_run_pending().resolve()`; the pipelined server resolves on a
+        decode worker instead."""
         stats = ExecStats()
         rel = self.engine._execute_program(self._program, stats)
-        rows = self.engine._decode_rows(rel)
-        self.stats.add(stats)
-        self.last_stats = stats
-        self.n_runs += 1
-        return ResultSet(self._program.projection, rows, stats)
+        return PendingDecode(
+            self.engine, self, self._program.projection, rel.schema,
+            _SharedFetch(rel), None, stats,
+        )
 
     def explain(self) -> str:
         return self.engine._explain_program(self, self._program)
@@ -373,6 +449,14 @@ class QueryEngine:
     join_backend: str | None = None
     warmup_path: str | None = None  # saved bucket signatures (save_cache)
     max_batch_width: int = 64  # lane cap per stacked run_batch dispatch
+    # cross-shape padded stacking: run_batch coalesces near-miss PlanShapes
+    # (identical but for pow-2 scan caps) into one stacked dispatch by
+    # padding scans up to the group's max caps — padding rows are
+    # valid=False, hence invisible to every masked operator. Merges are
+    # taken only when every member shape is already warm and the padding
+    # waste stays under pad_waste_limit (padded/real cell ratio - 1).
+    pad_stacking: bool = True
+    pad_waste_limit: float = 2.0
 
     def __post_init__(self):
         if self.join_backend not in (None, "mr", "matrix"):
@@ -433,6 +517,17 @@ class QueryEngine:
         self.stacked_dispatches = 0
         self.stacked_queries = 0
         self.last_batch: list[BatchGroupStats] = []
+        # cross-shape padding counters: merges taken / rejected by the
+        # cost guard, and the cell ledger behind the waste ratio
+        # (padded_cells ≥ real_cells; their gap is what padding burned)
+        self.padded_groups = 0
+        self.pad_rejects = 0
+        self.padded_cells = 0
+        self.real_cells = 0
+        # cumulative wall seconds the host spent inside device dispatch +
+        # result sync — the open-loop bench derives the device-idle
+        # fraction as 1 - Δdevice_time_s / wall
+        self.device_time_s = 0.0
 
     def save_cache(self, path: str) -> int:
         """Serialize the plan cache's learned bucket signatures to JSON.
@@ -553,13 +648,30 @@ class QueryEngine:
         """run_batch with per-query error isolation: each slot is either a
         ResultSet or the exception that query raised (the server's batch
         path relies on one bad query never failing its batchmates)."""
+        return self._run_batch_impl(prepared, defer=False)
+
+    def run_batch_pipelined(
+        self, prepared: list[PreparedQuery]
+    ) -> list["ResultSet | Exception | PendingDecode"]:
+        """The serving pipeline's dispatch stage: like run_batch_outcomes,
+        but slots whose device work dispatched cleanly come back as
+        PendingDecode — the host decode (device→host transfer + row
+        materialisation + per-handle accounting) has NOT been paid, and
+        `.resolve()` may run on any thread. The batcher thread returns as
+        soon as device work is enqueued, so dispatch of batch k+1 overlaps
+        decode of batch k on the decode pool."""
+        return self._run_batch_impl(prepared, defer=True)
+
+    def _run_batch_impl(
+        self, prepared: list[PreparedQuery], defer: bool
+    ) -> list:
         self.last_batch = []
-        out: list[ResultSet | Exception] = [None] * len(prepared)  # type: ignore[list-item]
+        out: list = [None] * len(prepared)
         if not self.compiled:
             group = BatchGroupStats(n_queries=len(prepared), fallback=True)
             self.last_batch.append(group)
             for i, pq in enumerate(prepared):
-                out[i] = self._run_single(pq, group)
+                out[i] = self._run_single(pq, group, defer)
             return out
         # group by compiled plan signature (the PlanShape cache key)
         ctxs: list[_BatchCtx | None] = [None] * len(prepared)
@@ -580,9 +692,120 @@ class QueryEngine:
                 out[i] = e
                 continue
             groups.setdefault(ctxs[i].shape, []).append(i)
-        for shape, idxs in groups.items():
-            self._run_group(shape, idxs, ctxs, prepared, out)
+        merged: OrderedDict[plan_ir.PlanShape, tuple[list[int], int, int]]
+        if self.pad_stacking and len(groups) > 1:
+            merged = self._coalesce_groups(groups)
+        else:
+            merged = OrderedDict(
+                (s, (idxs, 1, 0)) for s, idxs in groups.items()
+            )
+        for shape, (idxs, n_shapes, n_compiles) in merged.items():
+            self._run_group(
+                shape, idxs, ctxs, prepared, out, defer,
+                n_shapes=n_shapes, extra_compiles=n_compiles,
+            )
         return out
+
+    def _template_scans(
+        self, shape: plan_ir.PlanShape
+    ) -> tuple[Relation, ...]:
+        """Abstract (shape/dtype) scan templates for AOT-lowering a shape
+        without staging device data — the only template source that is
+        correct for PADDED shapes, whose scan caps exceed every member
+        query's natural staging capacities."""
+        sds = jax.ShapeDtypeStruct
+        return tuple(
+            Relation(
+                schema,
+                sds((cap, len(schema)), jnp.int32),
+                sds((cap,), jnp.bool_),
+            )
+            for schema, cap in zip(shape.scan_schemas, shape.scan_caps)
+        )
+
+    def _coalesce_groups(
+        self, groups: "OrderedDict[plan_ir.PlanShape, list[int]]"
+    ) -> "OrderedDict[plan_ir.PlanShape, tuple[list[int], int, int]]":
+        """Cross-shape padded stacking: merge near-miss plan groups —
+        identical PlanShapes except for pow-2 scan caps — into one padded
+        group at the per-position MAX caps, so a mixed-shape batch still
+        coalesces into few stacked dispatches. Padding rows carry
+        valid=False, which every masked operator already treats as
+        absent, so merged lanes decode exactly the rows their natural
+        shape would have produced.
+
+        Guards (a rejected bucket simply keeps its per-shape groups):
+          * every member shape must be WARM — a padded group has no
+            calibration story of its own, so the padded entry's join caps
+            are derived as the elementwise max of the members' calibrated
+            caps, which only exist once each member has run;
+          * the cost guard: padding waste (padded/real scan-cell ratio
+            minus 1) must stay ≤ pad_waste_limit, so one huge outlier
+            shape cannot inflate every lane's scan buffers;
+          * the padded entry must compile (template lowering) — any
+            failure falls back to per-shape groups rather than the
+            sequential path.
+        """
+        buckets: OrderedDict[tuple, list[plan_ir.PlanShape]] = OrderedDict()
+        for shape in groups:
+            key = dataclasses.replace(
+                shape, scan_caps=(0,) * len(shape.scan_caps)
+            )
+            buckets.setdefault(key, []).append(shape)
+        merged: OrderedDict[
+            plan_ir.PlanShape, tuple[list[int], int, int]
+        ] = OrderedDict()
+        for members in buckets.values():
+            if len(members) < 2:
+                s = members[0]
+                merged[s] = (groups[s], 1, 0)
+                continue
+            entries = [self.plan_cache.get(s) for s in members]
+            target = tuple(
+                max(s.scan_caps[j] for s in members)
+                for j in range(len(members[0].scan_caps))
+            )
+            n_q = sum(len(groups[s]) for s in members)
+            real = sum(
+                len(groups[s]) * sum(s.scan_caps) for s in members
+            )
+            padded = n_q * sum(target)
+            ok = all(e is not None for e in entries)
+            if ok and (padded - real) / real > self.pad_waste_limit:
+                self.pad_rejects += 1
+                ok = False
+            n_compiles = 0
+            padded_shape = None
+            if ok:
+                padded_shape = dataclasses.replace(
+                    members[0], scan_caps=target
+                )
+                if self.plan_cache.get(padded_shape) is None:
+                    join_caps = tuple(
+                        max(e.join_caps[j] for e in entries)
+                        for j in range(len(entries[0].join_caps))
+                    )
+                    sink = ExecStats()
+                    try:
+                        self._compile_entry(
+                            padded_shape, join_caps,
+                            self._template_scans(padded_shape), None, sink,
+                        )
+                    except Exception:
+                        ok = False
+                    n_compiles = sink.n_compiles
+            if not ok:
+                for s in members:
+                    merged[s] = (groups[s], 1, 0)
+                continue
+            idxs = sorted(
+                i for s in members for i in groups[s]
+            )  # arrival order across member groups
+            merged[padded_shape] = (idxs, len(members), n_compiles)
+            self.padded_groups += 1
+            self.padded_cells += padded
+            self.real_cells += real
+        return merged
 
     # -- batched execution internals ---------------------------------------
     def _batch_context(self, prog: _Program) -> "_BatchCtx":
@@ -594,17 +817,18 @@ class QueryEngine:
         )
 
     def _run_single(
-        self, pq: PreparedQuery, group: BatchGroupStats
-    ) -> "ResultSet | Exception":
+        self, pq: PreparedQuery, group: BatchGroupStats, defer: bool = False
+    ) -> "ResultSet | Exception | PendingDecode":
         """Sequential fallback inside run_batch: the normal per-query path,
-        with its dispatch/compile counts folded into the group's."""
+        with its dispatch/compile counts folded into the group's. With
+        `defer`, host decode is left pending for the decode stage."""
         try:
-            rs = pq.run()
+            pending = pq._run_pending()
         except Exception as e:
             return e
-        group.n_dispatches += rs.stats.n_dispatches
-        group.n_compiles += rs.stats.n_compiles
-        return rs
+        group.n_dispatches += pending.stats.n_dispatches
+        group.n_compiles += pending.stats.n_compiles
+        return pending if defer else pending.resolve()
 
     def _run_group(
         self,
@@ -613,15 +837,23 @@ class QueryEngine:
         ctxs: list["_BatchCtx | None"],
         prepared: list[PreparedQuery],
         out: list,
+        defer: bool = False,
+        n_shapes: int = 1,
+        extra_compiles: int = 0,
     ) -> None:
-        group = BatchGroupStats(n_queries=len(idxs))
+        group = BatchGroupStats(
+            n_queries=len(idxs),
+            padded=n_shapes > 1,
+            n_shapes=n_shapes,
+            n_compiles=extra_compiles,  # the padded entry's template compile
+        )
         self.last_batch.append(group)
         pos = 0
         if self.plan_cache.get(shape) is None:
             # cold shape: the first query runs the normal path (calibration
             # or warmup compile), populating the cache the rest stack on
             group.cold = True
-            out[idxs[0]] = self._run_single(prepared[idxs[0]], group)
+            out[idxs[0]] = self._run_single(prepared[idxs[0]], group, defer)
             pos = 1
         # chunk at the pow-2 floor of the lane cap: max_batch_width bounds
         # device memory per dispatch, so it must never round UP
@@ -631,11 +863,11 @@ class QueryEngine:
             pos += len(chunk)
             if len(chunk) < 2 or self.plan_cache.get(shape) is None:
                 for i in chunk:
-                    out[i] = self._run_single(prepared[i], group)
+                    out[i] = self._run_single(prepared[i], group, defer)
                 continue
             try:
                 self._run_chunk_stacked(
-                    shape, chunk, ctxs, prepared, out, group
+                    shape, chunk, ctxs, prepared, out, group, defer
                 )
             except Exception:
                 # stacked dispatch failed (e.g. bucket growth past
@@ -643,7 +875,7 @@ class QueryEngine:
                 # queries sequentially so only the culprit raises
                 group.fallback = True
                 for i in chunk:
-                    out[i] = self._run_single(prepared[i], group)
+                    out[i] = self._run_single(prepared[i], group, defer)
 
     def _run_chunk_stacked(
         self,
@@ -653,24 +885,34 @@ class QueryEngine:
         prepared: list[PreparedQuery],
         out: list,
         group: BatchGroupStats,
+        defer: bool = False,
     ) -> None:
-        """ONE stacked dispatch for a chunk of warm same-shape queries."""
+        """ONE stacked dispatch for a chunk of warm same-shape queries.
+
+        For a PADDED group (`shape` is the coalesced max-caps signature)
+        every lane's scans are padded up to `shape.scan_caps` — padding
+        rows are valid=False, so the lane computes exactly what its
+        natural shape would have."""
         entry = self.plan_cache.get(shape)
         n = len(chunk)
         width = plan_ir.bucket_width(n, self.max_batch_width)
         # pad trailing lanes with lane 0's inputs; lane_active masks them
         lanes = [ctxs[i] for i in chunk] + [ctxs[chunk[0]]] * (width - n)
         # per scan position: if every lane scans the SAME pattern (e.g. a
-        # batch differing only in FILTER constants), ship the device
-        # buffer once and let vmap broadcast it (in_axes=None) instead of
+        # batch differing only in FILTER constants) AND its staged buffer
+        # already sits at the group's capacity, ship the device buffer
+        # once and let vmap broadcast it (in_axes=None) instead of
         # staging W stacked copies
         scans_b: list[Relation] = []
         axes: list[int | None] = []
         with self.store.snapshot_lock():  # one store version per chunk
             for j in range(len(shape.scan_schemas)):
+                cap = shape.scan_caps[j]
                 tps = tuple(c.prog.patterns[j] for c in lanes)
+                rel = None
                 if len({self.store._scan_key(tp) for tp in tps}) == 1:
                     rel = self.store.match_pattern_device(tps[0])
+                if rel is not None and rel.capacity == cap:
                     scans_b.append(
                         Relation(shape.scan_schemas[j], rel.cols, rel.valid)
                     )
@@ -679,7 +921,7 @@ class QueryEngine:
                     scans_b.append(
                         Relation(
                             shape.scan_schemas[j],
-                            *self.store.stacked_scan_device(tps),
+                            *self.store.stacked_scan_device(tps, cap=cap),
                         )
                     )
                     axes.append(0)
@@ -700,10 +942,12 @@ class QueryEngine:
         self.plan_cache.hits += n
         if entry.num_cap not in (0, int(num_vals.shape[-1])):
             # dictionary growth crossed a pow-2 boundary since the entry
-            # compiled: recompile at the same join caps (shape unchanged)
-            template_scans, _, _ = self._canonicalize(lanes[0].prog)
+            # compiled: recompile at the same join caps (shape unchanged).
+            # Templates come from the SHAPE, not lane 0's natural staging
+            # — for a padded group those differ.
             entry = self._compile_entry(
-                shape, entry.join_caps, template_scans, None, stats
+                shape, entry.join_caps, self._template_scans(shape), None,
+                stats,
             )
         try:
             while True:
@@ -723,10 +967,12 @@ class QueryEngine:
                     stats.n_compiles += 1
                     self.plan_cache.compiles += 1
                 stats.n_dispatches += 1
+                t0 = time.perf_counter()
                 rel_b, totals_b, flags_b = bexec(
                     scans_b, consts_i, consts_f, num_vals, active
                 )
                 flags_np = np.asarray(flags_b)  # the single host sync
+                self.device_time_s += time.perf_counter() - t0
                 if not flags_np.any():
                     break
                 # some lane overflowed a bucket: grow each flagged join to
@@ -744,9 +990,9 @@ class QueryEngine:
                     raise MemoryError(
                         f"join result exceeds {self.max_capacity}"
                     )
-                template_scans, _, _ = self._canonicalize(lanes[0].prog)
                 entry = self._compile_entry(
-                    shape, new_caps, template_scans, None, stats
+                    shape, new_caps, self._template_scans(shape), None,
+                    stats,
                 )
         finally:
             # the group ledger counts every launch and compile, including
@@ -764,20 +1010,33 @@ class QueryEngine:
         caps = entry.compiled.plan.join_caps
         stats.peak_join_bucket = max(caps) if caps else 0
         stats.peak_capacity = entry.compiled.plan.max_capacity()
-        # unstack: one device->host transfer for the whole chunk, then
-        # per-lane decode under each query's own variable names
-        cols_np = np.asarray(rel_b.cols)
-        valid_np = np.asarray(rel_b.valid)
+        self._emit_chunk_results(
+            rel_b, chunk, ctxs, prepared, out, stats, defer
+        )
+
+    def _emit_chunk_results(
+        self,
+        rel_b: Relation,
+        chunk: list[int],
+        ctxs: list["_BatchCtx | None"],
+        prepared: list[PreparedQuery],
+        out: list,
+        stats: ExecStats,
+        defer: bool,
+    ) -> None:
+        """Unstack a chunk's result: ONE device→host transfer shared by
+        every lane (lazy — the first decode consumer pays it), then
+        per-lane row decode under each query's own variable names, either
+        inline or left pending for the serving decode pool."""
+        fetch = _SharedFetch(rel_b)
         schema = rel_b.schema
         for k, i in enumerate(chunk):
             names = tuple(ctxs[i].inverse[v] for v in schema)
-            rows = self._decode_numpy(names, cols_np[k][valid_np[k]])
-            q_stats = dataclasses.replace(stats)
-            pq = prepared[i]
-            pq.stats.add(q_stats)
-            pq.last_stats = q_stats
-            pq.n_runs += 1
-            out[i] = ResultSet(names, rows, q_stats)
+            pending = PendingDecode(
+                self, prepared[i], names, names, fetch, k,
+                dataclasses.replace(stats),
+            )
+            out[i] = pending if defer else pending.resolve()
 
     # -- planning ----------------------------------------------------------
     def _lower_expr(
@@ -1234,6 +1493,7 @@ class QueryEngine:
     ) -> Relation:
         while True:
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             rel, totals, flags = entry.compiled(
                 canon_scans, consts_i, consts_f, num_vals
             )
@@ -1245,6 +1505,7 @@ class QueryEngine:
                 stats.peak_join_bucket, max(caps) if caps else 0
             )
             flags_np = np.asarray(flags)  # the single host sync
+            self.device_time_s += time.perf_counter() - t0
             if not flags_np.any():
                 return rel
             # bucket overflow: grow from the exact totals, recompile, retry
@@ -1558,6 +1819,11 @@ class ShardedQueryEngine(QueryEngine):
                 "sharded execution is compiled-only (compiled=True)"
             )
         super().__post_init__()
+        # cross-shape padded stacking is single-device only: the sharded
+        # stacked path lowers through shard_map with concrete row-sharded
+        # scan buffers, which the padded entry's abstract-template compile
+        # cannot reproduce — near-miss shapes stay per-shape groups here
+        self.pad_stacking = False
         self._row_sharding = NamedSharding(self.mesh, P(self.axis_names))
         self._rep_sharding = NamedSharding(self.mesh, P())
         self.store.row_sharding = self._row_sharding
@@ -1740,6 +2006,7 @@ class ShardedQueryEngine(QueryEngine):
         while True:
             stats.n_dispatches += 1
             self._count_shuffles(entry, stats)
+            t0 = time.perf_counter()
             res = entry.compiled(canon_scans, consts_i, consts_f, num_vals)
             caps = entry.compiled.plan.join_caps
             stats.peak_capacity = max(
@@ -1751,6 +2018,7 @@ class ShardedQueryEngine(QueryEngine):
             # the single host sync: join AND shuffle flags, all shards
             flags_np = np.asarray(res.overflows)
             sh_flags_np = np.asarray(res.shuffle_flags)
+            self.device_time_s += time.perf_counter() - t0
             if not flags_np.any() and not sh_flags_np.any():
                 return res.relation
             # a bucket overflowed on some shard: grow the flagged ones
@@ -1798,13 +2066,16 @@ class ShardedQueryEngine(QueryEngine):
         prepared: list[PreparedQuery],
         out: list,
         group: BatchGroupStats,
+        defer: bool = False,
     ) -> None:
         """ONE stacked mesh dispatch (lanes x shards) for a chunk of warm
         same-shape queries — the distributed mirror of the base engine's
         stacked path: the per-shard program is vmapped over lanes inside
         shard_map, so a micro-batch's shuffles/joins for every lane ride
-        one launch. Grouping, chunking and the sequential-fallback safety
-        net are the inherited run_batch machinery."""
+        one launch. Grouping, chunking, deferred decode and the
+        sequential-fallback safety net are the inherited run_batch
+        machinery (cross-shape padding stays disabled here, so `shape` is
+        always every lane's natural signature)."""
         from repro.core import dist_executor as dx
 
         entry = self.plan_cache.get(shape)
@@ -1880,11 +2151,13 @@ class ShardedQueryEngine(QueryEngine):
                     self.plan_cache.compiles += 1
                 stats.n_dispatches += 1
                 self._count_shuffles(entry, stats)
+                t0 = time.perf_counter()
                 res = bexec(scans_b, consts_i, consts_f, num_vals, active)
                 # the single host sync: join AND shuffle flags, every
                 # (lane, shard) pair
                 flags_np = np.asarray(res.overflows)
                 sh_flags_np = np.asarray(res.shuffle_flags)
+                self.device_time_s += time.perf_counter() - t0
                 if not flags_np.any() and not sh_flags_np.any():
                     break
                 # a bucket overflowed in some lane on some shard: grow the
@@ -1926,19 +2199,9 @@ class ShardedQueryEngine(QueryEngine):
         caps = entry.compiled.plan.join_caps
         stats.peak_join_bucket = max(caps) if caps else 0
         stats.peak_capacity = entry.compiled.plan.max_capacity()
-        rel_b = res.relation
-        cols_np = np.asarray(rel_b.cols)
-        valid_np = np.asarray(rel_b.valid)
-        schema = rel_b.schema
-        for k, i in enumerate(chunk):
-            names = tuple(ctxs[i].inverse[v] for v in schema)
-            rows = self._decode_numpy(names, cols_np[k][valid_np[k]])
-            q_stats = dataclasses.replace(stats)
-            pq = prepared[i]
-            pq.stats.add(q_stats)
-            pq.last_stats = q_stats
-            pq.n_runs += 1
-            out[i] = ResultSet(names, rows, q_stats)
+        self._emit_chunk_results(
+            res.relation, chunk, ctxs, prepared, out, stats, defer
+        )
 
     # -- persistence -------------------------------------------------------
     def _entry_jsonable(self, e: PlanCacheEntry) -> dict:

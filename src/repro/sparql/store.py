@@ -909,24 +909,31 @@ class TripleStore:
         return entry
 
     def stacked_scan_device(
-        self, tps: "tuple[TriplePattern, ...]"
+        self, tps: "tuple[TriplePattern, ...]", cap: "int | None" = None
     ) -> tuple:
-        """One scan position of a stacked same-shape batch: the partial
-        matches of `tps` (one pattern per lane, trailing padding lanes
-        repeating lane 0) gathered into (width, capacity, n_cols) cols and
+        """One scan position of a stacked batch: the partial matches of
+        `tps` (one pattern per lane, trailing padding lanes repeating
+        lane 0) gathered into (width, capacity, n_cols) cols and
         (width, capacity) valid device arrays.
 
-        All lanes share one capacity bucket — queries in a plan group have
-        equal scan_caps by construction (capacity is part of the PlanShape
-        they group on). The gather is cached by the lane-key tuple, so a
-        warm repeated batch (the serving steady state) re-dispatches the
-        same stacked buffers without re-staging anything.
+        Within a same-shape plan group every lane stages at one capacity
+        bucket by construction (capacity is part of the PlanShape queries
+        group on). A cross-shape PADDED group passes `cap` — the group's
+        per-position max bucket — and each lane is padded up to it with
+        valid=False rows before stacking. The gather is cached by the
+        (capacity, lane keys) tuple, so a warm repeated batch (the
+        serving steady state) re-dispatches the same stacked buffers
+        without re-staging anything.
         """
-        key = ("stacked",) + tuple(self._scan_key(tp) for tp in tps)
+        from repro.core.relation import pad_to
+
+        key = ("stacked", cap) + tuple(self._scan_key(tp) for tp in tps)
         entry = self._vget(self._stacked_cache, key)
         if entry is None:
             self._stacked_misses += 1
             rels = [self.match_pattern_device(tp) for tp in tps]
+            if cap is not None:
+                rels = [pad_to(r, cap) for r in rels]
             entry = (
                 jnp.stack([r.cols for r in rels]),
                 jnp.stack([r.valid for r in rels]),

@@ -285,6 +285,23 @@ def _server(store, **kw):
     return SPARQLServer(QueryEngine(store), max_batch=8, **kw)
 
 
+def _dispatch(srv, texts):
+    """Call the server's dispatch stage directly and resolve its Deferred
+    slots inline (what the batcher/decode pool does between the stages),
+    so tests keep seeing the typed QueryResult/QueryError envelopes."""
+    from repro.serve.batcher import Deferred
+
+    outs = []
+    for o in srv._run_batch(texts):
+        if isinstance(o, Deferred):
+            try:
+                o = o.fn()
+            except Exception as e:  # decode errors travel as exceptions
+                o = e
+        outs.append(o)
+    return outs
+
+
 def test_server_batch_coalesces_and_isolates_errors():
     from repro.serve.sparql_server import ParseQueryError, QueryResult
 
@@ -292,8 +309,8 @@ def test_server_batch_coalesces_and_isolates_errors():
     srv = _server(store)
     try:
         texts = same_shape_queries(4)
-        srv._run_batch(texts)  # cold pass warms plan + stacked caches
-        outs = srv._run_batch([texts[0], "SELECT NONSENSE", *texts[1:]])
+        _dispatch(srv, texts)  # cold pass warms plan + stacked caches
+        outs = _dispatch(srv, [texts[0], "SELECT NONSENSE", *texts[1:]])
         assert isinstance(outs[1], ParseQueryError)
         good = [o for i, o in enumerate(outs) if i != 1]
         assert all(isinstance(o, QueryResult) for o in good)
@@ -310,8 +327,8 @@ def test_server_stats_report_batch_width_histogram():
     srv = _server(store)
     try:
         texts = same_shape_queries(8)
-        srv._run_batch(texts)
-        srv._run_batch(texts)
+        _dispatch(srv, texts)
+        _dispatch(srv, texts)
         s = srv.stats()["batched"]
         assert s["stacked_dispatches"] >= 2
         assert s["stacked_queries"] >= 15  # 7 stacked cold + 8 warm
@@ -360,8 +377,8 @@ def test_server_batch_execution_flag_off():
     srv = _server(store, batch_execution=False)
     try:
         texts = same_shape_queries(4)
-        srv._run_batch(texts)
-        srv._run_batch(texts)
+        _dispatch(srv, texts)
+        _dispatch(srv, texts)
         assert srv.engine.stacked_dispatches == 0
     finally:
         srv.close()
@@ -589,8 +606,8 @@ def test_server_mixed_batch_with_parse_error_matches_oracle():
     ]
     srv = _server(store)
     try:
-        srv._run_batch(texts)  # warm
-        outs = srv._run_batch(texts)
+        _dispatch(srv, texts)  # warm
+        outs = _dispatch(srv, texts)
         assert isinstance(outs[2], ParseQueryError)
         for i, text in enumerate(texts):
             if i == 2:

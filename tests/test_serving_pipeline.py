@@ -1,0 +1,424 @@
+"""The two-stage serving pipeline: dispatch/decode overlap (DecodePool,
+Deferred slots, PendingDecode), per-request exception copies with preserved
+tracebacks, per-query wall-clock deadlines, and cross-shape padded
+stacking — differential against sequential run() and the NumPy oracle,
+under real concurrent submission."""
+import threading
+import time
+
+from repro.serve.batcher import (
+    BatchTimeout,
+    Deferred,
+    MicroBatcher,
+    _exc_copy,
+)
+from repro.serve.decode import DecodePool
+from repro.sparql.baseline import reference_rows
+from repro.sparql.engine import PendingDecode, QueryEngine
+from repro.sparql.parser import parse
+from repro.sparql.store import store_from_string_triples
+
+
+def rows_as_sets(rows):
+    return sorted(tuple(sorted(r.items())) for r in rows)
+
+
+def pipeline_store():
+    """Entities wired for every algebra shape the differential test hits:
+    BGP chains, numeric FILTER, sparse OPTIONAL matches, UNION branches."""
+    triples = []
+    for i in range(10):
+        triples.append((f"<s{i}>", "<p0>", f"<m{i % 3}>"))
+        triples.append((f"<s{i}>", "<age>", str(18 + 2 * i)))
+        if i % 2:
+            triples.append((f"<s{i}>", "<p1>", f"<o{i}>"))
+    for j in range(3):
+        triples.append((f"<m{j}>", "<q>", f"<z{j}>"))
+        triples.append((f"<m{j}>", "<q>", f"<z{j + 3}>"))
+    return store_from_string_triples(triples)
+
+
+QUERIES = [
+    "SELECT ?x ?z WHERE { ?x <p0> ?y . ?y <q> ?z . }",
+    ("SELECT ?x ?a WHERE { ?x <p0> ?y . ?x <age> ?a . "
+     "FILTER (?a > 24) }"),
+    ("SELECT ?x ?y ?o WHERE { ?x <p0> ?y . "
+     "OPTIONAL { ?x <p1> ?o } }"),
+    ("SELECT ?x ?v WHERE { { ?x <p0> ?v } UNION "
+     "{ ?x <p1> ?v } }"),
+]
+
+
+def _server(store, **kw):
+    from repro.serve.sparql_server import SPARQLServer
+
+    kw.setdefault("max_batch", 8)
+    return SPARQLServer(QueryEngine(store), **kw)
+
+
+# --------------------------------------------------- decode pool unit
+
+
+def test_decode_pool_isolates_crashes_and_counts():
+    from repro.serve.batcher import Request
+
+    pool = DecodePool(n_workers=2, max_queue=8)
+    try:
+        ok = Request("a")
+        bad = Request("b")
+        pool.submit(ok, lambda: "fine")
+        pool.submit(bad, lambda: (_ for _ in ()).throw(RuntimeError("die")))
+        assert ok.event.wait(5) and bad.event.wait(5)
+        assert ok.result == "fine"
+        assert isinstance(bad.result, RuntimeError)
+        # the pool survived the crash and keeps decoding
+        again = Request("c")
+        pool.submit(again, lambda: 42)
+        assert again.event.wait(5) and again.result == 42
+        s = pool.stats()
+        assert s["decoded"] == 2 and s["errors"] == 1
+    finally:
+        pool.close()
+
+
+def test_decode_pool_skips_abandoned_requests():
+    from repro.serve.batcher import Request
+
+    pool = DecodePool(n_workers=1, max_queue=8)
+    try:
+        r = Request("x")
+        r.abandoned = True
+        ran = []
+        pool.submit(r, lambda: ran.append(1))
+        assert r.event.wait(5)
+        assert not ran and pool.stats()["skipped"] == 1
+    finally:
+        pool.close()
+
+
+# ------------------------------------------- batch-failure exception copy
+
+
+def test_batch_failure_gives_each_request_an_independent_copy():
+    """Regression (satellite): every request in a failed batch must get its
+    OWN exception object — concurrent re-raises on submitter threads race
+    on __traceback__ if one instance fans out — and the copy must carry
+    the original raise site's traceback."""
+
+    def boom(payloads):
+        raise ValueError("batch exploded")
+
+    b = MicroBatcher(boom, max_batch=4, max_wait_s=0.05)
+    try:
+        errs = []
+        lock = threading.Lock()
+
+        def hit():
+            try:
+                b.submit("q", timeout=10)
+            except ValueError as e:
+                with lock:
+                    errs.append(e)
+
+        ts = [threading.Thread(target=hit) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert len(errs) == 4
+        assert len({id(e) for e in errs}) == 4  # independent instances
+        for e in errs:
+            assert str(e) == "batch exploded"
+            tb = e.__traceback__
+            frames = []
+            while tb is not None:
+                frames.append(tb.tb_frame.f_code.co_name)
+                tb = tb.tb_next
+            assert "boom" in frames  # original raise site preserved
+    finally:
+        b.close()
+
+
+def test_exc_copy_falls_back_for_awkward_constructors():
+    class Picky(Exception):
+        def __init__(self, a, b):  # copy.copy's cls(*args) path TypeErrors
+            super().__init__(f"{a}/{b}")
+            self.a = a
+
+    try:
+        raise Picky(1, 2)
+    except Picky as e:
+        orig = e
+    c = _exc_copy(orig)
+    assert c is not orig
+    assert c.a == 1 and c.args == orig.args
+    assert c.__traceback__ is orig.__traceback__
+
+
+# ------------------------------------------------------- deadline path
+
+
+def test_query_timeout_raises_typed_error_and_counts():
+    from repro.serve.sparql_server import QueryTimeoutError
+
+    store = pipeline_store()
+    srv = _server(store)
+    try:
+        try:
+            srv.query(QUERIES[0], timeout_ms=0.0001)
+        except QueryTimeoutError as e:
+            assert e.kind == "timeout"
+            assert isinstance(e, TimeoutError)
+        else:  # pragma: no cover - absurdly fast machine
+            pass
+        # an expired request must not wedge later ones
+        assert len(srv.query(QUERIES[0])) > 0
+        assert srv.stats()["timeouts"] <= 1
+    finally:
+        srv.close()
+
+
+def test_batcher_timeout_marks_request_abandoned():
+    gate = threading.Event()
+
+    def slow(payloads):
+        gate.wait(5)
+        return [Deferred(lambda: "late") for _ in payloads]
+
+    b = MicroBatcher(slow, max_batch=2, max_wait_s=0.001)
+    try:
+        try:
+            b.submit("q", timeout=0.05)
+            raise AssertionError("expected BatchTimeout")
+        except BatchTimeout:
+            pass
+    finally:
+        gate.set()
+        b.close()
+
+
+# -------------------------------------------- pipelined differential
+
+
+def test_pipelined_results_match_sequential_and_oracle_concurrent():
+    """Acceptance: pipelined server results == sequential run() == NumPy
+    oracle across BGP/FILTER/OPTIONAL/UNION under concurrent submission,
+    with mid-batch parse errors isolated to their own callers."""
+    from repro.serve.sparql_server import ParseQueryError, QueryResult
+
+    store = pipeline_store()
+    eng_ref = QueryEngine(store)
+    want = {}
+    for t in QUERIES:
+        oracle = rows_as_sets(reference_rows(store, parse(t)))
+        seq = rows_as_sets(eng_ref.prepare(t).run().rows)
+        assert seq == oracle, t
+        want[t] = oracle
+    srv = _server(store, max_wait_s=0.02, decode_workers=2)
+    try:
+        n = 32
+        plan = [QUERIES[i % len(QUERIES)] for i in range(n)]
+        bad_at = {5, 17}
+        results: list = [None] * n
+        errors: list = [None] * n
+
+        def hit(i):
+            try:
+                text = "BROKEN {" if i in bad_at else plan[i]
+                results[i] = srv.query(text)
+            except Exception as e:
+                errors[i] = e
+
+        ts = [threading.Thread(target=hit, args=(i,)) for i in range(n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        for i in range(n):
+            if i in bad_at:
+                assert isinstance(errors[i], ParseQueryError), errors[i]
+            else:
+                assert isinstance(results[i], QueryResult), errors[i]
+                assert rows_as_sets(results[i].rows) == want[plan[i]]
+        st = srv.stats()
+        assert st["pipeline"]["deferred"] > 0
+        assert st["pipeline"]["decode"]["decoded"] > 0
+        assert st["pipeline"]["decode"]["errors"] == 0
+    finally:
+        srv.close()
+
+
+def test_decode_worker_crash_is_isolated_and_server_survives():
+    """A crash INSIDE a decode worker (decode stage, not dispatch) becomes
+    that one request's typed QueryError; batchmates and later requests are
+    unaffected."""
+    from repro.serve.sparql_server import QueryError, QueryResult
+
+    store = pipeline_store()
+    srv = _server(store, decode_workers=1)
+    try:
+        srv.query(QUERIES[0])  # warm
+        real = srv.engine._decode_numpy
+        crashed = []
+
+        def sabotage(schema, rows):
+            if not crashed:
+                crashed.append(1)
+                raise RuntimeError("decode worker crash")
+            return real(schema, rows)
+
+        srv.engine._decode_numpy = sabotage
+        try:
+            try:
+                srv.query(QUERIES[0])
+                raise AssertionError("expected QueryError")
+            except QueryError as e:
+                assert e.kind == "decode"
+        finally:
+            srv.engine._decode_numpy = real
+        out = srv.query(QUERIES[0])
+        assert isinstance(out, QueryResult) and len(out) > 0
+        assert srv.stats()["pipeline"]["decode"]["errors"] >= 1
+    finally:
+        srv.close()
+
+
+def test_synchronous_mode_still_works():
+    """decode_workers=0 restores the pre-pipeline synchronous batcher (the
+    bench baseline): same results, no pool."""
+    from repro.serve.sparql_server import QueryResult
+
+    store = pipeline_store()
+    srv = _server(store, decode_workers=0)
+    try:
+        out = srv.query(QUERIES[0])
+        assert isinstance(out, QueryResult)
+        assert rows_as_sets(out.rows) == rows_as_sets(
+            reference_rows(store, parse(QUERIES[0]))
+        )
+        assert srv.stats()["pipeline"]["decode"] is None
+    finally:
+        srv.close()
+
+
+# -------------------------------------------- cross-shape padded stacking
+
+
+def padding_store():
+    """Two predicates with very different cardinalities, so structurally
+    identical queries land in different pow-2 scan buckets (= near-miss
+    PlanShapes that only padding can merge)."""
+    triples = []
+    for i in range(12):
+        triples.append((f"<s{i}>", "<small>", f"<m{i % 3}>"))
+    for i in range(150):
+        triples.append((f"<a{i}>", "<big>", f"<m{i % 3}>"))
+    for j in range(3):
+        triples.append((f"<m{j}>", "<q>", f"<z{j}>"))
+    return store_from_string_triples(triples)
+
+
+PAD_QUERIES = [
+    "SELECT ?x ?z WHERE { ?x <small> ?y . ?y <q> ?z . }",
+    "SELECT ?x ?z WHERE { ?x <big> ?y . ?y <q> ?z . }",
+]
+
+
+def _warm(eng, texts, copies=4):
+    ps = [eng.prepare(t) for t in texts for _ in range(copies)]
+    for p in ps:
+        p.run()
+    return ps
+
+
+def test_padding_reduces_dispatches_without_changing_rows():
+    store = padding_store()
+    base = QueryEngine(store, pad_stacking=False)
+    ps0 = _warm(base, PAD_QUERIES)
+    d0 = base.stacked_dispatches
+    res0 = base.run_batch(ps0)
+    unpadded_dispatches = base.stacked_dispatches - d0
+
+    eng = QueryEngine(store)  # pad_stacking defaults ON
+    ps1 = _warm(eng, PAD_QUERIES)
+    d1 = eng.stacked_dispatches
+    res1 = eng.run_batch(ps1)
+    padded_dispatches = eng.stacked_dispatches - d1
+
+    # acceptance: strictly fewer stacked dispatches, identical rows
+    assert padded_dispatches < unpadded_dispatches
+    assert eng.padded_groups == 1
+    g = eng.last_batch[0]
+    assert g.padded and g.n_shapes == 2
+    for a, b in zip(res0, res1):
+        assert rows_as_sets(a.rows) == rows_as_sets(b.rows)
+
+
+def test_padding_cost_guard_falls_back_per_shape():
+    store = padding_store()
+    eng = QueryEngine(store, pad_waste_limit=0.0)  # any waste rejected
+    ps = _warm(eng, PAD_QUERIES)
+    d0 = eng.stacked_dispatches
+    eng.run_batch(ps)
+    assert eng.stacked_dispatches - d0 == 2  # one per shape, no merge
+    assert eng.padded_groups == 0
+    assert eng.pad_rejects == 1
+    assert all(not g.padded for g in eng.last_batch)
+
+
+def test_padding_requires_all_member_shapes_warm():
+    store = padding_store()
+    eng = QueryEngine(store)
+    cold = [eng.prepare(t) for t in PAD_QUERIES for _ in range(3)]
+    eng.run_batch(cold)  # nothing warm yet: groups must stay separate
+    assert eng.padded_groups == 0
+    # now both shapes are warm: the next mixed batch merges
+    eng.run_batch(cold)
+    assert eng.padded_groups == 1
+
+
+def test_padded_group_survives_store_updates():
+    """Padded signatures are shape-level: after an update within capacity
+    buckets, the padded entry keeps serving (no recompiles)."""
+    store = padding_store()
+    eng = QueryEngine(store)
+    ps = _warm(eng, PAD_QUERIES)
+    eng.run_batch(ps)
+    assert eng.padded_groups == 1
+    eng.update('INSERT DATA { <s0> <small> <m1> . }')
+    res = eng.run_batch(ps)
+    assert eng.padded_groups == 2
+    want = [rows_as_sets(reference_rows(store, parse(p.text))) for p in ps]
+    for r, w in zip(res, want):
+        assert rows_as_sets(r.rows) == w
+
+
+def test_pipelined_padding_through_server():
+    """End-to-end: a mixed-shape warm workload through the pipelined
+    server pads into fewer stacked dispatches and reports the ledger."""
+    store = padding_store()
+    srv = _server(store, max_wait_s=0.05)
+    try:
+        for t in PAD_QUERIES:  # warm both shapes (cold path, solo)
+            srv.query(t)
+            srv.query(t)
+        results: dict = {}
+
+        def hit(i):
+            t = PAD_QUERIES[i % 2]
+            results[i] = (t, srv.query(t))
+
+        ts = [threading.Thread(target=hit, args=(i,)) for i in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        for t, out in results.values():
+            assert rows_as_sets(out.rows) == rows_as_sets(
+                reference_rows(store, parse(t))
+            )
+        pad = srv.stats()["batched"]["padding"]
+        assert pad["pad_rejects"] == 0
+        assert pad["waste_ratio"] >= 0.0
+    finally:
+        srv.close()
