@@ -183,6 +183,27 @@ def strategy_counts(strategies) -> dict[str, int]:
     }
 
 
+def format_strategy(st: SiteStrategy) -> str:
+    """One shuffle site's data-movement decision as the explain() line."""
+    if st.op == "cross_join":
+        return "right side replicated (all_gather)"
+    if st.op == "distinct":
+        return (
+            "shuffle by all columns (emitted)"
+            if st.left == "shuffle"
+            else "co-located already (shuffle elided)"
+        )
+    sides = []
+    for name, action in (("left", st.left), ("right", st.right)):
+        if action == "local":
+            sides.append(f"{name} map-side (shuffle elided)")
+        elif action == "shuffle":
+            sides.append(f"{name} shuffle emitted")
+        elif action == "broadcast":
+            sides.append(f"{name} broadcast (all_gather)")
+    return ", ".join(sides) + f" on key ({', '.join(st.key)})"
+
+
 def analyze_plan(
     plan: PhysicalPlan,
     n_shards: int,

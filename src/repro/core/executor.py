@@ -166,6 +166,32 @@ def lower(
     return run
 
 
+def join_slot_nodes(plan: PhysicalPlan) -> list[PlanNode]:
+    """The join nodes of a plan in slot order — the order `lower` appends
+    their totals/overflow flags (post-order, shared DAG subtrees visited
+    once, in first-visit order). EXPLAIN ANALYZE uses this to label each
+    actuals slot with its physical operator; it MUST mirror `lower`'s
+    traversal exactly or actuals would land on the wrong node."""
+    slots: list[PlanNode] = []
+    seen: set[int] = set()
+
+    def walk(node: PlanNode) -> None:
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        for attr in ("left", "right", "child"):
+            kid = getattr(node, attr, None)
+            if kid is not None:
+                walk(kid)
+        for kid in getattr(node, "children", ()):
+            walk(kid)
+        if isinstance(node, (MRJoin, MatrixJoin, CrossJoin, LeftJoin)):
+            slots.append(node)
+
+    walk(plan.root)
+    return slots
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """An XLA executable specialised on one (shape, join-caps) point."""

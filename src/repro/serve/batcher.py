@@ -77,6 +77,10 @@ class Request:
     result: Any = None
     # submitter gave up (deadline expired): decode stages skip the work
     abandoned: bool = False
+    # per-request trace (obs.Trace) or None: the batcher and decode pool
+    # annotate failure paths on it (duck-typed — this module stays
+    # import-free of the obs package)
+    trace: Any = None
 
 
 class MicroBatcher:
@@ -102,8 +106,9 @@ class MicroBatcher:
         # (how much same-dispatch coalescing the traffic actually offers)
         self.batch_size_hist: dict[int, int] = {}
 
-    def submit(self, payload: Any, timeout: float = 30.0) -> Any:
-        r = Request(payload)
+    def submit(self, payload: Any, timeout: float = 30.0,
+               trace: Any = None) -> Any:
+        r = Request(payload, trace=trace)
         self.q.put(r)
         if not r.event.wait(timeout):
             r.abandoned = True
@@ -152,6 +157,15 @@ class MicroBatcher:
                 # batch, not the server; independent per-request copies
                 # (original traceback attached) so concurrent re-raises in
                 # client threads never share one instance
+                t1 = time.perf_counter()
+                for r in batch:
+                    if r.trace is not None:
+                        # retroactive (born-closed) span: a failed batch
+                        # leaks nothing even though batch_fn blew up
+                        r.trace.add_span(
+                            "batch_error", t0, t1,
+                            error=type(e).__name__,
+                        )
                 results = [_exc_copy(e) for _ in batch]
             self.dispatch_s += time.perf_counter() - t0
             self.n_batches += 1

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -79,8 +80,14 @@ class DecodePool:
             if item is None:  # close() sentinel
                 return
             r, fn = item
+            trace = getattr(r, "trace", None)
             if getattr(r, "abandoned", False):
                 self.n_skipped += 1
+                if trace is not None:
+                    # retroactive zero-length marker: the skip closes the
+                    # request's trace path without decoding anything
+                    t = time.perf_counter()
+                    trace.add_span("decode_skipped", t, t, abandoned=True)
                 r.event.set()
                 continue
             try:
@@ -89,6 +96,11 @@ class DecodePool:
             except BaseException as e:
                 r.result = e
                 self.n_errors += 1
+                if trace is not None:
+                    t = time.perf_counter()
+                    trace.add_span(
+                        "decode_error", t, t, error=type(e).__name__
+                    )
             r.event.set()
 
     def stats(self) -> dict:

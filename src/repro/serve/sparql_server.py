@@ -43,10 +43,21 @@ version, so warm plan shapes keep dispatching precompiled programs as long
 as writes stay within their capacity buckets. `stats()["store"]` and
 `stats()["updates"]` report store version, tail/tombstone sizes, and the
 server's cumulative write counters.
+
+Observability: when the engine carries a `Tracer`, every request gets a
+per-query trace — parse, optimize, compile, dispatch (fanned across
+stacked lanes), transfer and decode spans — finished (and ring-buffered)
+in `query()`'s finally, the ONLY closer, so no path leaks an open span.
+Request counters live on the engine's `MetricsRegistry`
+(`render_prometheus()` is a single scrape covering server + engine), and
+every request is counted under exactly ONE terminal outcome
+(ok/timeout/error) at this submitter site — a timed-out request whose
+decode later completes is a timeout, full stop, never also an "ok".
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 
 from repro.serve.batcher import BatchTimeout, Deferred, MicroBatcher
@@ -144,22 +155,90 @@ class SPARQLServer:
                                      self.max_wait_s,
                                      decode_pool=self._decode_pool)
         self._prepared: OrderedDict[str, PreparedQuery] = OrderedDict()
-        self._prepared_hits = 0
-        self._prepared_misses = 0
-        self._timeouts = 0  # per-request deadline expirations
-        # update-endpoint counters (stats()["updates"])
-        self._update_requests = 0
-        self._rows_inserted = 0
-        self._rows_deleted = 0
+        # request-path instruments live on the engine's registry so one
+        # render_prometheus() scrape covers both layers; stats() reads the
+        # instruments back (the registry is the source of truth)
+        m = self.engine.metrics
+        self._m_requests = m.counter(
+            "mapsq_requests_total",
+            "query requests by terminal outcome (counted exactly once, "
+            "at the submitting call site)",
+            labelnames=("outcome",),
+        )
+        for outcome in ("ok", "timeout", "error"):
+            self._m_requests.labels(outcome=outcome)  # render zeros
+        self._m_latency = m.histogram(
+            "mapsq_request_latency_seconds",
+            "end-to-end request latency: submit to resolve/timeout",
+        )
+        self._m_prepared_hits = m.counter(
+            "mapsq_prepared_cache_hits_total",
+            "server-side PreparedQuery handle cache hits",
+        )
+        self._m_prepared_misses = m.counter(
+            "mapsq_prepared_cache_misses_total",
+            "server-side PreparedQuery handle cache misses",
+        )
+        self._m_update_requests = m.counter(
+            "mapsq_update_requests_total", "SPARQL UPDATE requests applied"
+        )
+        self._m_rows_inserted = m.counter(
+            "mapsq_update_rows_inserted_total", "rows inserted via UPDATE"
+        )
+        self._m_rows_deleted = m.counter(
+            "mapsq_update_rows_deleted_total", "rows deleted via UPDATE"
+        )
+        # pipeline-stage counters kept as plain attributes on the batcher/
+        # decode-pool hot paths, mirrored into the registry at scrape time
+        m_batches = m.counter(
+            "mapsq_batches_total", "micro-batches dispatched"
+        )
+        m_deferred = m.counter(
+            "mapsq_deferred_total",
+            "result slots handed to the decode stage",
+        )
+        m_dispatch_s = m.counter(
+            "mapsq_dispatch_seconds_total",
+            "batcher-thread seconds inside batch_fn (group + dispatch)",
+        )
+        m_decoded = m.counter(
+            "mapsq_decode_decoded_total", "decode-pool slots finalised"
+        )
+        m_dec_errors = m.counter(
+            "mapsq_decode_errors_total",
+            "decode-pool slots whose fn raised",
+        )
+        m_dec_skipped = m.counter(
+            "mapsq_decode_skipped_total",
+            "abandoned slots dropped undecoded",
+        )
+        m_depth = m.gauge(
+            "mapsq_decode_queue_depth", "undecoded slots waiting"
+        )
 
-    def _prepared_handle(self, text: str) -> tuple[PreparedQuery, bool]:
+        def _collect() -> None:
+            m_batches.set_total(self._batcher.n_batches)
+            m_deferred.set_total(self._batcher.n_deferred)
+            m_dispatch_s.set_total(self._batcher.dispatch_s)
+            if self._decode_pool is not None:
+                ds = self._decode_pool.stats()
+                m_decoded.set_total(ds["decoded"])
+                m_dec_errors.set_total(ds["errors"])
+                m_dec_skipped.set_total(ds["skipped"])
+                m_depth.set(ds["depth"])
+
+        m.register_collector(_collect)
+
+    def _prepared_handle(
+        self, text: str, trace=None
+    ) -> tuple[PreparedQuery, bool]:
         pq = self._prepared.get(text)
         if pq is not None:
-            self._prepared_hits += 1
+            self._m_prepared_hits.inc()
             self._prepared.move_to_end(text)
             return pq, True
-        self._prepared_misses += 1
-        pq = self.engine.prepare(text)
+        self._m_prepared_misses.inc()
+        pq = self.engine.prepare(text, trace=trace)
         self._prepared[text] = pq
         while len(self._prepared) > self.prepared_cache_entries:
             self._prepared.popitem(last=False)
@@ -179,7 +258,7 @@ class SPARQLServer:
         return Deferred(fn)
 
     def _run_batch(
-        self, queries: list[str]
+        self, payloads: list
     ) -> "list[QueryResult | QueryError | Deferred]":
         """The pipeline's DISPATCH stage, on the batcher thread: same-shape
         (and padded near-miss-shape) queries coalesce into stacked device
@@ -187,14 +266,28 @@ class SPARQLServer:
         dispatched slot returns as a Deferred whose decode runs on the
         decode pool. Every failure (parse, plan, execution) stays isolated
         to its own slot — one bad query never fails its batchmates or the
-        worker thread."""
+        worker thread.
+
+        Payloads are query strings, or (text, trace) pairs when the
+        request carries a per-query trace — the trace rides through
+        prepare (parse/optimize spans), the stacked dispatch fan-out and
+        the PendingDecode (transfer/decode spans)."""
+        queries: list[str] = []
+        traces: list = []
+        for p in payloads:
+            if isinstance(p, tuple):
+                queries.append(p[0])
+                traces.append(p[1])
+            else:
+                queries.append(p)
+                traces.append(None)
         outs: list[QueryResult | QueryError | Deferred | None] = (
             [None] * len(queries)
         )
         pending: list[tuple[int, "PreparedQuery", bool]] = []
         for i, text in enumerate(queries):
             try:
-                pq, cached = self._prepared_handle(text)
+                pq, cached = self._prepared_handle(text, trace=traces[i])
             except ParseError as e:
                 outs[i] = ParseQueryError(str(e), query=text)
             except Exception as e:
@@ -205,13 +298,14 @@ class SPARQLServer:
             return outs
         if self.batch_execution:
             outcomes = self.engine.run_batch_pipelined(
-                [pq for _, pq, _ in pending]
+                [pq for _, pq, _ in pending],
+                traces=[traces[i] for i, _, _ in pending],
             )
         else:
             outcomes = []
-            for _, pq, _ in pending:
+            for i, pq, _ in pending:
                 try:
-                    outcomes.append(pq._run_pending())
+                    outcomes.append(pq._run_pending(traces[i]))
                 except Exception as e:
                     outcomes.append(e)
         for (i, pq, cached), oc in zip(pending, outcomes):
@@ -233,19 +327,43 @@ class SPARQLServer:
         failures) on this thread if the request failed. `timeout_ms` caps
         the request's wall-clock wait — dispatch queueing AND decode — and
         raises QueryTimeoutError on expiry (the server keeps running the
-        batch; only this caller gives up)."""
+        batch; only this caller gives up).
+
+        This is the request's ONE terminal-outcome accounting site: it
+        resolves to exactly one of ok/timeout/error here, regardless of
+        what the decode stage later does with an abandoned slot. The
+        per-request trace (when the engine has a Tracer) is also finished
+        here, in the finally — every span the pipeline recorded on it is
+        born closed, so the finished trace has zero open spans even on
+        the timeout and failure paths."""
         timeout = (
             timeout_ms / 1000.0 if timeout_ms is not None
             else self.default_timeout_s
         )
+        tracer = self.engine.tracer
+        trace = (
+            tracer.new_trace("query", query=text[:120])
+            if tracer is not None else None
+        )
+        payload = (text, trace) if trace is not None else text
+        t0 = time.perf_counter()
+        outcome = "error"
         try:
-            return self._batcher.submit(text, timeout=timeout)
+            res = self._batcher.submit(payload, timeout=timeout,
+                                       trace=trace)
+            outcome = "ok"
+            return res
         except BatchTimeout as e:
-            self._timeouts += 1
+            outcome = "timeout"
             raise QueryTimeoutError(
                 f"query did not resolve within {timeout * 1000:.0f} ms",
                 query=text,
             ) from e
+        finally:
+            self._m_requests.labels(outcome=outcome).inc()
+            self._m_latency.observe(time.perf_counter() - t0)
+            if trace is not None:
+                tracer.finish(trace, outcome=outcome)
 
     def update(self, text: str) -> UpdateResult:
         """Apply a SPARQL UPDATE request (`INSERT DATA` / `DELETE DATA`,
@@ -264,16 +382,19 @@ class SPARQLServer:
             raise
         except ParseError as e:
             raise ParseQueryError(str(e), query=text) from e
-        self._update_requests += 1
-        self._rows_inserted += res.inserted
-        self._rows_deleted += res.deleted
+        self._m_update_requests.inc()
+        self._m_rows_inserted.inc(res.inserted)
+        self._m_rows_deleted.inc(res.deleted)
         return res
 
-    def explain(self, text: str) -> str:
+    def explain(self, text: str, analyze: bool = False) -> str:
         """Host-side plan report (algebra, optimizer trace, physical plan,
-        cache state) for a query, through the prepared-handle cache."""
+        cache state) for a query, through the prepared-handle cache. With
+        `analyze=True`, appends the EXPLAIN ANALYZE section — estimated vs
+        actual rows per join node from the handle's last run (running the
+        query once if it never ran)."""
         pq, _ = self._prepared_handle(text)
-        return pq.explain()
+        return pq.explain(analyze=analyze)
 
     def save_cache(self, path: str) -> int:
         """Persist the engine's learned bucket signatures (see
@@ -281,8 +402,28 @@ class SPARQLServer:
         QueryEngine(warmup_path=...) skips calibration for these shapes."""
         return self.engine.save_cache(path)
 
+    def render_prometheus(self) -> str:
+        """One text-exposition scrape of the shared registry: request
+        outcomes/latency, prepared-cache and update counters (direct
+        instruments) plus the engine's pipeline/padding/cache/store
+        bridge collectors."""
+        return self.engine.metrics.render_prometheus()
+
+    def recent_traces(self) -> list:
+        """The tracer's bounded ring of finished per-query traces
+        (oldest first); empty when the engine has no Tracer."""
+        t = self.engine.tracer
+        return t.recent() if t is not None else []
+
+    def slow_queries(self) -> list:
+        """Finished traces that crossed the tracer's slow_ms threshold."""
+        t = self.engine.tracer
+        return t.slow_queries() if t is not None else []
+
     def stats(self) -> dict:
-        total = self._prepared_hits + self._prepared_misses
+        hits = int(self._m_prepared_hits.value)
+        misses = int(self._m_prepared_misses.value)
+        total = hits + misses
         eng = self.engine
         sd, sq = eng.stacked_dispatches, eng.stacked_queries
         # snapshot before sorting: the worker thread inserts new histogram
@@ -293,20 +434,22 @@ class SPARQLServer:
         return {
             "batches": self._batcher.n_batches,
             "requests": self._batcher.n_requests,
-            "timeouts": self._timeouts,
+            "timeouts": int(
+                self._m_requests.labels(outcome="timeout").value
+            ),
             "plan_cache": self.engine.cache_stats(),
             "scan_cache": self.engine.store.scan_cache_stats(),
             "store": self.engine.store.write_stats(),
             "updates": {
-                "requests": self._update_requests,
-                "rows_inserted": self._rows_inserted,
-                "rows_deleted": self._rows_deleted,
+                "requests": int(self._m_update_requests.value),
+                "rows_inserted": int(self._m_rows_inserted.value),
+                "rows_deleted": int(self._m_rows_deleted.value),
             },
             "prepared_cache": {
                 "entries": len(self._prepared),
-                "hits": self._prepared_hits,
-                "misses": self._prepared_misses,
-                "hit_rate": self._prepared_hits / total if total else 0.0,
+                "hits": hits,
+                "misses": misses,
+                "hit_rate": hits / total if total else 0.0,
             },
             # the coalescing win: how many device dispatches were stacked,
             # how many queries each one carried, at which lane widths, and

@@ -67,6 +67,7 @@ from repro.core import mr_join as mj
 from repro.core import plan_ir
 from repro.core.planner import TriplePattern
 from repro.core.relation import UNBOUND, Relation
+from repro.obs import MetricsRegistry, Tracer
 from repro.sparql import algebra, optimizer
 from repro.sparql.parser import Query, UpdateRequest, parse, parse_update
 from repro.sparql.store import TripleStore, _next_pow2
@@ -102,6 +103,24 @@ class ExecStats:
     n_shuffles_emitted: int = 0
     n_shuffles_elided: int = 0
     n_broadcast_joins: int = 0
+    # host wall seconds spent inside device dispatch + result sync for
+    # THIS run (the engine-level `device_time_s` is the sum of these)
+    device_time_s: float = 0.0
+    # rows this run's decode emitted (-1 = not yet decoded)
+    rows_emitted: int = -1
+    # EXPLAIN ANALYZE actuals, in join-slot (evaluation) order — the same
+    # order as plan.join_ests/join_caps. Captured from the exact totals
+    # that ride back with every dispatch:
+    #   join_totals    global matched rows per join slot
+    #   join_worst     worst single shard/lane per slot (fill pressure)
+    #   join_overflows overflow->regrow events per slot (summed)
+    #   join_caps      bucket capacity the final (successful) run used
+    #   shuffle_loads  worst per-shard shuffle rows per shuffle slot
+    join_totals: tuple[int, ...] = ()
+    join_worst: tuple[int, ...] = ()
+    join_overflows: tuple[int, ...] = ()
+    join_caps: tuple[int, ...] = ()
+    shuffle_loads: tuple[int, ...] = ()
 
     def add(self, other: "ExecStats") -> None:
         self.n_joins += other.n_joins
@@ -120,6 +139,25 @@ class ExecStats:
         self.n_shuffles_emitted += other.n_shuffles_emitted
         self.n_shuffles_elided += other.n_shuffles_elided
         self.n_broadcast_joins += other.n_broadcast_joins
+        self.device_time_s += other.device_time_s
+        if other.rows_emitted >= 0:
+            self.rows_emitted = other.rows_emitted
+        # actuals: last run wins (pq.stats accumulates across runs but
+        # the analyze view reports the most recent execution); overflow
+        # events accumulate
+        if other.join_totals:
+            self.join_totals = other.join_totals
+            self.join_worst = other.join_worst
+            self.join_caps = other.join_caps
+            self.shuffle_loads = other.shuffle_loads
+        if other.join_overflows:
+            mine = self.join_overflows
+            if len(mine) == len(other.join_overflows):
+                self.join_overflows = tuple(
+                    a + b for a, b in zip(mine, other.join_overflows)
+                )
+            else:
+                self.join_overflows = other.join_overflows
 
 
 @dataclasses.dataclass
@@ -311,21 +349,27 @@ class _SharedFetch:
     buffers are dropped immediately after so a slow decode queue never
     pins a chunk's device memory longer than one transfer."""
 
-    __slots__ = ("_lock", "_rel", "cols", "valid")
+    __slots__ = ("_lock", "_rel", "cols", "valid", "transfer_s")
 
     def __init__(self, rel: Relation):
         self._lock = threading.Lock()
         self._rel: Relation | None = rel
         self.cols: np.ndarray | None = None
         self.valid: np.ndarray | None = None
+        self.transfer_s = 0.0
 
-    def fetch(self) -> tuple[np.ndarray, np.ndarray]:
+    def fetch(self) -> tuple[np.ndarray, np.ndarray, bool]:
+        """Returns (cols, valid, paid): `paid` is True for the one caller
+        that performed the device->host sync, False for sharers."""
         with self._lock:
             if self._rel is not None:
+                t0 = time.perf_counter()
                 self.cols = np.asarray(self._rel.cols)
                 self.valid = np.asarray(self._rel.valid)
+                self.transfer_s = time.perf_counter() - t0
                 self._rel = None
-        return self.cols, self.valid
+                return self.cols, self.valid, True
+        return self.cols, self.valid, False
 
 
 class PendingDecode:
@@ -340,11 +384,13 @@ class PendingDecode:
     `lane` selects this query's slice of a stacked chunk (None for a solo
     run whose buffers are already 2-D)."""
 
-    __slots__ = ("engine", "pq", "vars", "names", "fetch", "lane", "stats")
+    __slots__ = ("engine", "pq", "vars", "names", "fetch", "lane", "stats",
+                 "trace")
 
     def __init__(self, engine: "QueryEngine", pq: "PreparedQuery",
                  vars: tuple[str, ...], names: tuple[str, ...],
-                 fetch: _SharedFetch, lane: "int | None", stats: ExecStats):
+                 fetch: _SharedFetch, lane: "int | None", stats: ExecStats,
+                 trace=None):
         self.engine = engine
         self.pq = pq
         self.vars = vars
@@ -352,12 +398,23 @@ class PendingDecode:
         self.fetch = fetch
         self.lane = lane
         self.stats = stats
+        self.trace = trace
 
     def resolve(self) -> ResultSet:
-        cols, valid = self.fetch.fetch()
+        t0 = time.perf_counter()
+        cols, valid, paid = self.fetch.fetch()
+        t1 = time.perf_counter()
         if self.lane is not None:
             cols, valid = cols[self.lane], valid[self.lane]
         rows = self.engine._decode_numpy(self.names, cols[valid])
+        t2 = time.perf_counter()
+        if self.trace is not None:
+            # the sharing lanes' "transfer" span is their wait on the
+            # paying lane's sync (usually ~0): attrs distinguish them
+            self.trace.add_span("transfer", t0, t1, paid=paid,
+                                transfer_s=round(self.fetch.transfer_s, 6))
+            self.trace.add_span("decode", t1, t2, rows=len(rows))
+        self.stats.rows_emitted = len(rows)
         pq = self.pq
         pq.stats.add(self.stats)
         pq.last_stats = self.stats
@@ -403,23 +460,30 @@ class PreparedQuery:
         self.planned_version = self.engine.store.version
         return True
 
-    def run(self) -> ResultSet:
-        return self._run_pending().resolve()
+    def run(self, trace=None) -> ResultSet:
+        return self._run_pending(trace).resolve()
 
-    def _run_pending(self) -> PendingDecode:
+    def _run_pending(self, trace=None) -> PendingDecode:
         """Dispatch the query, returning its result as a PendingDecode:
         device work is enqueued, host decode is not yet paid. run() is
         `_run_pending().resolve()`; the pipelined server resolves on a
         decode worker instead."""
         stats = ExecStats()
-        rel = self.engine._execute_program(self._program, stats)
+        rel = self.engine._execute_program(self._program, stats, trace)
         return PendingDecode(
             self.engine, self, self._program.projection, rel.schema,
-            _SharedFetch(rel), None, stats,
+            _SharedFetch(rel), None, stats, trace,
         )
 
-    def explain(self) -> str:
-        return self.engine._explain_program(self, self._program)
+    def explain(self, analyze: bool = False) -> str:
+        """The plan explanation; `analyze=True` appends per-join-node
+        actuals (estimated vs actual rows, bucket fill, overflows, the
+        chosen backend) from the most recent run — running the query once
+        first if this handle has never executed."""
+        if analyze and self.last_stats is None:
+            self.run()
+        return self.engine._explain_program(self, self._program,
+                                            analyze=analyze)
 
 
 @dataclasses.dataclass
@@ -457,6 +521,11 @@ class QueryEngine:
     # waste stays under pad_waste_limit (padded/real cell ratio - 1).
     pad_stacking: bool = True
     pad_waste_limit: float = 2.0
+    # per-query span tracing: None (default) = off, zero overhead beyond
+    # `trace is not None` checks on the dispatch path. The server shares
+    # this Tracer so its request spans and the engine's dispatch spans
+    # land in one trace tree.
+    tracer: Tracer | None = None
 
     def __post_init__(self):
         if self.join_backend not in (None, "mr", "matrix"):
@@ -528,6 +597,108 @@ class QueryEngine:
         # result sync — the open-loop bench derives the device-idle
         # fraction as 1 - Δdevice_time_s / wall
         self.device_time_s = 0.0
+        # correlates the N lane "dispatch" spans a stacked chunk fans out
+        self._dispatch_seq = 0
+        # the unified metrics registry: engine-side counters are bridged
+        # in by a scrape-time collector (the dispatch path pays nothing);
+        # the server registers its request metrics on this same registry
+        self.metrics = MetricsRegistry()
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Declare the engine's metrics and the collector that mirrors
+        the hot-path counters into them at scrape time (naming scheme:
+        mapsq_<subsystem>_<name>[_total|_seconds|_ratio])."""
+        m = self.metrics
+        g = {
+            "plan_hits": m.counter(
+                "mapsq_plan_cache_hits_total", "plan cache hits"),
+            "plan_misses": m.counter(
+                "mapsq_plan_cache_misses_total", "plan cache misses"),
+            "plan_compiles": m.counter(
+                "mapsq_plan_cache_compiles_total", "XLA compilations"),
+            "plan_entries": m.gauge(
+                "mapsq_plan_cache_entries", "live plan cache entries"),
+            "scan_hits": m.counter(
+                "mapsq_scan_cache_hits_total", "scan cache hits"),
+            "scan_misses": m.counter(
+                "mapsq_scan_cache_misses_total", "scan cache misses"),
+            "scan_evictions": m.counter(
+                "mapsq_scan_cache_evictions_total",
+                "scan cache entries dropped by writes"),
+            "stacked_dispatches": m.counter(
+                "mapsq_stacked_dispatches_total",
+                "vmapped multi-query device launches"),
+            "stacked_queries": m.counter(
+                "mapsq_stacked_queries_total",
+                "queries served by stacked launches"),
+            "padded_groups": m.counter(
+                "mapsq_padding_groups_total",
+                "cross-shape padded merges taken"),
+            "pad_rejects": m.counter(
+                "mapsq_padding_rejects_total",
+                "padded merges rejected by the waste guard"),
+            "padded_cells": m.counter(
+                "mapsq_padding_padded_cells_total",
+                "scan cells dispatched incl. padding"),
+            "real_cells": m.counter(
+                "mapsq_padding_real_cells_total",
+                "scan cells that were real data"),
+            "device_time": m.counter(
+                "mapsq_device_time_seconds_total",
+                "host wall seconds inside device dispatch + sync"),
+            "store_version": m.gauge(
+                "mapsq_store_version", "store write version"),
+            "store_tail": m.gauge(
+                "mapsq_store_tail_rows", "uncompacted delta rows"),
+            "store_tombstones": m.gauge(
+                "mapsq_store_tombstones", "live tombstone rows"),
+        }
+        g["traces"] = m.counter(
+            "mapsq_traces_total", "finished query traces")
+        g["slow"] = m.counter(
+            "mapsq_slow_queries_total",
+            "traces over the slow-query threshold")
+
+        def collect() -> None:
+            pc = self.plan_cache.stats()
+            g["plan_hits"].set_total(pc["hits"])
+            g["plan_misses"].set_total(pc["misses"])
+            g["plan_compiles"].set_total(pc["compiles"])
+            g["plan_entries"].set(pc["entries"])
+            sc = self.store.scan_cache_stats()
+            g["scan_hits"].set_total(sc.get("hits", 0))
+            g["scan_misses"].set_total(sc.get("misses", 0))
+            g["scan_evictions"].set_total(sc.get("evictions", 0))
+            g["stacked_dispatches"].set_total(self.stacked_dispatches)
+            g["stacked_queries"].set_total(self.stacked_queries)
+            g["padded_groups"].set_total(self.padded_groups)
+            g["pad_rejects"].set_total(self.pad_rejects)
+            g["padded_cells"].set_total(self.padded_cells)
+            g["real_cells"].set_total(self.real_cells)
+            g["device_time"].set_total(self.device_time_s)
+            ws = self.store.write_stats()
+            g["store_version"].set(ws["version"])
+            g["store_tail"].set(ws["tail_rows"])
+            g["store_tombstones"].set(ws["tombstones"])
+            if self.tracer is not None:
+                g["traces"].set_total(self.tracer.n_traces)
+                g["slow"].set_total(self.tracer.n_slow)
+
+        m.register_collector(collect)
+
+    def _device_tick(self, stats: ExecStats, t0: float) -> float:
+        """Account one dispatch-and-sync interval on BOTH ledgers (the
+        engine-wide total and this run's ExecStats) so the engine total
+        always equals the sum over runs. Returns the end stamp."""
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        self.device_time_s += dt
+        stats.device_time_s += dt
+        return t1
+
+    def render_prometheus(self) -> str:
+        return self.metrics.render_prometheus()
 
     def save_cache(self, path: str) -> int:
         """Serialize the plan cache's learned bucket signatures to JSON.
@@ -569,9 +740,14 @@ class QueryEngine:
         }
 
     # -- public API --------------------------------------------------------
-    def prepare(self, text: str) -> PreparedQuery:
+    def prepare(self, text: str, trace=None) -> PreparedQuery:
         """Parse, validate and plan once; run (and re-run) later."""
-        return PreparedQuery(self, text, parse(text))
+        if trace is None:
+            return PreparedQuery(self, text, parse(text))
+        with trace.span("parse"):
+            q = parse(text)
+        with trace.span("optimize"):
+            return PreparedQuery(self, text, q)
 
     def query(self, text: str) -> list[dict[str, str]]:
         """One-shot convenience: rows as {var: term} dicts."""
@@ -584,8 +760,8 @@ class QueryEngine:
         rel = self._execute_program(self._build_program(q), stats)
         return rel, stats
 
-    def explain(self, text: str) -> str:
-        return self.prepare(text).explain()
+    def explain(self, text: str, analyze: bool = False) -> str:
+        return self.prepare(text).explain(analyze=analyze)
 
     def update(self, text: str) -> UpdateResult:
         """Parse and apply `INSERT DATA { ... }` / `DELETE DATA { ... }`
@@ -651,7 +827,7 @@ class QueryEngine:
         return self._run_batch_impl(prepared, defer=False)
 
     def run_batch_pipelined(
-        self, prepared: list[PreparedQuery]
+        self, prepared: list[PreparedQuery], traces: "list | None" = None
     ) -> list["ResultSet | Exception | PendingDecode"]:
         """The serving pipeline's dispatch stage: like run_batch_outcomes,
         but slots whose device work dispatched cleanly come back as
@@ -660,18 +836,21 @@ class QueryEngine:
         `.resolve()` may run on any thread. The batcher thread returns as
         soon as device work is enqueued, so dispatch of batch k+1 overlaps
         decode of batch k on the decode pool."""
-        return self._run_batch_impl(prepared, defer=True)
+        return self._run_batch_impl(prepared, defer=True, traces=traces)
 
     def _run_batch_impl(
-        self, prepared: list[PreparedQuery], defer: bool
+        self, prepared: list[PreparedQuery], defer: bool,
+        traces: "list | None" = None,
     ) -> list:
         self.last_batch = []
         out: list = [None] * len(prepared)
+        if traces is None:
+            traces = [None] * len(prepared)
         if not self.compiled:
             group = BatchGroupStats(n_queries=len(prepared), fallback=True)
             self.last_batch.append(group)
             for i, pq in enumerate(prepared):
-                out[i] = self._run_single(pq, group, defer)
+                out[i] = self._run_single(pq, group, defer, traces[i])
             return out
         # group by compiled plan signature (the PlanShape cache key)
         ctxs: list[_BatchCtx | None] = [None] * len(prepared)
@@ -703,6 +882,7 @@ class QueryEngine:
             self._run_group(
                 shape, idxs, ctxs, prepared, out, defer,
                 n_shapes=n_shapes, extra_compiles=n_compiles,
+                traces=traces,
             )
         return out
 
@@ -817,13 +997,14 @@ class QueryEngine:
         )
 
     def _run_single(
-        self, pq: PreparedQuery, group: BatchGroupStats, defer: bool = False
+        self, pq: PreparedQuery, group: BatchGroupStats, defer: bool = False,
+        trace=None,
     ) -> "ResultSet | Exception | PendingDecode":
         """Sequential fallback inside run_batch: the normal per-query path,
         with its dispatch/compile counts folded into the group's. With
         `defer`, host decode is left pending for the decode stage."""
         try:
-            pending = pq._run_pending()
+            pending = pq._run_pending(trace)
         except Exception as e:
             return e
         group.n_dispatches += pending.stats.n_dispatches
@@ -840,7 +1021,10 @@ class QueryEngine:
         defer: bool = False,
         n_shapes: int = 1,
         extra_compiles: int = 0,
+        traces: "list | None" = None,
     ) -> None:
+        if traces is None:
+            traces = [None] * len(out)
         group = BatchGroupStats(
             n_queries=len(idxs),
             padded=n_shapes > 1,
@@ -853,7 +1037,9 @@ class QueryEngine:
             # cold shape: the first query runs the normal path (calibration
             # or warmup compile), populating the cache the rest stack on
             group.cold = True
-            out[idxs[0]] = self._run_single(prepared[idxs[0]], group, defer)
+            out[idxs[0]] = self._run_single(
+                prepared[idxs[0]], group, defer, traces[idxs[0]]
+            )
             pos = 1
         # chunk at the pow-2 floor of the lane cap: max_batch_width bounds
         # device memory per dispatch, so it must never round UP
@@ -867,7 +1053,7 @@ class QueryEngine:
                 continue
             try:
                 self._run_chunk_stacked(
-                    shape, chunk, ctxs, prepared, out, group, defer
+                    shape, chunk, ctxs, prepared, out, group, defer, traces
                 )
             except Exception:
                 # stacked dispatch failed (e.g. bucket growth past
@@ -875,7 +1061,9 @@ class QueryEngine:
                 # queries sequentially so only the culprit raises
                 group.fallback = True
                 for i in chunk:
-                    out[i] = self._run_single(prepared[i], group, defer)
+                    out[i] = self._run_single(
+                        prepared[i], group, defer, traces[i]
+                    )
 
     def _run_chunk_stacked(
         self,
@@ -886,6 +1074,7 @@ class QueryEngine:
         out: list,
         group: BatchGroupStats,
         defer: bool = False,
+        traces: "list | None" = None,
     ) -> None:
         """ONE stacked dispatch for a chunk of warm same-shape queries.
 
@@ -949,10 +1138,16 @@ class QueryEngine:
                 shape, entry.join_caps, self._template_scans(shape), None,
                 stats,
             )
+        # retroactive span intervals, fanned out to every lane trace after
+        # the chunk succeeds (one device launch -> N lane "dispatch" spans
+        # correlated by a shared dispatch_id)
+        events: list[tuple[str, float, float]] = []
+        ovf_counts = [0] * shape.n_joins()
         try:
             while True:
                 bexec = entry.batched.get((width, scan_axes))
                 if bexec is None:
+                    tc0 = time.perf_counter()
                     bexec = ex.compile_plan_batched(
                         entry.compiled.plan,
                         scans_b,
@@ -963,6 +1158,7 @@ class QueryEngine:
                         use_kernel=self.use_kernel,
                         scan_axes=scan_axes,
                     )
+                    events.append(("compile", tc0, time.perf_counter()))
                     entry.batched[(width, scan_axes)] = bexec
                     stats.n_compiles += 1
                     self.plan_cache.compiles += 1
@@ -972,19 +1168,24 @@ class QueryEngine:
                     scans_b, consts_i, consts_f, num_vals, active
                 )
                 flags_np = np.asarray(flags_b)  # the single host sync
-                self.device_time_s += time.perf_counter() - t0
+                events.append(("dispatch", t0, self._device_tick(stats, t0)))
                 if not flags_np.any():
                     break
                 # some lane overflowed a bucket: grow each flagged join to
                 # the worst lane's exact total, recompile, retry the chunk
                 stats.n_retries += 1
                 totals_np = np.asarray(totals_b)
+                overflowed = [
+                    bool(flags_np[:, j].any())
+                    for j in range(flags_np.shape[1])
+                ]
+                for j, f in enumerate(overflowed):
+                    ovf_counts[j] += int(f)
                 new_caps = plan_ir.grow_join_caps(
                     entry.join_caps,
                     [int(totals_np[:, j].max())
                      for j in range(totals_np.shape[1])],
-                    [bool(flags_np[:, j].any())
-                     for j in range(flags_np.shape[1])],
+                    overflowed,
                 )
                 if max(new_caps) > self.max_capacity:
                     raise MemoryError(
@@ -1010,9 +1211,22 @@ class QueryEngine:
         caps = entry.compiled.plan.join_caps
         stats.peak_join_bucket = max(caps) if caps else 0
         stats.peak_capacity = entry.compiled.plan.max_capacity()
+        stats.join_caps = tuple(caps)
+        stats.join_overflows = tuple(ovf_counts)
+        # per-lane exact totals (width, n_joins): each lane's analyze view
+        # reports ITS actual rows, not the chunk's
+        lane_totals = self._chunk_lane_totals(totals_b)
         self._emit_chunk_results(
-            rel_b, chunk, ctxs, prepared, out, stats, defer
+            rel_b, chunk, ctxs, prepared, out, stats, defer,
+            lane_totals=lane_totals, traces=traces, events=events,
         )
+
+    def _chunk_lane_totals(self, totals_b) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked totals -> per-lane (global, worst-partition) actuals,
+        each (width, n_joins). On the single-device engine they coincide;
+        the sharded override sums/maxes away its shard axis."""
+        t = np.asarray(totals_b)
+        return t, t
 
     def _emit_chunk_results(
         self,
@@ -1023,6 +1237,9 @@ class QueryEngine:
         out: list,
         stats: ExecStats,
         defer: bool,
+        lane_totals: "tuple | None" = None,
+        traces: "list | None" = None,
+        events: "list | None" = None,
     ) -> None:
         """Unstack a chunk's result: ONE device→host transfer shared by
         every lane (lazy — the first decode consumer pays it), then
@@ -1030,11 +1247,29 @@ class QueryEngine:
         inline or left pending for the serving decode pool."""
         fetch = _SharedFetch(rel_b)
         schema = rel_b.schema
+        if events:
+            self._dispatch_seq += 1
         for k, i in enumerate(chunk):
             names = tuple(ctxs[i].inverse[v] for v in schema)
+            st = dataclasses.replace(stats)
+            if lane_totals is not None:
+                totals, worst = lane_totals
+                st.join_totals = tuple(int(x) for x in totals[k])
+                st.join_worst = tuple(int(x) for x in worst[k])
+                # the chunk's dispatch wall is shared: attribute an equal
+                # share to each lane so the engine-level device_time_s
+                # stays equal to the sum over per-run ExecStats
+                st.device_time_s = stats.device_time_s / len(chunk)
+            trace = traces[i] if traces is not None else None
+            if trace is not None and events:
+                for name, t0, t1 in events:
+                    trace.add_span(
+                        name, t0, t1,
+                        dispatch_id=self._dispatch_seq,
+                        width=stats.batch_width, stacked=True, lane=k,
+                    )
             pending = PendingDecode(
-                self, prepared[i], names, names, fetch, k,
-                dataclasses.replace(stats),
+                self, prepared[i], names, names, fetch, k, st, trace,
             )
             out[i] = pending if defer else pending.resolve()
 
@@ -1170,9 +1405,11 @@ class QueryEngine:
         return ()
 
     # -- execution ---------------------------------------------------------
-    def _execute_program(self, prog: _Program, stats: ExecStats) -> Relation:
+    def _execute_program(
+        self, prog: _Program, stats: ExecStats, trace=None
+    ) -> Relation:
         if self.compiled:
-            return self._execute_compiled(prog, stats)
+            return self._execute_compiled(prog, stats, trace)
         with self.store.snapshot_lock():  # consistent version across scans
             scans = tuple(
                 self.store.match_pattern(tp) for tp in prog.patterns
@@ -1183,7 +1420,12 @@ class QueryEngine:
             tuple(s.schema for s in scans),
             tuple(s.capacity for s in scans),
         )
-        rel, _ = self._eval_shape_eager(shape, scans, prog, stats)
+        t0 = time.perf_counter()
+        rel, totals = self._eval_shape_eager(shape, scans, prog, stats)
+        stats.join_totals = tuple(totals)
+        stats.join_worst = stats.join_totals
+        if trace is not None:
+            trace.add_span("dispatch", t0, time.perf_counter(), eager=True)
         return rel
 
     def _decode_rows(self, rel: Relation) -> list[dict[str, str]]:
@@ -1264,14 +1506,19 @@ class QueryEngine:
             grp = chain(g.n_scans, g.cross_flags)
             stats.n_joins += 1
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             total = int(self._jit_count(acc, grp))
+            self._device_tick(stats, t0)
             stats.n_count_passes += 1
             cap = max(1, _next_pow2(total))
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             out, _, overflow = self._jit_left_join(
                 acc, grp, capacity=cap, use_kernel=self.use_kernel
             )
-            assert not bool(overflow)
+            ok = not bool(overflow)
+            self._device_tick(stats, t0)
+            assert ok
             stats.peak_capacity = max(
                 stats.peak_capacity, cap + acc.capacity
             )
@@ -1309,37 +1556,51 @@ class QueryEngine:
     def _join_once(
         self, left: Relation, right: Relation, is_cross: bool, stats: ExecStats
     ) -> tuple[Relation, int]:
+        # every branch ends in a host sync (int()/bool() of a device
+        # scalar), so the _device_tick interval covers dispatch + sync —
+        # the same accounting the compiled paths use
         stats.n_joins += 1
         if is_cross:
             cap = max(1, _next_pow2(left.capacity * right.capacity))
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             out, total, overflow = self._jit_cross(left, right, capacity=cap)
-            assert not bool(overflow)
+            ok, total = not bool(overflow), int(total)
+            self._device_tick(stats, t0)
+            assert ok
             stats.peak_capacity = max(stats.peak_capacity, cap)
             stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
-            return mj.compact(out), int(total)
+            return mj.compact(out), total
         if self.exact_count_pass:
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             total = int(self._jit_count(left, right))
+            self._device_tick(stats, t0)
             stats.n_count_passes += 1
             cap = max(1, _next_pow2(total))
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             out, _, overflow = self._jit_join(
                 left, right, capacity=cap, use_kernel=self.use_kernel
             )
-            assert not bool(overflow)
+            ok = not bool(overflow)
+            self._device_tick(stats, t0)
+            assert ok
             stats.peak_capacity = max(stats.peak_capacity, cap)
             stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
             return out, total
         cap = max(left.capacity, right.capacity)
         while True:
             stats.n_dispatches += 1
+            t0 = time.perf_counter()
             out, total, overflow = self._jit_join(
                 left, right, capacity=cap, use_kernel=self.use_kernel
             )
+            overflowed = bool(overflow)
+            self._device_tick(stats, t0)
             stats.peak_capacity = max(stats.peak_capacity, cap)
             stats.peak_join_bucket = max(stats.peak_join_bucket, cap)
-            if not bool(overflow):
+            if not overflowed:
                 return out, int(total)
             stats.n_retries += 1
             cap *= 2
@@ -1397,7 +1658,9 @@ class QueryEngine:
         (the sharded engine overrides this to size PER-SHARD buckets)."""
         return tuple(plan_ir.bucket_capacity(t) for t in totals)
 
-    def _execute_compiled(self, prog: _Program, stats: ExecStats) -> Relation:
+    def _execute_compiled(
+        self, prog: _Program, stats: ExecStats, trace=None
+    ) -> Relation:
         with self.store.snapshot_lock():
             canon_scans, shape, inverse = self._canonicalize(prog)
             stats.store_version = self.store.version
@@ -1413,13 +1676,17 @@ class QueryEngine:
             # compiled (the numeric table is an input shape the executable
             # is specialised on): recompile at the same join caps
             entry = self._compile_entry(
-                shape, entry.join_caps, canon_scans, prog, stats
+                shape, entry.join_caps, canon_scans, prog, stats,
+                trace=trace,
             )
         if entry is None:
-            rel = self._compiled_cold(shape, canon_scans, prog, stats)
+            rel = self._compiled_cold(
+                shape, canon_scans, prog, stats, trace
+            )
         else:
             rel = self._compiled_warm(
-                shape, entry, canon_scans, consts_i, consts_f, num_vals, stats
+                shape, entry, canon_scans, consts_i, consts_f, num_vals,
+                stats, trace,
             )
         # back to the query's own variable names
         return Relation(
@@ -1432,6 +1699,7 @@ class QueryEngine:
         canon_scans: tuple[Relation, ...],
         prog: _Program,
         stats: ExecStats,
+        trace=None,
     ) -> Relation:
         """Cache miss: the eager evaluator's count passes calibrate the join
         buckets; compile at those shapes; serve this query from the eager
@@ -1443,18 +1711,25 @@ class QueryEngine:
         warm_caps = self._warm_caps.get(shape)
         if warm_caps is not None and len(warm_caps) == shape.n_joins():
             entry = self._compile_entry(
-                shape, warm_caps, canon_scans, prog, stats
+                shape, warm_caps, canon_scans, prog, stats, trace=trace
             )
             return self._dispatch_entry(
-                shape, entry, canon_scans, *self._device_consts(prog), stats
+                shape, entry, canon_scans, *self._device_consts(prog),
+                stats, trace,
             )
         eager_stats = ExecStats()
+        t0 = time.perf_counter()
         rel, totals = self._eval_shape_eager(
             shape, canon_scans, prog, eager_stats
         )
+        if trace is not None:
+            trace.add_span(
+                "dispatch", t0, time.perf_counter(), calibration=True
+            )
         stats.n_count_passes += eager_stats.n_count_passes
         stats.n_dispatches += eager_stats.n_dispatches
         stats.n_retries += eager_stats.n_retries
+        stats.device_time_s += eager_stats.device_time_s
         stats.peak_capacity = max(
             stats.peak_capacity, eager_stats.peak_capacity
         )
@@ -1462,7 +1737,12 @@ class QueryEngine:
             stats.peak_join_bucket, eager_stats.peak_join_bucket
         )
         join_caps = self._caps_from_totals(totals)
-        self._compile_entry(shape, join_caps, canon_scans, prog, stats)
+        stats.join_totals = tuple(totals)
+        stats.join_worst = stats.join_totals
+        stats.join_caps = join_caps
+        self._compile_entry(
+            shape, join_caps, canon_scans, prog, stats, trace=trace
+        )
         return rel
 
     def _compiled_warm(
@@ -1474,11 +1754,13 @@ class QueryEngine:
         consts_f: jax.Array,
         num_vals: jax.Array,
         stats: ExecStats,
+        trace=None,
     ) -> Relation:
         stats.cache_hits += 1
         self.plan_cache.hits += 1
         return self._dispatch_entry(
-            shape, entry, canon_scans, consts_i, consts_f, num_vals, stats
+            shape, entry, canon_scans, consts_i, consts_f, num_vals,
+            stats, trace,
         )
 
     def _dispatch_entry(
@@ -1490,7 +1772,9 @@ class QueryEngine:
         consts_f: jax.Array,
         num_vals: jax.Array,
         stats: ExecStats,
+        trace=None,
     ) -> Relation:
+        ovf_counts = [0] * shape.n_joins()
         while True:
             stats.n_dispatches += 1
             t0 = time.perf_counter()
@@ -1505,11 +1789,21 @@ class QueryEngine:
                 stats.peak_join_bucket, max(caps) if caps else 0
             )
             flags_np = np.asarray(flags)  # the single host sync
-            self.device_time_s += time.perf_counter() - t0
+            t1 = self._device_tick(stats, t0)
+            if trace is not None:
+                trace.add_span("dispatch", t0, t1)
             if not flags_np.any():
+                stats.join_totals = tuple(
+                    int(t) for t in np.asarray(totals)
+                )
+                stats.join_worst = stats.join_totals
+                stats.join_caps = tuple(caps)
+                stats.join_overflows = tuple(ovf_counts)
                 return rel
             # bucket overflow: grow from the exact totals, recompile, retry
             stats.n_retries += 1
+            for j, f in enumerate(flags_np):
+                ovf_counts[j] += int(bool(f))
             new_caps = plan_ir.grow_join_caps(
                 entry.join_caps,
                 [int(t) for t in np.asarray(totals)],
@@ -1520,7 +1814,7 @@ class QueryEngine:
                     f"join result exceeds {self.max_capacity}"
                 )
             entry = self._compile_entry(
-                shape, new_caps, canon_scans, None, stats
+                shape, new_caps, canon_scans, None, stats, trace=trace
             )
 
     def _compile_entry(
@@ -1530,7 +1824,9 @@ class QueryEngine:
         canon_scans: tuple[Relation, ...],
         prog: _Program | None,
         stats: ExecStats,
+        trace=None,
     ) -> PlanCacheEntry:
+        t_compile = time.perf_counter()
         plan = plan_ir.build_plan(shape, join_caps)
         # the consts are signature templates here — only shapes/dtypes
         # matter to AOT lowering, and they are determined by the PlanShape
@@ -1564,6 +1860,11 @@ class QueryEngine:
             # pay vmap compiles for widths the next regrow would discard
             self._precompile_batched(entry, canon_scans, stats)
         self.plan_cache.put(shape, entry)
+        if trace is not None:
+            trace.add_span(
+                "compile", t_compile, time.perf_counter(),
+                n_joins=len(join_caps),
+            )
         return entry
 
     def _precompile_batched(
@@ -1625,11 +1926,15 @@ class QueryEngine:
             self.plan_cache.compiles += 1
 
     # -- explain -----------------------------------------------------------
-    def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:
+    def _explain_program(
+        self, pq: PreparedQuery, prog: _Program, analyze: bool = False
+    ) -> str:
         """Human-readable plan report: the logical algebra, the optimizer's
         pass-by-pass rewrite trace, the physical scan/join structure with
         estimated rows and pow-2 buckets, and the plan-cache state for
-        this shape — all host-side (no device work)."""
+        this shape — all host-side (no device work). With `analyze`, the
+        last run's per-join actuals (captured from the exact totals every
+        dispatch returns) are appended beside the estimates."""
         est = self.store.estimate_cardinality
         lines = ["PreparedQuery", "logical algebra:"]
         lines.append(algebra.format_algebra(pq.query.algebra(), 1))
@@ -1751,7 +2056,98 @@ class QueryEngine:
                 else ""
             )
         )
+        if analyze:
+            lines.extend(self._analyze_lines(pq, prog, shape))
         return "\n".join(lines)
+
+    # -- EXPLAIN ANALYZE ---------------------------------------------------
+    def _join_slot_labels(
+        self, shape: plan_ir.PlanShape, st: ExecStats
+    ) -> list[str]:
+        """Physical operator label per join slot, in the evaluation
+        (totals) order — recovered from the plan tree by the same
+        traversal the lowering uses, so labels line up with actuals."""
+        n = len(st.join_totals)
+        caps = st.join_caps if len(st.join_caps) == n else (0,) * n
+        try:
+            plan = plan_ir.build_plan(shape, tuple(caps))
+            nodes = ex.join_slot_nodes(plan)
+        except Exception:
+            nodes = []
+        labels = []
+        for i in range(n):
+            if i < len(nodes):
+                node = nodes[i]
+                kind = {
+                    plan_ir.MRJoin: "mr_join",
+                    plan_ir.MatrixJoin: "matrix_join",
+                    plan_ir.CrossJoin: "cross_join",
+                }.get(type(node))
+                if kind is None and isinstance(node, plan_ir.LeftJoin):
+                    kind = f"left_join[{node.backend}]"
+                labels.append(kind or type(node).__name__.lower())
+            else:
+                labels.append("join")
+        return labels
+
+    def _analyze_slot_extra(self, st: ExecStats, i: int) -> str:
+        """Per-slot suffix hook (the sharded engine adds worst-shard and
+        shuffle pressure here)."""
+        return ""
+
+    def _analyze_tail(self, st: ExecStats) -> list[str]:
+        """Run-summary hook after the per-slot lines."""
+        return []
+
+    def _analyze_lines(
+        self, pq: PreparedQuery, prog: _Program, shape: plan_ir.PlanShape
+    ) -> list[str]:
+        st = pq.last_stats
+        lines = ["EXPLAIN ANALYZE (last run):"]
+        if st is None:
+            lines.append("  no recorded run — execute the query first")
+            return lines
+        ests = prog.plan.join_ests
+        if st.join_totals:
+            labels = self._join_slot_labels(shape, st)
+            for i, actual in enumerate(st.join_totals):
+                est_v = int(ests[i]) if i < len(ests) else 0
+                parts = [
+                    f"  join[{i}] {labels[i]}",
+                    f"est_rows={est_v}",
+                    f"actual_rows={actual}",
+                    f"q_error={optimizer.q_error(est_v, actual):.2f}",
+                ]
+                if i < len(st.join_caps):
+                    cap = st.join_caps[i]
+                    worst = (
+                        st.join_worst[i]
+                        if i < len(st.join_worst) else actual
+                    )
+                    parts.append(f"cap={cap}")
+                    parts.append(
+                        f"fill={worst / cap:.0%}" if cap else "fill=-"
+                    )
+                if i < len(st.join_overflows) and st.join_overflows[i]:
+                    parts.append(f"overflows={st.join_overflows[i]}")
+                lines.append(" ".join(parts) + self._analyze_slot_extra(st, i))
+        elif st.n_joins:
+            lines.append(
+                "  actuals not captured for the last run "
+                "(pre-observability execution path)"
+            )
+        else:
+            lines.append("  no join nodes in this plan")
+        lines.extend(self._analyze_tail(st))
+        rows = st.rows_emitted if st.rows_emitted >= 0 else "-"
+        lines.append(
+            f"  run: {st.n_dispatches} dispatch(es), "
+            f"{st.n_compiles} compile(s), {st.n_retries} retried, "
+            f"batch_width={st.batch_width}, "
+            f"device_time={st.device_time_s * 1e3:.2f}ms, "
+            f"rows_emitted={rows}, store_version={st.store_version}"
+        )
+        return lines
 
 
 @dataclasses.dataclass
@@ -1906,6 +2302,7 @@ class ShardedQueryEngine(QueryEngine):
         canon_scans: tuple[Relation, ...],
         prog: _Program,
         stats: ExecStats,
+        trace=None,
     ) -> Relation:
         """Cache miss: calibrate GLOBAL join totals with the eager
         evaluator (the flat scan buffer is a valid single-device relation,
@@ -1918,22 +2315,29 @@ class ShardedQueryEngine(QueryEngine):
         warm_caps = self._warm_caps.get(shape)
         if warm_caps is not None and len(warm_caps) == shape.n_joins():
             entry = self._compile_entry(
-                shape, warm_caps, canon_scans, prog, stats
+                shape, warm_caps, canon_scans, prog, stats, trace=trace
             )
         else:
             eager_stats = ExecStats()
+            t0 = time.perf_counter()
             _, totals = self._eval_shape_eager(
                 shape, canon_scans, prog, eager_stats
             )
+            if trace is not None:
+                trace.add_span(
+                    "dispatch", t0, time.perf_counter(), calibration=True
+                )
             stats.n_count_passes += eager_stats.n_count_passes
             stats.n_dispatches += eager_stats.n_dispatches
             stats.n_retries += eager_stats.n_retries
+            stats.device_time_s += eager_stats.device_time_s
             entry = self._compile_entry(
                 shape, self._caps_from_totals(totals), canon_scans, prog,
-                stats,
+                stats, trace=trace,
             )
         return self._dispatch_entry(
-            shape, entry, canon_scans, *self._device_consts(prog), stats
+            shape, entry, canon_scans, *self._device_consts(prog), stats,
+            trace,
         )
 
     def _compile_entry(
@@ -1943,10 +2347,12 @@ class ShardedQueryEngine(QueryEngine):
         canon_scans: tuple[Relation, ...],
         prog: "_Program | None",
         stats: ExecStats,
+        trace=None,
         shuffle_caps: "tuple[int, ...] | None" = None,
     ) -> PlanCacheEntry:
         from repro.core import dist_executor as dx
 
+        t_compile = time.perf_counter()
         plan = plan_ir.build_plan(shape, join_caps)
         # one shuffle slot per site per mesh-axis stage (stages of a
         # hierarchical shuffle size and regrow independently); warmup
@@ -1991,6 +2397,11 @@ class ShardedQueryEngine(QueryEngine):
             num_cap=int(self._num_vals().shape[-1]),
         )
         self.plan_cache.put(shape, entry)
+        if trace is not None:
+            trace.add_span(
+                "compile", t_compile, time.perf_counter(),
+                n_joins=len(join_caps), sharded=True,
+            )
         return entry
 
     def _dispatch_entry(
@@ -2002,7 +2413,9 @@ class ShardedQueryEngine(QueryEngine):
         consts_f: jax.Array,
         num_vals: jax.Array,
         stats: ExecStats,
+        trace=None,
     ) -> Relation:
+        ovf_counts = [0] * shape.n_joins()
         while True:
             stats.n_dispatches += 1
             self._count_shuffles(entry, stats)
@@ -2018,8 +2431,29 @@ class ShardedQueryEngine(QueryEngine):
             # the single host sync: join AND shuffle flags, all shards
             flags_np = np.asarray(res.overflows)
             sh_flags_np = np.asarray(res.shuffle_flags)
-            self.device_time_s += time.perf_counter() - t0
+            t1 = self._device_tick(stats, t0)
+            if trace is not None:
+                trace.add_span(
+                    "dispatch", t0, t1, n_shards=self.n_shards
+                )
             if not flags_np.any() and not sh_flags_np.any():
+                # totals are (n_shards, n_joins): the analyze view wants
+                # the global rows AND the worst shard (fill pressure is a
+                # per-shard property under hash skew)
+                totals_np = np.asarray(res.totals)
+                needs_np = np.asarray(res.shuffle_needs)
+                stats.join_totals = tuple(
+                    int(x) for x in totals_np.sum(axis=0)
+                )
+                stats.join_worst = tuple(
+                    int(x) for x in totals_np.max(axis=0)
+                )
+                stats.join_caps = tuple(caps)
+                stats.join_overflows = tuple(ovf_counts)
+                if needs_np.size:
+                    stats.shuffle_loads = tuple(
+                        int(x) for x in needs_np.max(axis=0)
+                    )
                 return res.relation
             # a bucket overflowed on some shard: grow the flagged ones
             # from the worst shard's exact numbers, recompile, retry
@@ -2028,6 +2462,8 @@ class ShardedQueryEngine(QueryEngine):
             needs_np = np.asarray(res.shuffle_needs)
             n_j = flags_np.shape[1]
             n_s = sh_flags_np.shape[1]  # (site x mesh-axis stage) slots
+            for j in range(n_j):
+                ovf_counts[j] += int(bool(flags_np[:, j].any()))
             new_caps = plan_ir.grow_join_caps(
                 entry.join_caps,
                 [int(totals_np[:, j].max()) for j in range(n_j)],
@@ -2043,7 +2479,7 @@ class ShardedQueryEngine(QueryEngine):
                     f"join result exceeds {self.max_capacity}"
                 )
             entry = self._compile_entry(
-                shape, new_caps, canon_scans, None, stats,
+                shape, new_caps, canon_scans, None, stats, trace=trace,
                 shuffle_caps=new_shuffle,
             )
 
@@ -2067,6 +2503,7 @@ class ShardedQueryEngine(QueryEngine):
         out: list,
         group: BatchGroupStats,
         defer: bool = False,
+        traces: "list | None" = None,
     ) -> None:
         """ONE stacked mesh dispatch (lanes x shards) for a chunk of warm
         same-shape queries — the distributed mirror of the base engine's
@@ -2129,10 +2566,13 @@ class ShardedQueryEngine(QueryEngine):
             entry = self._compile_entry(
                 shape, entry.join_caps, template_scans, None, stats
             )
+        events: list[tuple[str, float, float]] = []
+        ovf_counts = [0] * shape.n_joins()
         try:
             while True:
                 bexec = entry.batched.get((width, scan_axes))
                 if bexec is None:
+                    tc0 = time.perf_counter()
                     bexec = dx.compile_sharded_plan_batched(
                         entry.compiled.plan,
                         self.mesh,
@@ -2146,6 +2586,7 @@ class ShardedQueryEngine(QueryEngine):
                         scan_axes,
                         use_kernel=self.use_kernel,
                     )
+                    events.append(("compile", tc0, time.perf_counter()))
                     entry.batched[(width, scan_axes)] = bexec
                     stats.n_compiles += 1
                     self.plan_cache.compiles += 1
@@ -2157,7 +2598,9 @@ class ShardedQueryEngine(QueryEngine):
                 # (lane, shard) pair
                 flags_np = np.asarray(res.overflows)
                 sh_flags_np = np.asarray(res.shuffle_flags)
-                self.device_time_s += time.perf_counter() - t0
+                events.append(
+                    ("dispatch", t0, self._device_tick(stats, t0))
+                )
                 if not flags_np.any() and not sh_flags_np.any():
                     break
                 # a bucket overflowed in some lane on some shard: grow the
@@ -2168,6 +2611,8 @@ class ShardedQueryEngine(QueryEngine):
                 needs_np = np.asarray(res.shuffle_needs)
                 n_j = flags_np.shape[-1]
                 n_s = sh_flags_np.shape[-1]
+                for j in range(n_j):
+                    ovf_counts[j] += int(bool(flags_np[..., j].any()))
                 new_caps = plan_ir.grow_join_caps(
                     entry.join_caps,
                     [int(totals_np[..., j].max()) for j in range(n_j)],
@@ -2199,9 +2644,25 @@ class ShardedQueryEngine(QueryEngine):
         caps = entry.compiled.plan.join_caps
         stats.peak_join_bucket = max(caps) if caps else 0
         stats.peak_capacity = entry.compiled.plan.max_capacity()
+        stats.join_caps = tuple(caps)
+        stats.join_overflows = tuple(ovf_counts)
+        needs_np = np.asarray(res.shuffle_needs)
+        if needs_np.size:
+            # (width, n_shards, n_slots) -> worst shard over every lane
+            stats.shuffle_loads = tuple(
+                int(x) for x in needs_np.max(axis=(0, 1))
+            )
         self._emit_chunk_results(
-            res.relation, chunk, ctxs, prepared, out, stats, defer
+            res.relation, chunk, ctxs, prepared, out, stats, defer,
+            lane_totals=self._chunk_lane_totals(res.totals),
+            traces=traces, events=events,
         )
+
+    def _chunk_lane_totals(self, totals_b) -> tuple[np.ndarray, np.ndarray]:
+        # batched sharded totals are (width, n_shards, n_joins): per-lane
+        # global rows sum over shards, fill pressure is the worst shard
+        t = np.asarray(totals_b)
+        return t.sum(axis=1), t.max(axis=1)
 
     # -- persistence -------------------------------------------------------
     def _entry_jsonable(self, e: PlanCacheEntry) -> dict:
@@ -2213,8 +2674,29 @@ class ShardedQueryEngine(QueryEngine):
         return d
 
     # -- explain -----------------------------------------------------------
-    def _explain_program(self, pq: PreparedQuery, prog: _Program) -> str:
-        lines = [super()._explain_program(pq, prog)]
+    def _analyze_slot_extra(self, st: ExecStats, i: int) -> str:
+        if i < len(st.join_worst):
+            return f" worst_shard_rows={st.join_worst[i]}"
+        return ""
+
+    def _analyze_tail(self, st: ExecStats) -> list[str]:
+        lines = []
+        if st.shuffle_loads:
+            lines.append(
+                "  shuffle slots worst-shard rows="
+                f"{list(st.shuffle_loads)}"
+            )
+        lines.append(
+            f"  data movement: {st.n_shuffles_emitted} shuffle(s) "
+            f"emitted, {st.n_shuffles_elided} elided, "
+            f"{st.n_broadcast_joins} broadcast join(s)"
+        )
+        return lines
+
+    def _explain_program(
+        self, pq: PreparedQuery, prog: _Program, analyze: bool = False
+    ) -> str:
+        lines = [super()._explain_program(pq, prog, analyze=analyze)]
         lines.append(
             f"sharded: {self.n_shards} shard(s), mesh axes "
             f"{list(self.axis_names)}, subject-hash partitioned scans"
@@ -2251,26 +2733,7 @@ class ShardedQueryEngine(QueryEngine):
         from repro.core import dist_executor as dx
 
         for i, st in enumerate(strategies):
-            if st.op == "cross_join":
-                move = "right side replicated (all_gather)"
-            elif st.op == "distinct":
-                move = (
-                    "shuffle by all columns (emitted)"
-                    if st.left == "shuffle"
-                    else "co-located already (shuffle elided)"
-                )
-            else:
-                sides = []
-                for name, action in (("left", st.left), ("right", st.right)):
-                    if action == "local":
-                        sides.append(f"{name} map-side (shuffle elided)")
-                    elif action == "shuffle":
-                        sides.append(f"{name} shuffle emitted")
-                    elif action == "broadcast":
-                        sides.append(f"{name} broadcast (all_gather)")
-                move = ", ".join(sides)
-                move += f" on key ({', '.join(st.key)})"
-            lines.append(f"  shuffle[{i}] {st.op}: {move}")
+            lines.append(f"  shuffle[{i}] {st.op}: {dx.format_strategy(st)}")
         cnt = dx.strategy_counts(strategies)
         lines.append(
             f"  shuffles: {cnt['emitted']} emitted, {cnt['elided']} "

@@ -48,6 +48,20 @@ from repro.sparql.store import StoreStatistics, TripleStore
 Stage = tuple
 
 
+def q_error(est: float, actual: float) -> float:
+    """The cardinality model's q-error for one join node: the symmetric
+    over/under-estimation factor max(est/actual, actual/est), the metric
+    EXPLAIN ANALYZE reports beside estimated-vs-actual rows. Defined as
+    1.0 when both sides are zero (a perfect empty estimate) and inf when
+    exactly one side is zero."""
+    e, a = max(0.0, float(est)), max(0.0, float(actual))
+    if e == 0.0 and a == 0.0:
+        return 1.0
+    if e == 0.0 or a == 0.0:
+        return math.inf
+    return max(e / a, a / e)
+
+
 @dataclasses.dataclass(frozen=True)
 class OptimizedProgram:
     """The optimizer's output: everything the engine lowers to a PlanShape.

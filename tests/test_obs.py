@@ -1,0 +1,312 @@
+"""Unit tests for the observability package: metrics instruments and the
+Prometheus exposition round-trip, span tracing (context-managed and
+retroactive), the tracer's ring/slow-log bounding, the Chrome trace-event
+export and its checked-in schema."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Trace,
+    Tracer,
+    log_buckets,
+    parse_prometheus,
+    phase_totals,
+    quantile_from_samples,
+    validate_chrome_events,
+)
+
+SCHEMA_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "docs", "trace_schema.json"
+)
+
+
+# ----------------------------------------------------------- metrics
+
+
+def test_counter_inc_and_labels():
+    c = Counter("t_total", "help", labelnames=("outcome",))
+    c.labels(outcome="ok").inc()
+    c.labels(outcome="ok").inc(2)
+    c.labels(outcome="err").inc()
+    assert c.labels(outcome="ok").value == 3
+    assert c.labels(outcome="err").value == 1
+    with pytest.raises(ValueError):
+        c.labels(wrong="x")
+    with pytest.raises(ValueError):
+        c.labels(outcome="ok").inc(-1)
+
+
+def test_counter_set_total_is_monotone():
+    c = Counter("t_total", "")
+    c.set_total(5)
+    c.set_total(3)  # never moves backwards
+    assert c.value == 5
+    c.set_total(9)
+    assert c.value == 9
+
+
+def test_gauge_set_inc_dec():
+    g = Gauge("t_gauge", "")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3
+
+
+def test_metric_name_validation():
+    with pytest.raises(ValueError):
+        Counter("bad name", "")
+    with pytest.raises(ValueError):
+        Counter("ok_total", "", labelnames=("bad-label",))
+
+
+def test_histogram_observe_render_and_quantile():
+    h = Histogram("t_seconds", "", buckets=(0.001, 0.01, 0.1, 1.0))
+    for v in (0.0005, 0.005, 0.005, 0.05, 2.0):
+        h.observe(v)
+    child = h._default_child()
+    assert child.count == 5
+    assert child.counts[-1] == 1  # the +Inf bucket
+    assert h.quantile(0.5) == 0.01  # bucket-resolution median
+    lines = h.render()
+    # cumulative buckets + sum + count
+    assert any(
+        line.startswith('t_seconds_bucket{le="+Inf"} 5') for line in lines
+    )
+    assert any(line.startswith("t_seconds_count 5") for line in lines)
+
+
+def test_histogram_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        Histogram("t_seconds", "", buckets=(0.1, 0.1))
+
+
+def test_log_buckets_geometric():
+    b = log_buckets(start=0.001, factor=2.0, count=4)
+    assert b == (0.001, 0.002, 0.004, 0.008)
+
+
+def test_registry_get_or_create_and_type_conflict():
+    m = MetricsRegistry()
+    c1 = m.counter("x_total", "h")
+    c2 = m.counter("x_total")
+    assert c1 is c2
+    with pytest.raises(ValueError):
+        m.gauge("x_total")
+    assert m.get("x_total") is c1
+    assert m.get("missing") is None
+
+
+def test_registry_collector_bridges_plain_attributes():
+    m = MetricsRegistry()
+    state = {"hits": 0}
+    c = m.counter("hits_total", "bridged")
+    m.register_collector(lambda: c.set_total(state["hits"]))
+    state["hits"] = 7
+    text = m.render_prometheus()
+    assert "hits_total 7" in text
+
+
+def test_render_prometheus_parses_round_trip():
+    m = MetricsRegistry()
+    m.counter("req_total", "requests", labelnames=("outcome",)).labels(
+        outcome="ok"
+    ).inc(3)
+    m.gauge("depth", "queue depth").set(2)
+    h = m.histogram("lat_seconds", "latency", buckets=(0.01, 0.1))
+    h.observe(0.005)
+    h.observe(0.5)
+    parsed = parse_prometheus(m.render_prometheus())
+    assert parsed["req_total"] == [({"outcome": "ok"}, 3.0)]
+    assert parsed["depth"] == [({}, 2.0)]
+    infs = [
+        v for labels, v in parsed["lat_seconds_bucket"]
+        if labels["le"] == "+Inf"
+    ]
+    assert infs == [2.0]
+
+
+def test_parse_prometheus_rejects_bad_grammar():
+    with pytest.raises(ValueError):
+        parse_prometheus("not a metric line at all!\n")
+    with pytest.raises(ValueError):
+        parse_prometheus('x_total{bad label="v"} 1\n')
+
+
+def test_parse_prometheus_rejects_non_monotone_histogram():
+    bad = (
+        'h_bucket{le="0.1"} 5\n'
+        'h_bucket{le="+Inf"} 3\n'
+        "h_count 3\n"
+    )
+    with pytest.raises(ValueError):
+        parse_prometheus(bad)
+
+
+def test_parse_prometheus_rejects_inf_count_disagreement():
+    bad = (
+        'h_bucket{le="0.1"} 1\n'
+        'h_bucket{le="+Inf"} 2\n'
+        "h_count 3\n"
+    )
+    with pytest.raises(ValueError):
+        parse_prometheus(bad)
+
+
+def test_quantile_from_samples():
+    assert quantile_from_samples([], 0.5) == 0.0
+    vs = list(range(1, 101))
+    assert quantile_from_samples(vs, 0.5) in (50, 51)
+    assert quantile_from_samples(vs, 0.99) in (99, 100)
+    assert quantile_from_samples(vs, 1.0) == 100
+
+
+def test_counter_thread_safety():
+    c = Counter("t_total", "")
+
+    def spin():
+        for _ in range(1000):
+            c.inc()
+
+    ts = [threading.Thread(target=spin) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == 8000
+
+
+# ------------------------------------------------------------- traces
+
+
+def test_span_context_manager_closes_and_records_errors():
+    tr = Trace("query")
+    with tr.span("parse"):
+        pass
+    with pytest.raises(RuntimeError):
+        with tr.span("optimize"):
+            raise RuntimeError("boom")
+    parse_span = tr.find("parse")[0]
+    opt_span = tr.find("optimize")[0]
+    assert not parse_span.open
+    assert not opt_span.open
+    assert opt_span.attrs["error"] == "RuntimeError"
+    # only the root remains open until finish()
+    assert tr.open_spans() == [tr.root]
+    tr.finish()
+    assert tr.open_spans() == []
+
+
+def test_add_span_is_born_closed():
+    tr = Trace("query")
+    t0 = time.perf_counter()
+    t1 = t0 + 0.25
+    s = tr.add_span("dispatch", t0, t1, dispatch_id=3, lane=1)
+    assert not s.open
+    assert abs(s.duration_s - 0.25) < 1e-6
+    assert s.attrs == {"dispatch_id": 3, "lane": 1}
+    assert s.parent_id == tr.root.span_id
+
+
+def test_span_nesting_parent_ids():
+    tr = Trace("query")
+    outer = tr.start("outer")
+    inner = tr.start("inner", parent=outer)
+    tr.end(inner)
+    tr.end(outer)
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id == tr.root.span_id
+    tree = tr.tree_str()
+    assert "outer" in tree and "inner" in tree
+
+
+def test_tracer_ring_is_bounded():
+    tc = Tracer(ring_size=4)
+    for i in range(10):
+        tr = tc.new_trace("query", i=i)
+        tc.finish(tr)
+    recent = tc.recent()
+    assert len(recent) == 4
+    assert [t.root.attrs["i"] for t in recent] == [6, 7, 8, 9]
+    assert tc.n_traces == 10
+
+
+def test_tracer_slow_log_threshold():
+    tc = Tracer(slow_ms=5.0, slow_log_size=2)
+    fast = tc.new_trace("query")
+    tc.finish(fast)
+    slow = tc.new_trace("query")
+    slow.root.t0 = -1.0  # 1s duration without sleeping
+    tc.finish(slow)
+    assert tc.slow_queries() == [slow]
+    assert tc.n_slow == 1
+
+
+def test_open_span_count_sees_leaks():
+    tc = Tracer()
+    tr = tc.new_trace("query")
+    tr.start("leaked")
+    tc.finish(tr)
+    assert tc.open_span_count() == 1
+
+
+def test_finish_attrs_land_on_root():
+    tc = Tracer()
+    tr = tc.new_trace("query")
+    tc.finish(tr, outcome="ok")
+    assert tr.root.attrs["outcome"] == "ok"
+
+
+def test_phase_totals_sums_closed_spans():
+    tr1 = Trace("query")
+    t = time.perf_counter()
+    tr1.add_span("dispatch", t, t + 0.1)
+    tr2 = Trace("query")
+    tr2.add_span("dispatch", t, t + 0.2)
+    tr2.add_span("decode", t, t + 0.05)
+    tr2.start("leaked")  # open: contributes nothing
+    totals = phase_totals([tr1, tr2])
+    assert abs(totals["dispatch"] - 0.3) < 1e-6
+    assert abs(totals["decode"] - 0.05) < 1e-6
+    assert "leaked" not in totals
+
+
+def test_chrome_export_matches_checked_in_schema():
+    with open(SCHEMA_PATH) as f:
+        schema = json.load(f)
+    tc = Tracer()
+    tr = tc.new_trace("query", query="SELECT ...")
+    with tr.span("parse"):
+        pass
+    t = time.perf_counter()
+    tr.add_span("dispatch", t, t + 0.01, dispatch_id=1, lane=0)
+    tc.finish(tr, outcome="ok")
+    events = tc.export_chrome()
+    assert len(events) == 3
+    assert validate_chrome_events(events, schema) == []
+    # and the export is genuinely JSON-serialisable
+    json.dumps(events)
+
+
+def test_schema_validator_flags_violations():
+    with open(SCHEMA_PATH) as f:
+        schema = json.load(f)
+    good = {
+        "name": "x", "cat": "query", "ph": "X", "ts": 1.0, "dur": 1.0,
+        "pid": 1, "tid": 1, "args": {"trace_id": 1, "span_id": 2},
+    }
+    assert validate_chrome_events([good], schema) == []
+    bad_ph = dict(good, ph="B")
+    assert validate_chrome_events([bad_ph], schema)
+    bad_dur = dict(good, dur=-1.0)
+    assert validate_chrome_events([bad_dur], schema)
+    missing = {k: v for k, v in good.items() if k != "args"}
+    assert validate_chrome_events([missing], schema)

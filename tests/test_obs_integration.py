@@ -1,0 +1,436 @@
+"""End-to-end observability: traces propagating through the engine, the
+micro-batcher, stacked dispatches and the decode pool (failure paths
+included), the device-time accounting identity, terminal-outcome
+single-counting, EXPLAIN ANALYZE actuals, and the Prometheus exposition
+of the serving counters."""
+import threading
+import time
+
+from repro.obs import Tracer, parse_prometheus
+from repro.serve.batcher import MicroBatcher, Request
+from repro.serve.decode import DecodePool
+from repro.sparql.engine import PendingDecode, QueryEngine
+from repro.sparql.store import store_from_string_triples
+
+from tests.test_serving_pipeline import QUERIES, pipeline_store
+
+
+def _server(store, tracer=None, **kw):
+    from repro.serve.sparql_server import SPARQLServer
+
+    kw.setdefault("max_batch", 8)
+    return SPARQLServer(QueryEngine(store, tracer=tracer), **kw)
+
+
+def _all_span_names(traces):
+    names = set()
+    for t in traces:
+        names.update(s.name for s in t.spans)
+    return names
+
+
+# ------------------------------------------------ device-time identity
+
+
+def test_device_time_equals_sum_over_exec_stats():
+    """Satellite: engine.device_time_s (the global device-busy ledger)
+    must equal the sum of per-run ExecStats.device_time_s over every run
+    — cold calibration, warm compiled, and stacked batched runs included
+    (per-lane shares partition each stacked dispatch's time)."""
+    store = pipeline_store()
+    eng = QueryEngine(store)
+    per_run = []
+    for text in QUERIES:
+        pq = eng.prepare(text)
+        pq.run()  # cold: calibration + compile
+        per_run.append(pq.last_stats.device_time_s)
+        pq.run()  # warm: single compiled dispatch
+        per_run.append(pq.last_stats.device_time_s)
+    # stacked batch: four copies of one shape coalesce into one dispatch
+    ps = [eng.prepare(QUERIES[0]) for _ in range(4)]
+    eng.run_batch(ps)
+    per_run.extend(p.last_stats.device_time_s for p in ps)
+    total = sum(per_run)
+    assert total > 0.0
+    assert abs(eng.device_time_s - total) <= 1e-6 * max(1.0, total), (
+        f"engine ledger {eng.device_time_s} != sum over runs {total}"
+    )
+
+
+def test_device_time_identity_eager_mode():
+    store = pipeline_store()
+    eng = QueryEngine(store, compiled=False)
+    per_run = []
+    for text in QUERIES:
+        pq = eng.prepare(text)
+        pq.run()
+        per_run.append(pq.last_stats.device_time_s)
+    total = sum(per_run)
+    assert total > 0.0
+    assert abs(eng.device_time_s - total) <= 1e-6 * max(1.0, total)
+
+
+# ------------------------------------------------- engine-level tracing
+
+
+def test_trace_covers_pipeline_phases_and_closes():
+    store = pipeline_store()
+    tracer = Tracer()
+    eng = QueryEngine(store, tracer=tracer)
+    tr = tracer.new_trace("query")
+    pq = eng.prepare(QUERIES[0], trace=tr)
+    pq.run(trace=tr)
+    tracer.finish(tr, outcome="ok")
+    names = {s.name for s in tr.spans}
+    for expected in ("query", "parse", "optimize", "compile", "dispatch",
+                     "transfer", "decode"):
+        assert expected in names, f"missing span {expected}: {names}"
+    assert tr.open_spans() == []
+    # the calibration dispatch is marked as such
+    disp = tr.find("dispatch")
+    assert any(s.attrs.get("calibration") for s in disp)
+
+
+def test_stacked_dispatch_fans_out_with_shared_dispatch_id():
+    """One stacked device launch must appear in every lane's trace as a
+    dispatch span sharing the dispatch_id, with distinct lane indices."""
+    store = pipeline_store()
+    tracer = Tracer()
+    eng = QueryEngine(store, tracer=tracer)
+    eng.prepare(QUERIES[0]).run()  # warm the shape
+    ps = [eng.prepare(QUERIES[0]) for _ in range(4)]
+    traces = [tracer.new_trace("query") for _ in ps]
+    outcomes = eng.run_batch_pipelined(ps, traces=traces)
+    for oc in outcomes:
+        if isinstance(oc, PendingDecode):
+            oc.resolve()
+        else:
+            assert not isinstance(oc, Exception), oc
+    for tr in traces:
+        tracer.finish(tr)
+    spans = [s for tr in traces for s in tr.find("dispatch")
+             if s.attrs.get("stacked")]
+    assert len(spans) == 4
+    assert len({s.attrs["dispatch_id"] for s in spans}) == 1
+    assert sorted(s.attrs["lane"] for s in spans) == [0, 1, 2, 3]
+    assert all(s.attrs["width"] == 4 for s in spans)
+    assert tracer.open_span_count() == 0
+
+
+# ------------------------------------------------- server-level tracing
+
+
+def test_server_traces_requests_and_ring_holds_them():
+    store = pipeline_store()
+    tracer = Tracer(slow_ms=0.0)
+    srv = _server(store, tracer=tracer)
+    try:
+        for text in QUERIES:
+            srv.query(text)
+        traces = srv.recent_traces()
+        assert len(traces) == len(QUERIES)
+        names = _all_span_names(traces)
+        for expected in ("query", "parse", "optimize", "dispatch",
+                         "transfer", "decode"):
+            assert expected in names
+        assert all(t.root.attrs["outcome"] == "ok" for t in traces)
+        assert tracer.open_span_count() == 0
+        assert len(srv.slow_queries()) == len(QUERIES)  # slow_ms=0
+    finally:
+        srv.close()
+
+
+def test_concurrent_serving_leaves_zero_open_spans():
+    """Acceptance: a 32-thread serving run (mixed shapes, parse failures
+    included) retires every trace with zero open spans."""
+    store = pipeline_store()
+    tracer = Tracer(ring_size=128)
+    srv = _server(store, tracer=tracer, max_wait_s=0.02, decode_workers=2)
+    try:
+        n = 32
+        errs = [None] * n
+
+        def hit(i):
+            try:
+                text = "BROKEN {" if i % 11 == 5 else QUERIES[i % 4]
+                srv.query(text)
+            except Exception as e:
+                errs[i] = e
+
+        ts = [threading.Thread(target=hit, args=(i,)) for i in range(n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        traces = srv.recent_traces()
+        assert len(traces) == n
+        assert tracer.open_span_count() == 0
+        outcomes = [t.root.attrs["outcome"] for t in traces]
+        assert outcomes.count("error") == sum(
+            1 for i in range(n) if i % 11 == 5
+        )
+    finally:
+        srv.close()
+
+
+# --------------------------------------------------- failure-path spans
+
+
+def test_decode_worker_crash_closes_spans():
+    store = pipeline_store()
+    tracer = Tracer()
+    srv = _server(store, tracer=tracer, decode_workers=1)
+    try:
+        srv.query(QUERIES[0])  # warm
+        real = srv.engine._decode_numpy
+        crashed = []
+
+        def sabotage(schema, rows):
+            if not crashed:
+                crashed.append(1)
+                raise RuntimeError("decode worker crash")
+            return real(schema, rows)
+
+        srv.engine._decode_numpy = sabotage
+        try:
+            try:
+                srv.query(QUERIES[0])
+            except Exception:
+                pass
+        finally:
+            srv.engine._decode_numpy = real
+        traces = srv.recent_traces()
+        assert "decode_error" in _all_span_names(traces)
+        assert tracer.open_span_count() == 0
+        crashed_trace = traces[-1]
+        assert crashed_trace.root.attrs["outcome"] == "error"
+    finally:
+        srv.close()
+
+
+def test_abandoned_request_skip_closes_spans():
+    """The decode pool's abandoned-skip path records its marker span on
+    the request's trace instead of leaving the trace path dangling."""
+    tracer = Tracer()
+    pool = DecodePool(n_workers=1, max_queue=8)
+    try:
+        tr = tracer.new_trace("query")
+        r = Request("x", trace=tr)
+        r.abandoned = True
+        ran = []
+        pool.submit(r, lambda: ran.append(1))
+        assert r.event.wait(5)
+        tracer.finish(tr, outcome="timeout")
+        assert not ran
+        skips = tr.find("decode_skipped")
+        assert len(skips) == 1 and skips[0].attrs["abandoned"]
+        assert tr.open_spans() == []
+    finally:
+        pool.close()
+
+
+def test_batch_error_fanout_closes_spans():
+    """A batch_fn explosion fans _exc_copy instances to every submitter;
+    each request's trace gets a closed batch_error span."""
+    tracer = Tracer()
+
+    def boom(payloads):
+        raise ValueError("batch exploded")
+
+    b = MicroBatcher(boom, max_batch=4, max_wait_s=0.05)
+    try:
+        traces = [tracer.new_trace("query") for _ in range(3)]
+        errs = []
+        lock = threading.Lock()
+
+        def hit(tr):
+            try:
+                b.submit("q", timeout=10, trace=tr)
+            except ValueError as e:
+                with lock:
+                    errs.append(e)
+            finally:
+                tracer.finish(tr, outcome="error")
+
+        ts = [threading.Thread(target=hit, args=(tr,)) for tr in traces]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert len(errs) == 3
+        for tr in traces:
+            spans = tr.find("batch_error")
+            assert len(spans) == 1
+            assert spans[0].attrs["error"] == "ValueError"
+            assert tr.open_spans() == []
+    finally:
+        b.close()
+
+
+# --------------------------------------- terminal-outcome single count
+
+
+def test_timeout_counted_exactly_once_even_if_decode_completes():
+    """Satellite regression: a request that times out and whose decode
+    work later finishes must count once, as a timeout — never also under
+    ok. Every request lands under exactly one outcome."""
+    from repro.serve.sparql_server import QueryTimeoutError
+
+    store = pipeline_store()
+    srv = _server(store, decode_workers=1)
+    try:
+        srv.query(QUERIES[0])  # warm (ok #1)
+        real = srv.engine._decode_numpy
+        slow = []
+
+        def sluggish(schema, rows):
+            if not slow:
+                slow.append(1)
+                time.sleep(0.4)  # decode outlives the submitter deadline
+            return real(schema, rows)
+
+        srv.engine._decode_numpy = sluggish
+        try:
+            try:
+                srv.query(QUERIES[0], timeout_ms=50)
+                raise AssertionError("expected QueryTimeoutError")
+            except QueryTimeoutError:
+                pass
+            time.sleep(0.6)  # let the sluggish decode actually complete
+        finally:
+            srv.engine._decode_numpy = real
+        srv.query(QUERIES[0])  # ok #2, after the timeout resolved late
+        counts = {
+            o: srv.engine.metrics.get("mapsq_requests_total")
+            .labels(outcome=o).value
+            for o in ("ok", "timeout", "error")
+        }
+        assert counts == {"ok": 2.0, "timeout": 1.0, "error": 0.0}
+        st = srv.stats()
+        assert st["timeouts"] == 1
+    finally:
+        srv.close()
+
+
+# -------------------------------------------------- EXPLAIN ANALYZE
+
+
+def test_explain_analyze_shows_estimates_and_actuals():
+    store = pipeline_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(QUERIES[0])
+    pq.run()
+    text = pq.explain(analyze=True)
+    assert "EXPLAIN ANALYZE (last run):" in text
+    assert "est_rows=" in text and "actual_rows=" in text
+    assert "q_error=" in text and "fill=" in text
+    assert "mr_join" in text or "matrix_join" in text
+    assert "rows_emitted=" in text
+    # actuals match the decoded result
+    rows = len(pq.run().rows)
+    assert f"rows_emitted={rows}" in pq.explain(analyze=True)
+
+
+def test_explain_analyze_runs_query_when_never_run():
+    store = pipeline_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(QUERIES[0])
+    assert pq.last_stats is None
+    text = pq.explain(analyze=True)
+    assert pq.last_stats is not None
+    assert "actual_rows=" in text
+
+
+def test_explain_without_analyze_unchanged():
+    store = pipeline_store()
+    eng = QueryEngine(store)
+    out = eng.explain(QUERIES[0])
+    assert "EXPLAIN ANALYZE" not in out
+
+
+def test_exec_stats_carry_join_actuals():
+    store = pipeline_store()
+    eng = QueryEngine(store)
+    pq = eng.prepare(QUERIES[0])
+    rs = pq.run()
+    st = pq.last_stats
+    assert len(st.join_totals) == 1
+    assert st.join_totals[0] > 0
+    assert st.rows_emitted == len(rs.rows)
+    assert len(st.join_caps) == len(st.join_totals)
+    assert all(w <= c for w, c in zip(st.join_worst, st.join_caps))
+
+
+# -------------------------------------------------- metrics exposition
+
+
+def test_prometheus_exposes_serving_counters():
+    store = pipeline_store()
+    tracer = Tracer()
+    srv = _server(store, tracer=tracer)
+    try:
+        for text in QUERIES:
+            srv.query(text)
+        parsed = parse_prometheus(srv.render_prometheus())
+        for name in (
+            "mapsq_requests_total",
+            "mapsq_request_latency_seconds_bucket",
+            "mapsq_prepared_cache_hits_total",
+            "mapsq_plan_cache_hits_total",
+            "mapsq_scan_cache_hits_total",
+            "mapsq_stacked_dispatches_total",
+            "mapsq_padding_padded_cells_total",
+            "mapsq_deferred_total",
+            "mapsq_decode_decoded_total",
+            "mapsq_device_time_seconds_total",
+            "mapsq_store_version",
+            "mapsq_traces_total",
+        ):
+            assert name in parsed, f"exposition missing {name}"
+        ok = [v for labels, v in parsed["mapsq_requests_total"]
+              if labels["outcome"] == "ok"]
+        assert ok == [float(len(QUERIES))]
+    finally:
+        srv.close()
+
+
+def test_stats_shape_is_backward_compatible():
+    store = pipeline_store()
+    srv = _server(store)
+    try:
+        srv.query(QUERIES[0])
+        st = srv.stats()
+        assert set(st) == {
+            "batches", "requests", "timeouts", "plan_cache", "scan_cache",
+            "store", "updates", "prepared_cache", "batched", "pipeline",
+        }
+        assert set(st["updates"]) == {
+            "requests", "rows_inserted", "rows_deleted"
+        }
+        assert set(st["prepared_cache"]) == {
+            "entries", "hits", "misses", "hit_rate"
+        }
+        assert set(st["batched"]["padding"]) == {
+            "padded_groups", "pad_rejects", "padded_cells", "real_cells",
+            "waste_ratio",
+        }
+        assert set(st["pipeline"]) == {
+            "deferred", "dispatch_s", "device_time_s", "decode"
+        }
+        srv.update("INSERT DATA { <s0> <p0> <m9> . }")
+        assert srv.stats()["updates"]["requests"] == 1
+    finally:
+        srv.close()
+
+
+def test_tracing_off_engine_has_no_tracer_overhead_paths():
+    """With no Tracer attached the server must not create traces and the
+    ring accessors stay empty."""
+    store = pipeline_store()
+    srv = _server(store)
+    try:
+        srv.query(QUERIES[0])
+        assert srv.recent_traces() == []
+        assert srv.slow_queries() == []
+    finally:
+        srv.close()

@@ -197,6 +197,25 @@ def test_explain_shows_shard_buckets(engines):
     assert "shuffle buckets=" in out
 
 
+def test_explain_analyze_reports_backends_and_shuffles(engines):
+    """Sharded EXPLAIN ANALYZE: per-join estimated vs actual rows plus
+    the distributed decisions — worst-shard rows per join slot and the
+    per-site shuffle strategy (emitted/elided/broadcast)."""
+    _, _, sharded = engines
+    pq = sharded.prepare(lubm.QUERIES["Q2"])
+    pq.run()
+    out = pq.explain(analyze=True)
+    assert "EXPLAIN ANALYZE (last run):" in out
+    assert "est_rows=" in out and "actual_rows=" in out
+    assert "worst_shard_rows=" in out
+    assert "mr_join" in out or "matrix_join" in out
+    assert "data movement:" in out
+    # actuals line up with the decoded result and the estimator slots
+    st = pq.last_stats
+    assert len(st.join_totals) >= 1
+    assert all(t >= 0 for t in st.join_totals)
+
+
 def test_run_batch_stacks_same_shape_queries(engines):
     """Warm same-shape queries ride ONE stacked mesh dispatch (lanes x
     shards) — the sharded engine no longer falls back to sequential."""
